@@ -1,0 +1,15 @@
+"""Paper Fig.1: C_eff vs offered load for the six configurations."""
+from benchmarks.common import CONFIGS, emit, records_rows, sweep_config
+
+
+def run(quick: bool = False):
+    rows = []
+    for bc in CONFIGS:
+        recs = sweep_config(bc, n_scale=0.4 if quick else 1.0)
+        rows += records_rows(recs)
+    emit("fig1_cost_curves", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,36 @@
+"""Paper Fig.2 / §5.3: quantization impact on peak throughput per
+architecture — the MoE-first pattern (+ the active-params-beat-total
+ordering of §5.2/Result 3)."""
+from benchmarks.common import BenchConfig, emit, sweep_config
+
+
+def run(quick: bool = False):
+    rows = []
+    sat = {}
+    for arch, chips in (("llama31-8b", 1), ("qwen3-30b-a3b", 1),
+                        ("mixtral-8x7b", 2)):
+        for quant in ("bf16", "int8"):
+            bc = BenchConfig(f"{arch}-{quant}", arch, quant, chips)
+            recs = sweep_config(bc, ladder=(25, 50, 100, 200),
+                                n_scale=0.3 if quick else 1.0)
+            best = max(recs, key=lambda r: r.tps)
+            sat[(arch, quant)] = (best.tps, best.c_eff)
+    for arch, chips in (("llama31-8b", 1), ("qwen3-30b-a3b", 1),
+                        ("mixtral-8x7b", 2)):
+        t0, c0 = sat[(arch, "bf16")]
+        t1, c1 = sat[(arch, "int8")]
+        rows.append({"arch": arch, "n_chips": chips,
+                     "tps_bf16": t0, "tps_int8": t1,
+                     "gain_pct": 100.0 * (t1 / t0 - 1.0),
+                     "c_sat_bf16": c0, "c_sat_int8": c1})
+    emit("fig2_quant_gains", rows)
+    # §5.2 Result-3 check: active params beat total at saturation
+    q = sat[("qwen3-30b-a3b", "int8")][1]
+    l = sat[("llama31-8b", "int8")][1]
+    print(f"# active-params ordering: qwen3-int8 ${q:.3f}/MTok "
+          f"{'<' if q < l else '>='} llama8b-int8 ${l:.3f}/MTok")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,19 @@
+"""Paper Fig.3: underutilization penalty by configuration x offered load."""
+from benchmarks.common import CONFIGS, emit, sweep_config
+
+
+def run(quick: bool = False):
+    rows = []
+    for bc in CONFIGS:
+        recs = sweep_config(bc, n_scale=0.3 if quick else 1.0)
+        row = {"config": bc.cid, "arch": bc.arch, "quant": bc.quant}
+        for r in recs:
+            row[f"penalty_lam{int(r.lam)}"] = r.penalty
+        row["max_penalty"] = max(r.penalty for r in recs)
+        rows.append(row)
+    emit("fig3_penalty_heatmap", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

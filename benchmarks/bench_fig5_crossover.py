@@ -1,0 +1,33 @@
+"""Paper Fig.5 / §5.6: corrected self-host-vs-API crossover thresholds,
+including the asymmetric-pricing blended comparison of §6.3."""
+from repro.core import crossover_table
+from repro.core.pricing import API_TIERS
+
+from benchmarks.common import CONFIGS, emit, sweep_config
+
+
+def run(quick: bool = False):
+    rows = []
+    for bc in CONFIGS:
+        recs = sweep_config(bc, n_scale=0.4 if quick else 1.0)
+        xt = crossover_table(recs, accept_slo_mismatch=True)
+        for entry in xt:
+            rows.append(dict(config=bc.cid, arch=bc.arch, quant=bc.quant,
+                             **entry))
+    emit("fig5_crossover", rows)
+
+    # §6.3 asymmetric pricing: blended API cost for three workload shapes
+    brows = []
+    for name, tier in API_TIERS.items():
+        for shape, (i, o) in (("chat", (512, 256)), ("rag", (4096, 1024)),
+                              ("codegen", (100, 500))):
+            brows.append({"tier": name, "shape": shape,
+                          "in_tokens": i, "out_tokens": o,
+                          "blended_per_m_out": tier.blended(i, o),
+                          "list_out": tier.output_per_mtok})
+    emit("fig5b_blended_api", brows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

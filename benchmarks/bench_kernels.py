@@ -1,0 +1,65 @@
+"""Kernel micro-benchmarks: wall time of the jnp reference paths on this
+host (the Pallas kernels execute in interpret mode on CPU, so wall-clock
+kernel timing is TPU-only; the REFERENCE path is what the CPU real-exec
+serving tier actually runs, making its throughput worth tracking)."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.paged_attention.ref import paged_attention_ref
+from repro.kernels.ssm_scan.ref import ssm_scan_ref
+
+from benchmarks.common import emit
+
+RNG = np.random.default_rng(0)
+
+
+def _timeit(fn, *args, reps=5):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run(quick: bool = False):
+    rows = []
+    B, S, Hq, Hkv, D = 2, 512, 8, 2, 64
+    q = jnp.asarray(RNG.normal(size=(B, S, Hq, D)), jnp.bfloat16)
+    k = jnp.asarray(RNG.normal(size=(B, S, Hkv, D)), jnp.bfloat16)
+    v = jnp.asarray(RNG.normal(size=(B, S, Hkv, D)), jnp.bfloat16)
+    fa = jax.jit(lambda q, k, v: flash_attention_ref(q, k, v))
+    rows.append({"kernel": "flash_attention_ref", "shape": f"B{B}S{S}H{Hq}",
+                 "us_per_call": _timeit(fa, q, k, v)})
+
+    P_, page, maxp = 256, 16, 16
+    qd = jnp.asarray(RNG.normal(size=(8, Hq, D)), jnp.bfloat16)
+    kp = jnp.asarray(RNG.normal(size=(P_, page, Hkv, D)), jnp.bfloat16)
+    vp = jnp.asarray(RNG.normal(size=(P_, page, Hkv, D)), jnp.bfloat16)
+    bt = jnp.asarray(RNG.choice(P_, size=(8, maxp)), jnp.int32)
+    sl = jnp.full((8,), page * maxp, jnp.int32)
+    pa = jax.jit(paged_attention_ref)
+    rows.append({"kernel": "paged_attention_ref", "shape": "B8ctx256",
+                 "us_per_call": _timeit(pa, qd, kp, vp, bt, sl)})
+
+    Bs, Ss, di, N = 2, 256, 512, 16
+    u = jnp.asarray(RNG.normal(size=(Bs, Ss, di)), jnp.float32)
+    dt = jnp.asarray(RNG.uniform(0.001, 0.1, (Bs, Ss, di)), jnp.float32)
+    Bm = jnp.asarray(RNG.normal(size=(Bs, Ss, N)), jnp.float32)
+    Cm = jnp.asarray(RNG.normal(size=(Bs, Ss, N)), jnp.float32)
+    A = -jnp.asarray(RNG.uniform(0.5, 2.0, (di, N)), jnp.float32)
+    Dv = jnp.asarray(RNG.normal(size=(di,)), jnp.float32)
+    ss = jax.jit(lambda *a: ssm_scan_ref(*a)[0])
+    rows.append({"kernel": "ssm_scan_ref", "shape": f"B{Bs}S{Ss}d{di}",
+                 "us_per_call": _timeit(ss, u, dt, Bm, Cm, A, Dv)})
+    emit("kernel_micro", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,56 @@
+"""Paper §5.7 sensitivity probes: I/O shape (Fig.7), arrival burstiness
+(Gamma CV=2), and variable-length arrivals — run on C2/C4 analogues."""
+from benchmarks.common import CONFIGS, emit, sweep_config
+
+
+def run(quick: bool = False):
+    c2, c4 = CONFIGS[1], CONFIGS[3]
+    ns = 0.3 if quick else 1.0
+
+    # --- I/O shape (chat 512:256, RAG 4096:1024, agentic 1024:4096) -----
+    rows = []
+    base = {}
+    for bc in (c2, c4):
+        for shape in ("chat", "rag", "agentic"):
+            recs = sweep_config(bc, ladder=(1, 25, 100), io_shape=shape,
+                                n_scale=ns)
+            for r in recs:
+                key = (bc.cid, r.lam)
+                if shape == "chat":
+                    base[key] = r.c_eff
+                rows.append({
+                    "config": bc.cid, "io_shape": shape, "lam": r.lam,
+                    "tps": r.tps, "c_eff": r.c_eff,
+                    "vs_chat": r.c_eff / base[key] if key in base
+                    else float("nan")})
+    emit("sens_io_shape", rows)
+
+    # --- burstiness: Poisson (CV=1) vs Gamma CV=2 on C4 ------------------
+    rows = []
+    for lam in (10, 50, 100):
+        pois = sweep_config(c4, ladder=(lam,), process="poisson",
+                            n_scale=ns)[0]
+        gam = sweep_config(c4, ladder=(lam,), process="gamma", cv=2.0,
+                           n_scale=ns)[0]
+        rows.append({"lam": lam, "c_eff_poisson": pois.c_eff,
+                     "c_eff_gamma_cv2": gam.c_eff,
+                     "ratio": gam.c_eff / pois.c_eff})
+    emit("sens_burstiness", rows)
+
+    # --- variable-length (log-normal) vs fixed 512:256 -------------------
+    rows = []
+    for bc in (c2, c4):
+        fixed = sweep_config(bc, ladder=(1, 10, 50, 100), n_scale=ns)
+        varl = sweep_config(bc, ladder=(1, 10, 50, 100),
+                            io_shape="variable", n_scale=ns)
+        spread_f = max(r.c_eff for r in fixed) / min(r.c_eff for r in fixed)
+        spread_v = max(r.c_eff for r in varl) / min(r.c_eff for r in varl)
+        rows.append({"config": bc.cid, "spread_fixed": spread_f,
+                     "spread_variable": spread_v,
+                     "cliff_steeper_under_varlen": spread_v > spread_f})
+    emit("sens_varlen", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,19 @@
+"""Paper Table 3: underutilization penalty + latency tails for the dense
+reference configuration (C1)."""
+from benchmarks.common import CONFIGS, emit, sweep_config
+
+
+def run(quick: bool = False):
+    recs = sweep_config(CONFIGS[0], n_scale=0.4 if quick else 1.0)
+    rows = [{
+        "lam": r.lam,
+        "ttft_p50_ms": r.ttft_p50_ms, "ttft_p99_ms": r.ttft_p99_ms,
+        "tpot_p99_ms": r.tpot_p99_ms,
+        "c_eff": r.c_eff, "penalty": r.penalty,
+    } for r in recs]
+    emit("table3_penalty", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,27 @@
+"""Paper Table 4 / Fig.4: cost of honoring a fixed SLA
+(TTFT p99 <= 300 ms, TPOT p99 <= 50 ms) vs the unconstrained floor."""
+from repro.core import slo_operating_point
+
+from benchmarks.common import CONFIGS, emit, sweep_config
+
+
+def run(quick: bool = False, ttft_ms: float = 300.0, tpot_ms: float = 50.0):
+    rows = []
+    for bc in CONFIGS:
+        recs = sweep_config(bc, n_scale=0.4 if quick else 1.0)
+        res = slo_operating_point(recs, ttft_p99_ms=ttft_ms,
+                                  tpot_p99_ms=tpot_ms)
+        rows.append({
+            "config": bc.cid, "arch": bc.arch, "quant": bc.quant,
+            "sla_lam_max": res.lam_max if res.lam_max is not None else "none",
+            "c_at_sla": res.c_at_sla, "c_sat": res.c_sat,
+            "sat_lam": res.sat_lam,
+            "sat_ttft_p99_ms": res.sat_ttft_p99_ms,
+            "premium": res.premium, "sat_sla_feasible": res.sat_feasible,
+        })
+    emit("table4_sla", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,31 @@
+"""Paper Table 5 / §5.8: repeat-run measurement stability (CV%) on C2."""
+from repro.core import stability_table
+from repro.core.sweep import run_point
+from repro.serving import ArrivalSpec
+
+from benchmarks.common import CONFIGS, emit, engine_factory
+from repro.simulate import HW_BY_NAME
+
+
+def run(quick: bool = False, n_repeats: int = 3):
+    bc = CONFIGS[1]      # C2
+    hw = HW_BY_NAME["tpu-v5p"]
+    runs = {}
+    for lam in (1, 10, 50, 100):
+        rs = []
+        for seed in range(n_repeats):
+            n = int(min(1200, max(150, 25 * lam)) * (0.3 if quick else 1.0))
+            spec = ArrivalSpec(lam=lam, n_requests=n, seed=seed * 131 + 7)
+            rs.append(run_point(
+                engine_factory(bc), spec, config=bc.cid, model=bc.arch,
+                hw=hw.name, n_chips=bc.n_chips, quant=bc.quant,
+                engine_kind="sim",
+                price_per_hr=hw.price_per_chip_hr * bc.n_chips))
+        runs[lam] = rs
+    rows = stability_table(runs)
+    emit("table5_stability", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

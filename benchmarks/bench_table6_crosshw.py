@@ -1,0 +1,56 @@
+"""Paper Table 6 / §5.9: cross-hardware validation — the load-driven
+spread must reproduce on the cheap/slow part (v5e as the A100 analogue)
+with compressed magnitude; the quantization advantage is hardware-
+conditional (fp8 emulated on v5e inverts for the compute-bound dense
+model); Result 4's TP=2 vs TP=4 inversion on Mixtral."""
+from benchmarks.common import BenchConfig, emit, sweep_config
+
+
+def run(quick: bool = False):
+    ns = 0.3 if quick else 1.0
+    rows = []
+    pairs = [
+        ("llama31-8b", "bf16", 1), ("llama31-8b", "int8", 1),
+        ("llama31-8b", "fp8", 1),
+        ("qwen3-30b-a3b", "bf16", 1), ("qwen3-30b-a3b", "fp8", 1),
+        ("mixtral-8x7b", "bf16", 2),
+    ]
+    spreads = {}
+    for arch, quant, chips in pairs:
+        for hw in ("tpu-v5p", "tpu-v5e"):
+            bc = BenchConfig(f"{arch[:10]}-{quant}", arch, quant, chips)
+            recs = sweep_config(bc, hw_name=hw, n_scale=ns)
+            cmin = min(r.c_eff for r in recs)
+            spread = max(r.c_eff for r in recs) / cmin
+            spreads[(arch, quant, hw)] = (cmin, spread)
+            rows.append({"arch": arch, "quant": quant, "n_chips": chips,
+                         "hw": hw, "c_min": cmin, "spread": spread})
+    emit("table6_crosshw", rows)
+
+    # fp8 hardware-conditionality: on v5e (emulated fp8) the dense model's
+    # saturation cost should NOT improve the way the MoE's does.
+    d_v5e = spreads[("llama31-8b", "fp8", "tpu-v5e")][0] / \
+        spreads[("llama31-8b", "bf16", "tpu-v5e")][0]
+    m_v5e = spreads[("qwen3-30b-a3b", "fp8", "tpu-v5e")][0] / \
+        spreads[("qwen3-30b-a3b", "bf16", "tpu-v5e")][0]
+    print(f"# fp8-emulated c_min ratio on v5e: dense {d_v5e:.3f} vs "
+          f"moe {m_v5e:.3f} (moe should benefit more)")
+
+    # Result 4: Mixtral TP=2 vs TP=4 on the cheap part
+    rows4 = []
+    for tp in (2, 4):
+        bc = BenchConfig(f"mixtral-tp{tp}", "mixtral-8x7b", "bf16", tp)
+        recs = sweep_config(bc, hw_name="tpu-v5e", ladder=(25, 50, 100, 200),
+                            n_scale=ns)
+        best = max(recs, key=lambda r: r.tps)
+        rows4.append({"tp": tp, "peak_tps": best.tps,
+                      "c_sat": min(r.c_eff for r in recs)})
+    emit("table6b_tp_inversion", rows4)
+    if rows4[1]["c_sat"] > rows4[0]["c_sat"]:
+        print("# TP inversion reproduced: TP=4 costs more per token "
+              "despite higher peak throughput")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

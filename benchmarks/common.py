@@ -1,0 +1,108 @@
+"""Shared benchmark scaffolding.
+
+The paper's six H100 configurations map to the TPU hardware book
+(DESIGN §3): v5p-class plays the premium part (H100 analogue), v5e the
+cheap/slow part (A100 analogue). The Q axis uses int8 (TPU-native, the
+role FP8 plays on H100) with fp8-emulated available for the
+hardware-conditional probe.
+
+    C1 llama31-8b   bf16  1 chip     C2 llama31-8b   int8  1 chip
+    C3 qwen3-30b    bf16  1 chip     C4 qwen3-30b    int8  1 chip
+    C5 mixtral-8x7b bf16  TP=2       C6 mixtral-8x7b int8  TP=2
+"""
+from __future__ import annotations
+
+import dataclasses
+from pathlib import Path
+from typing import Callable, Dict, List, Optional, Sequence
+
+from repro.configs import get_config
+from repro.core import lambda_sweep
+from repro.core.records import RunRecord, write_csv
+from repro.serving import Engine, EngineConfig, SimExecutor
+from repro.simulate import HW_BY_NAME, StepTimeModel
+
+RESULTS = Path(__file__).resolve().parent.parent / "results" / "bench"
+
+LADDER = (1, 5, 10, 25, 50, 100, 200)
+
+
+@dataclasses.dataclass(frozen=True)
+class BenchConfig:
+    cid: str
+    arch: str
+    quant: str
+    n_chips: int
+
+
+CONFIGS = (
+    BenchConfig("C1", "llama31-8b", "bf16", 1),
+    BenchConfig("C2", "llama31-8b", "int8", 1),
+    BenchConfig("C3", "qwen3-30b-a3b", "bf16", 1),
+    BenchConfig("C4", "qwen3-30b-a3b", "int8", 1),
+    BenchConfig("C5", "mixtral-8x7b", "bf16", 2),
+    BenchConfig("C6", "mixtral-8x7b", "int8", 2),
+)
+
+
+def engine_factory(bc: BenchConfig, hw_name: str = "tpu-v5p",
+                   max_batch: int = 256) -> Callable[[], Engine]:
+    cfg = get_config(bc.arch)
+    hw = HW_BY_NAME[hw_name]
+
+    def make():
+        stm = StepTimeModel(cfg, hw, n_chips=bc.n_chips, quant=bc.quant)
+        return Engine(EngineConfig(max_batch=max_batch, page_size=16,
+                                   num_pages=131072, max_pages_per_seq=512,
+                                   prefill_token_budget=8192),
+                      SimExecutor(cfg, stm))
+    return make
+
+
+def sweep_config(bc: BenchConfig, *, hw_name: str = "tpu-v5p",
+                 ladder: Sequence[float] = LADDER, io_shape: str = "chat",
+                 process: str = "poisson", cv: float = 1.0,
+                 seed: int = 0, n_scale: float = 1.0) -> List[RunRecord]:
+    hw = HW_BY_NAME[hw_name]
+    return lambda_sweep(
+        engine_factory(bc, hw_name), ladder=ladder, io_shape=io_shape,
+        process=process, cv=cv, seed=seed,
+        requests_per_point=lambda lam: int(
+            n_scale * min(1200, max(150, 25 * lam))),
+        warmup_per_point=lambda lam: 0,
+        config=bc.cid, model=bc.arch, hw=hw_name, n_chips=bc.n_chips,
+        quant=bc.quant, engine_kind="sim",
+        price_per_hr=hw.price_per_chip_hr * bc.n_chips)
+
+
+def emit(name: str, rows: List[dict]):
+    """Print benchmark rows as CSV to stdout and persist under results/."""
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    if not rows:
+        print(f"# {name}: no rows")
+        return
+    keys = list(rows[0].keys())
+    lines = [",".join(keys)]
+    for r in rows:
+        lines.append(",".join(_fmt(r.get(k)) for k in keys))
+    text = "\n".join(lines)
+    (RESULTS / f"{name}.csv").write_text(text + "\n")
+    print(f"\n## {name}")
+    print(text)
+
+
+def _fmt(v):
+    if isinstance(v, float):
+        return f"{v:.6g}"
+    return str(v)
+
+
+def records_rows(recs: List[RunRecord]) -> List[dict]:
+    return [{
+        "config": r.config, "model": r.model, "hw": r.hw, "quant": r.quant,
+        "n_chips": r.n_chips, "lam": r.lam, "tps": r.tps,
+        "c_eff": r.c_eff, "penalty": r.penalty, "util": r.util,
+        "ttft_p50_ms": r.ttft_p50_ms, "ttft_p99_ms": r.ttft_p99_ms,
+        "tpot_p99_ms": r.tpot_p99_ms, "mean_inflight": r.mean_inflight,
+        "completed": r.n_completed,
+    } for r in recs]

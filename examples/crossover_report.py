@@ -1,0 +1,62 @@
+"""Corrected crossover analysis (paper §5.6 + §6.3): where does self-
+hosting actually beat each API tier once utilization is measured rather
+than assumed — and how asymmetric input/output pricing moves the answer
+for different workload shapes.
+
+    PYTHONPATH=src python examples/crossover_report.py
+"""
+from repro.configs import get_config
+from repro.core import c_naive, crossover_table, lambda_sweep
+from repro.core.pricing import API_TIERS
+from repro.serving import Engine, EngineConfig, SimExecutor
+from repro.simulate import StepTimeModel, V5P
+
+CONFIGS = (("llama31-8b", "bf16", 1), ("qwen3-30b-a3b", "int8", 1),
+           ("mixtral-8x7b", "bf16", 2))
+
+
+def main():
+    for arch, quant, chips in CONFIGS:
+        cfg = get_config(arch)
+        price = V5P.price_per_chip_hr * chips
+
+        def factory():
+            stm = StepTimeModel(cfg, V5P, n_chips=chips, quant=quant)
+            return Engine(
+                EngineConfig(max_batch=256, page_size=16, num_pages=65536,
+                             max_pages_per_seq=64), SimExecutor(cfg, stm))
+
+        recs = lambda_sweep(
+            factory, ladder=(1, 2, 5, 10, 25, 50, 100),
+            requests_per_point=lambda lam: int(min(600, max(120, 20 * lam))),
+            warmup_per_point=lambda lam: 0, config=arch, model=arch,
+            hw=V5P.name, price_per_hr=price, engine_kind="sim")
+        naive = c_naive(price, max(r.tps for r in recs))
+
+        print(f"\n=== {arch} {quant} x{chips} on {V5P.name} "
+              f"(${price:.2f}/hr) ===")
+        print(f"  naive token-volume cost (assumes theta_max): "
+              f"${naive:.3f}/MTok")
+        print(f"  measured C_eff: ${recs[0].c_eff:.3f} at lam=1  ...  "
+              f"${min(r.c_eff for r in recs):.3f} at saturation")
+        for row in crossover_table(recs, accept_slo_mismatch=True):
+            lam = row["lambda_star"]
+            tag = ("always cheaper (<= lowest measured lam)"
+                   if row["extrapolated"] else f"lam* = {lam:.2f} rps")
+            print(f"    vs {row['tier']:<18} "
+                  f"(${row['api_output_per_mtok']:>5.2f}/MTok out): {tag}")
+
+    print("\n--- asymmetric API pricing by workload shape (paper §6.3) ---")
+    print(f"{'tier':<18} {'chat 512:256':>13} {'RAG 4096:1024':>14} "
+          f"{'codegen 100:500':>16}")
+    for name, tier in API_TIERS.items():
+        print(f"{name:<18} "
+              f"{tier.blended(512, 256):>12.2f}$ "
+              f"{tier.blended(4096, 1024):>13.2f}$ "
+              f"{tier.blended(100, 500):>15.2f}$")
+    print("self-hosting bills input and output tokens at the same "
+          "GPU-time rate;\ngeneration-heavy shapes amplify its advantage.")
+
+
+if __name__ == "__main__":
+    main()

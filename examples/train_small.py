@@ -1,0 +1,39 @@
+"""Train a ~100M-parameter llama-family model for a few hundred steps on
+the local device, with checkpoints + restart-and-continue.
+
+    PYTHONPATH=src python examples/train_small.py --steps 300
+    # kill it mid-run, re-run the same command: it resumes.
+
+(~100M: d_model=640, 10 layers, ff=2560, vocab=16384.)
+"""
+import argparse
+
+from repro.configs import reduced, get_config
+from repro.launch.train import main as train_main
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_100m_ckpt")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=64)
+    args = ap.parse_args()
+
+    cfg = reduced("llama31-8b", layers=10, d_model=640, ff=2560, vocab=16384)
+    print(f"config: {cfg.num_layers}L d={cfg.d_model} ff={cfg.d_ff} "
+          f"vocab={cfg.vocab_size} -> {cfg.param_count()/1e6:.1f}M params")
+
+    train_main([
+        "--arch", "llama31-8b", "--reduced",
+        "--layers", "10", "--d-model", "640", "--ff", "2560",
+        "--vocab", "16384",
+        "--steps", str(args.steps), "--batch", str(args.batch),
+        "--seq", str(args.seq), "--lr", "1e-3", "--opt", "adamw8bit",
+        "--ckpt-dir", args.ckpt_dir, "--ckpt-every", "50",
+        "--log-every", "10",
+    ])
+
+
+if __name__ == "__main__":
+    main()

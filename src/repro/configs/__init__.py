@@ -1,0 +1,103 @@
+"""Architecture registry: --arch <id> -> ModelConfig.
+
+One module per assigned architecture (exact numbers from the assignment block)
+plus the paper's own three benchmark models (Llama-3.1-8B, Qwen3-30B-A3B,
+Mixtral-8x7B) so the paper's C1..C6 configurations are reproducible.
+
+`reduced(name)` returns a tiny same-family config for CPU smoke tests and the
+real-execution serving engine.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+from repro.configs.base import (  # noqa: F401
+    ALL_SHAPES,
+    DECODE_32K,
+    LONG_500K,
+    PREFILL_32K,
+    SHAPES_BY_NAME,
+    TRAIN_4K,
+    ModelConfig,
+    MoEConfig,
+    ShapeConfig,
+    SSMConfig,
+    XLSTMConfig,
+)
+
+from repro.configs import (  # noqa: E402
+    codeqwen1_5_7b,
+    granite_34b,
+    granite_moe_1b_a400m,
+    jamba_v0_1_52b,
+    llama31_8b,
+    llama4_maverick_400b_a17b,
+    mixtral_8x7b,
+    nemotron_4_15b,
+    phi3_medium_14b,
+    qwen2_vl_7b,
+    qwen3_30b_a3b,
+    whisper_base,
+    xlstm_350m,
+)
+
+_MODULES = (
+    whisper_base, jamba_v0_1_52b, granite_moe_1b_a400m,
+    llama4_maverick_400b_a17b, nemotron_4_15b, codeqwen1_5_7b,
+    phi3_medium_14b, granite_34b, qwen2_vl_7b, xlstm_350m,
+    llama31_8b, qwen3_30b_a3b, mixtral_8x7b,
+)
+
+_REGISTRY: Dict[str, ModelConfig] = {m.CONFIG.name: m.CONFIG for m in _MODULES}
+
+ASSIGNED_ARCHS = (
+    "whisper-base", "jamba-v0.1-52b", "granite-moe-1b-a400m",
+    "llama4-maverick-400b-a17b", "nemotron-4-15b", "codeqwen1.5-7b",
+    "phi3-medium-14b", "granite-34b", "qwen2-vl-7b", "xlstm-350m",
+)
+PAPER_ARCHS = ("llama31-8b", "qwen3-30b-a3b", "mixtral-8x7b")
+ALL_ARCHS = ASSIGNED_ARCHS + PAPER_ARCHS
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def list_archs():
+    return list(_REGISTRY)
+
+
+def reduced(name: str, *, layers: int = 2, d_model: int = 64,
+            vocab: int = 256, ff: int = 128) -> ModelConfig:
+    """A tiny same-family config for CPU smoke tests and the real-exec engine."""
+    cfg = get_config(name)
+    heads = max(2, min(4, cfg.num_heads))
+    kv = 1 if cfg.num_kv_heads == 1 else max(1, heads // max(1, cfg.q_per_kv))
+    kv = min(kv, heads)
+    changes = dict(
+        name=f"{cfg.name}-reduced",
+        num_layers=max(layers, cfg.attn_every if cfg.attn_every > 1 else layers),
+        d_model=d_model, num_heads=heads, num_kv_heads=kv,
+        d_ff=0 if cfg.d_ff == 0 else ff, vocab_size=vocab, head_dim=0,
+        encoder_layers=min(cfg.encoder_layers, 2),
+        frontend_len=min(cfg.frontend_len, 16),
+    )
+    if cfg.moe is not None:
+        changes["moe"] = dataclasses.replace(
+            cfg.moe, num_experts=4, top_k=min(2, cfg.moe.top_k),
+            expert_ff=ff, group_size=16,
+            shared_expert_ff=ff if cfg.moe.shared_expert_ff else 0)
+    if cfg.ssm is not None:
+        changes["ssm"] = dataclasses.replace(cfg.ssm, d_state=4)
+    return dataclasses.replace(cfg, **changes)
+
+
+__all__ = [
+    "ModelConfig", "MoEConfig", "SSMConfig", "XLSTMConfig", "ShapeConfig",
+    "ALL_SHAPES", "SHAPES_BY_NAME", "TRAIN_4K", "PREFILL_32K", "DECODE_32K",
+    "LONG_500K", "ASSIGNED_ARCHS", "PAPER_ARCHS", "ALL_ARCHS",
+    "get_config", "list_archs", "reduced",
+]

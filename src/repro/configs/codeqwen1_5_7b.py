@@ -1,0 +1,10 @@
+"""Config for --arch codeqwen1.5-7b."""
+from repro.configs.base import (  # noqa: F401
+    ModelConfig, MoEConfig, SSMConfig, XLSTMConfig)
+
+CONFIG = ModelConfig(
+    # [hf:Qwen/CodeQwen1.5-7B] qwen1.5 arch; kv=32 (full MHA).
+    name="codeqwen1.5-7b", family="dense",
+    num_layers=32, d_model=4096, num_heads=32, num_kv_heads=32,
+    d_ff=13440, vocab_size=92416,
+)

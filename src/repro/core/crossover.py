@@ -1,0 +1,76 @@
+"""Self-host vs API crossover analysis (paper §3.4, §5.6).
+
+The crossover is not a point but a surface: lambda* solves
+C_eff(lambda*) = C_API(tier). We log-interpolate the measured C_eff(lambda)
+curve (the paper's Fig. 5 method) and report per-tier thresholds, flagging
+extrapolation below the measured ladder exactly as the paper does.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.pricing import API_TIERS, APITier
+from repro.core.records import RunRecord
+
+
+def interp_c_eff(records: Sequence[RunRecord], lam: float) -> float:
+    """Log-log interpolation of the measured curve at offered rate lam."""
+    pts = sorted(((r.lam, r.c_eff) for r in records))
+    if not pts:
+        return math.nan
+    if lam <= pts[0][0]:
+        return pts[0][1]
+    if lam >= pts[-1][0]:
+        return pts[-1][1]
+    for (l0, c0), (l1, c1) in zip(pts, pts[1:]):
+        if l0 <= lam <= l1:
+            t = (math.log(lam) - math.log(l0)) / (math.log(l1) - math.log(l0))
+            return math.exp(math.log(c0) * (1 - t) + math.log(c1) * t)
+    return pts[-1][1]
+
+
+def crossover_lambda(records: Sequence[RunRecord],
+                     api_price: float) -> Optional[Tuple[float, bool]]:
+    """(lambda*, extrapolated?) where C_eff crosses below api_price.
+
+    None if self-hosting never crosses below the tier on (or beyond) the
+    measured curve. extrapolated=True marks a crossover below the lowest
+    measured lambda (paper: 'modeled continuation, not a directly observed
+    operating point').
+    """
+    pts = sorted(((r.lam, r.c_eff) for r in records))
+    if not pts:
+        return None
+    if pts[0][1] <= api_price:
+        return pts[0][0], True      # cheaper already at the lowest point
+    for (l0, c0), (l1, c1) in zip(pts, pts[1:]):
+        if c0 > api_price >= c1:
+            t = (math.log(api_price) - math.log(c0)) / \
+                (math.log(c1) - math.log(c0))
+            lam = math.exp(math.log(l0) * (1 - t) + math.log(l1) * t)
+            return lam, False
+    return None
+
+
+def crossover_table(records: Sequence[RunRecord],
+                    tiers: Optional[Dict[str, APITier]] = None,
+                    accept_slo_mismatch: bool = False) -> List[dict]:
+    """Per-tier crossover report. Refuses (paper §6.4) unless the caller
+    explicitly accepts that serverless tiers carry no latency SLA."""
+    if not accept_slo_mismatch:
+        raise ValueError(
+            "API comparison gated: serverless list prices carry no latency "
+            "SLA; pass accept_slo_mismatch=True to acknowledge (paper §6.4)")
+    tiers = tiers or API_TIERS
+    out = []
+    for name, tier in tiers.items():
+        res = crossover_lambda(records, tier.output_per_mtok)
+        out.append({
+            "tier": name,
+            "api_output_per_mtok": tier.output_per_mtok,
+            "lambda_star": res[0] if res else math.inf,
+            "extrapolated": res[1] if res else False,
+            "self_host_always_cheaper": bool(res and res[1]),
+        })
+    return out

@@ -1,0 +1,86 @@
+"""Run-record schema + CSV corpus IO (the paper's per-run CSV artifact)."""
+from __future__ import annotations
+
+import csv
+import dataclasses
+import math
+from pathlib import Path
+from typing import Iterable, List, Optional
+
+
+@dataclasses.dataclass
+class RunRecord:
+    config: str                 # e.g. "C1" or free-form
+    model: str
+    hw: str
+    n_chips: int
+    quant: str
+    engine: str                 # real | sim
+    lam: float                  # offered rate (req/s)
+    io_shape: str
+    n_requests: int
+    n_completed: int
+    window_s: float             # measurement window (completed-req stats)
+    tps: float                  # aggregate output tokens/s
+    prompt_tps: float
+    ttft_p50_ms: float
+    ttft_p90_ms: float
+    ttft_p99_ms: float
+    tpot_p50_ms: float
+    tpot_p99_ms: float
+    e2e_p50_ms: float
+    e2e_p99_ms: float
+    mean_inflight: float
+    price_per_hr: float
+    c_eff: float                # $/M output tokens
+    theta_max: float = 0.0      # filled by sweep post-pass (saturation)
+    seed: int = 0
+
+    @property
+    def penalty(self) -> float:
+        if self.theta_max <= 0 or self.tps <= 0:
+            return math.nan
+        return self.theta_max / self.tps
+
+    @property
+    def util(self) -> float:
+        if self.theta_max <= 0:
+            return math.nan
+        return self.tps / self.theta_max
+
+
+FIELDS = [f.name for f in dataclasses.fields(RunRecord)]
+
+
+def write_csv(path, records: Iterable[RunRecord]):
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    with open(path, "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=FIELDS + ["penalty", "util"])
+        w.writeheader()
+        for r in records:
+            row = dataclasses.asdict(r)
+            row["penalty"] = r.penalty
+            row["util"] = r.util
+            w.writerow(row)
+
+
+def read_csv(path) -> List[RunRecord]:
+    out = []
+    with open(path) as f:
+        for row in csv.DictReader(f):
+            row.pop("penalty", None)
+            row.pop("util", None)
+            kw = {}
+            for fld in dataclasses.fields(RunRecord):
+                v = row[fld.name]
+                kw[fld.name] = (fld.type in ("int", int) and int(float(v))) \
+                    or (fld.type in ("float", float) and float(v)) or v
+                if fld.type in ("int", int):
+                    kw[fld.name] = int(float(v))
+                elif fld.type in ("float", float):
+                    kw[fld.name] = float(v)
+                else:
+                    kw[fld.name] = v
+            out.append(RunRecord(**kw))
+    return out

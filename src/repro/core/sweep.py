@@ -1,0 +1,100 @@
+"""Lambda-sweep orchestration (paper §4.3 protocol).
+
+For each offered rate on the ladder: warmup requests (discarded), then a
+measured run; when the server is queue-limited the statistics use
+completed-requests-within-window, exactly as the paper does at lambda>=50.
+The sweep emits RunRecords; theta_max is back-filled as the max measured
+TPS across the ladder (raw saturation, no SLO bound — §4.4).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.cost import c_eff
+from repro.core.records import RunRecord
+from repro.serving.arrivals import ArrivalSpec, synth_requests
+from repro.serving.engine import Engine, EngineConfig
+
+# The paper's 7-point ladder.
+LAMBDA_LADDER = (1, 5, 10, 25, 50, 100, 200)
+
+
+def _pct(vals, q):
+    vals = [v for v in vals if v is not None]
+    return float(np.percentile(vals, q)) * 1e3 if vals else float("nan")
+
+
+def run_point(engine_factory: Callable[[], Engine], spec: ArrivalSpec, *,
+              warmup: int = 0, horizon: Optional[float] = None,
+              config: str = "", model: str = "", hw: str = "cpu-node",
+              n_chips: int = 1, quant: str = "bf16", engine_kind: str = "sim",
+              price_per_hr: float = 1.0,
+              failure_times: Sequence[float] = ()) -> RunRecord:
+    """One (lambda, config) measurement."""
+    eng = engine_factory()
+    if warmup:
+        wspec = dataclasses.replace(spec, n_requests=warmup,
+                                    seed=spec.seed + 7777)
+        eng.run(synth_requests(wspec))
+        # reset clock + metrics, keep compiled state warm
+        eng.t = 0.0
+        eng._inflight_area = 0.0
+        eng.metrics.counters.clear()
+        eng.metrics.hists.clear()
+
+    reqs = synth_requests(spec)
+    eng.run(reqs, horizon=horizon, failure_times=failure_times)
+    done = [r for r in reqs if r.finish_time is not None]
+    window = eng.t
+    out_toks = sum(r.tokens_out for r in done)
+    in_toks = sum(r.prompt_len for r in done)
+    tps = out_toks / window if window > 0 else 0.0
+    rec = RunRecord(
+        config=config, model=model, hw=hw, n_chips=n_chips, quant=quant,
+        engine=engine_kind, lam=spec.lam, io_shape=spec.io_shape,
+        n_requests=spec.n_requests, n_completed=len(done), window_s=window,
+        tps=tps, prompt_tps=in_toks / window if window else 0.0,
+        ttft_p50_ms=_pct([r.ttft for r in done], 50),
+        ttft_p90_ms=_pct([r.ttft for r in done], 90),
+        ttft_p99_ms=_pct([r.ttft for r in done], 99),
+        tpot_p50_ms=_pct([r.tpot for r in done], 50),
+        tpot_p99_ms=_pct([r.tpot for r in done], 99),
+        e2e_p50_ms=_pct([r.e2e for r in done], 50),
+        e2e_p99_ms=_pct([r.e2e for r in done], 99),
+        mean_inflight=eng.mean_inflight(),
+        price_per_hr=price_per_hr,
+        c_eff=c_eff(price_per_hr, tps),
+        seed=spec.seed)
+    return rec
+
+
+def lambda_sweep(engine_factory, *, ladder: Sequence[float] = LAMBDA_LADDER,
+                 io_shape: str = "chat", scale: float = 1.0,
+                 requests_per_point: Callable[[float], int] = None,
+                 warmup_per_point: Callable[[float], int] = None,
+                 horizon: Optional[float] = None, seed: int = 0,
+                 process: str = "poisson", cv: float = 1.0,
+                 **record_kw) -> List[RunRecord]:
+    """Full ladder sweep; back-fills theta_max = max TPS across points."""
+    # paper §5.8: prompts = 60*lam clamped [500,6000]; here scaled down for
+    # the CPU tier via requests_per_point.
+    if requests_per_point is None:
+        requests_per_point = lambda lam: int(min(6000, max(500, 60 * lam)))
+    if warmup_per_point is None:
+        warmup_per_point = lambda lam: int(max(100, 30 * lam) // 10)
+
+    records = []
+    for lam in ladder:
+        spec = ArrivalSpec(lam=lam, n_requests=requests_per_point(lam),
+                           io_shape=io_shape, process=process, cv=cv,
+                           seed=seed + int(lam * 1000), scale=scale)
+        rec = run_point(engine_factory, spec, warmup=warmup_per_point(lam),
+                        horizon=horizon, **record_kw)
+        records.append(rec)
+    theta_max = max(r.tps for r in records)
+    for r in records:
+        r.theta_max = theta_max
+    return records

@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+Each kernel ships as kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+dispatch wrapper with CPU fallback) and ref.py (pure-jnp oracle used by the
+allclose test sweeps; interpret=True executes the kernel body on CPU).
+
+  flash_attention — train/prefill causal GQA attention
+  paged_attention — decode against the paged KV pool (vLLM -> TPU adaptation)
+  int8_matmul     — natively-accelerated Q-axis matmul with fused dequant
+  ssm_scan        — chunked Mamba selective scan with VMEM-resident state
+"""
+from repro.kernels.flash_attention import flash_attention  # noqa: F401
+from repro.kernels.int8_matmul import int8_matmul  # noqa: F401
+from repro.kernels.paged_attention import paged_attention  # noqa: F401
+from repro.kernels.ssm_scan import ssm_scan  # noqa: F401

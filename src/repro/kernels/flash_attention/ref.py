@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the flash-attention kernel (fp32 softmax)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True) -> jnp.ndarray:
+    """q: (B, Sq, Hq, D); k, v: (B, Sk, Hkv, D) with Hq % Hkv == 0.
+
+    Returns (B, Sq, Hq, D) in q.dtype. Matches the GQA semantics of the
+    Pallas kernel: q head h attends to kv head h // (Hq // Hkv).
+    """
+    B, Sq, Hq, D = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, Sq, Hkv, G, D)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k).astype(jnp.float32)
+    s = s / jnp.sqrt(jnp.float32(D))
+    if causal:
+        mask = jnp.arange(k.shape[1])[None, :] <= jnp.arange(Sq)[:, None]
+        s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(v.dtype), v)
+    return o.reshape(B, Sq, Hq, D).astype(q.dtype)

@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the blocked int8 matmul."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def int8_matmul_ref(x_q, w_q, x_scale, w_scale):
+    """x_q: (M, K) int8; w_q: (K, N) int8; x_scale: scalar fp32;
+    w_scale: (1, N) fp32 per-output-channel. Returns (M, N) fp32."""
+    acc = jnp.matmul(x_q.astype(jnp.int32), w_q.astype(jnp.int32))
+    return acc.astype(jnp.float32) * (x_scale * w_scale)

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the chunked selective scan (Mamba recurrence)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssm_scan_ref(u, dt, Bm, Cm, A, D, h0=None):
+    """u/dt: (B, S, di) fp32; Bm/Cm: (B, S, N) fp32; A: (di, N); D: (di,).
+
+    h_t = exp(dt_t * A) * h_{t-1} + (dt_t * u_t) B_t ;  y_t = h_t . C_t + D u_t
+    Returns (y (B, S, di) fp32, h_final (B, di, N) fp32).
+    """
+    B, S, di = u.shape
+    h = jnp.zeros((B, di, A.shape[1]), jnp.float32) if h0 is None else h0
+
+    def step(h, xs):
+        u_t, dt_t, B_t, C_t = xs
+        dA = jnp.exp(dt_t[..., None] * A)
+        h = dA * h + (dt_t * u_t)[..., None] * B_t[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, C_t) + D * u_t
+        return h, y
+
+    xs = tuple(jnp.moveaxis(a.astype(jnp.float32), 1, 0)
+               for a in (u, dt, Bm, Cm))
+    h, ys = jax.lax.scan(step, h, xs)
+    return jnp.moveaxis(ys, 0, 1), h

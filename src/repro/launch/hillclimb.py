@@ -1,0 +1,165 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+
+"""Perf hillclimb (§Perf): hypothesis -> change -> re-lower -> validate.
+
+Three cells (picked from the baseline roofline table):
+  A mixtral-8x7b x train_4k    — most collective-bound
+  B llama31-8b  x decode_32k   — most representative of the paper (C1 serving)
+  C xlstm-350m  x train_4k     — worst roofline fraction
+
+Each variant re-lowers the cell with a lever flipped and records the three
+terms; results land in results/perf/ and the printed log is the §Perf
+iteration record.
+
+    PYTHONPATH=src python -m repro.launch.hillclimb [--cell A|B|C|all]
+"""
+import argparse        # noqa: E402
+import json            # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import jax.numpy as jnp   # noqa: E402
+
+import repro.launch.specs as specs_lib        # noqa: E402
+import repro.models.model as model_lib        # noqa: E402
+from repro.launch.dryrun import run_cell      # noqa: E402
+from repro.parallel.sharding import DEFAULT   # noqa: E402
+
+RESULTS = Path(__file__).resolve().parents[3] / "results" / "perf"
+
+
+def run_variant(arch, shape, name, hypothesis, *, rules=None, perf=None,
+                fsdp_threshold=None, multi_pod=False, quant="bf16"):
+    prev_perf = model_lib.PERF
+    prev_thresh = specs_lib.FSDP_THRESHOLD_BYTES
+    try:
+        model_lib.PERF = model_lib.PerfConfig(**(perf or {}))
+        if fsdp_threshold is not None:
+            specs_lib.FSDP_THRESHOLD_BYTES = fsdp_threshold
+        rec = run_cell(arch, shape, multi_pod=multi_pod, save=False,
+                       rules=rules, verbose=False, quant=quant)
+    finally:
+        model_lib.PERF = prev_perf
+        specs_lib.FSDP_THRESHOLD_BYTES = prev_thresh
+    t = rec["roofline"]
+    row = {
+        "variant": name, "hypothesis": hypothesis,
+        "compute_s": t["compute_s"], "memory_hlo_s": t["memory_s"],
+        "memory_floor_s": t["memory_analytic_s"],
+        "collective_s": t["collective_s"],
+        "coll_bytes": rec["collective_bytes"],
+        "bottleneck": t["bottleneck"], "frac": t["roofline_frac"],
+        "arg_bytes": rec["memory_analysis"].get("argument_size_in_bytes"),
+        "temp_bytes": rec["memory_analysis"].get("temp_size_in_bytes"),
+        "compile_s": rec["compile_s"],
+    }
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    tag = f"{arch}_{shape}_{name}".replace("/", "-").replace(" ", "_")
+    (RESULTS / f"{tag}.json").write_text(json.dumps(row, indent=1))
+    print(f"  [{name:<28}] comp={row['compute_s']:.3g}s "
+          f"memHLO={row['memory_hlo_s']:.3g}s "
+          f"coll={row['collective_s']:.3g}s "
+          f"({row['coll_bytes']['total']:.3g}B) "
+          f"temp={row['temp_bytes'] and row['temp_bytes']/1e9:.1f}GB "
+          f"bound={row['bottleneck']} frac={row['frac']:.3f}")
+    return row
+
+
+def cell_A():
+    print("\n=== CELL A: mixtral-8x7b x train_4k (collective-bound) ===")
+    arch, shape = "mixtral-8x7b", "train_4k"
+    rows = [run_variant(arch, shape, "baseline",
+                        "post-MoE-group-fix faithful baseline")]
+    rows.append(run_variant(
+        arch, shape, "A1_seq_parallel",
+        "activation all-reduces (2/layer of B*S*d) become sharded-residual "
+        "AG/RS pairs: expect ~2x less activation collective volume",
+        rules=DEFAULT.but(seq="model")))
+    rows.append(run_variant(
+        arch, shape, "A2_no_fsdp",
+        "weights 5.8GB/dev fit TP-only: dropping FSDP kills the per-layer "
+        "weight all-gathers (268GB/step) at +5.4GB residency",
+        fsdp_threshold=1e18))
+    rows.append(run_variant(
+        arch, shape, "A3_seqpar_and_no_fsdp",
+        "A1+A2 compose: both collective sources removed together",
+        rules=DEFAULT.but(seq="model"), fsdp_threshold=1e18))
+    # A4: larger dispatch groups -> fewer, fatter expert einsums; capacity
+    # rounding waste shrinks (C = ceil(Sg*k/E*cf) quantizes less at Sg=1024)
+    import dataclasses
+    from repro.configs import _REGISTRY, get_config
+    cfg = get_config(arch)
+    try:
+        _REGISTRY[arch] = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, group_size=1024))
+        rows.append(run_variant(
+            arch, shape, "A4_group1024_no_fsdp",
+            "4x larger MoE dispatch groups on top of A2",
+            fsdp_threshold=1e18))
+    finally:
+        _REGISTRY[arch] = cfg
+    return rows
+
+
+def cell_B():
+    print("\n=== CELL B: llama31-8b x decode_32k (paper C1 serving) ===")
+    arch, shape = "llama31-8b", "decode_32k"
+    rows = [run_variant(arch, shape, "baseline",
+                        "GSPMD decode over seq-sharded cache")]
+    rows.append(run_variant(
+        arch, shape, "B1_flash_decode",
+        "shard_map partial-softmax: replaces GSPMD's gather/reshard of "
+        "score tensors with 3 tiny psums (num/den/max)",
+        perf=dict(flash_decode=True)))
+    rows.append(run_variant(
+        arch, shape, "B2_fp8_kv_cache",
+        "fp8-e4m3 KV halves the dominant HBM stream (cache reads): memory "
+        "floor 2.7ms -> ~1.4ms, HLO bytes should drop ~2x on cache ops",
+        perf=dict(kv_cache_dtype=jnp.float8_e4m3fn)))
+    rows.append(run_variant(
+        arch, shape, "B3_flash_and_fp8",
+        "compose B1+B2",
+        perf=dict(flash_decode=True, kv_cache_dtype=jnp.float8_e4m3fn)))
+    rows.append(run_variant(
+        arch, shape, "B4_int8_weights_fp8_kv",
+        "the fully-optimized serving config (beyond-paper Q stack): int8 "
+        "weights halve the weight stream on top of the fp8 cache",
+        perf=dict(flash_decode=True, kv_cache_dtype=jnp.float8_e4m3fn),
+        quant="int8"))
+    return rows
+
+
+def cell_C():
+    print("\n=== CELL C: xlstm-350m x train_4k (worst roofline frac) ===")
+    arch, shape = "xlstm-350m", "train_4k"
+    rows = [run_variant(arch, shape, "baseline",
+                        "GSPMD recurrence: 413GB/step collective-permutes")]
+    rows.append(run_variant(
+        arch, shape, "C1_local_recurrence",
+        "shard_map the xLSTM scans (batch-local, params replicated): "
+        "permutes inside the time loop vanish; only param-grad psums "
+        "(~10GB/step) remain",
+        perf=dict(local_recurrence=True)))
+    rows.append(run_variant(
+        arch, shape, "C2_local_rec_seqpar",
+        "C1 + sequence-parallel residual stream for the surrounding "
+        "norms/projections",
+        perf=dict(local_recurrence=True), rules=DEFAULT.but(seq="model")))
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", default="all", choices=["A", "B", "C", "all"])
+    args = ap.parse_args()
+    if args.cell in ("A", "all"):
+        cell_A()
+    if args.cell in ("B", "all"):
+        cell_B()
+    if args.cell in ("C", "all"):
+        cell_C()
+
+
+if __name__ == "__main__":
+    main()

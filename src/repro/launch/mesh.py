@@ -1,0 +1,23 @@
+"""Production meshes.
+
+A FUNCTION, not a module-level constant — importing this module never
+touches jax device state (the dry-run sets XLA_FLAGS before any jax call).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """(16,16)=(data,model) single pod (256 chips) or (2,16,16)=
+    (pod,data,model) for 2 pods = 512 chips."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model: int = 1):
+    """Tiny mesh over whatever local devices exist (tests)."""
+    n = len(jax.devices())
+    model = min(model, n)
+    return jax.make_mesh((n // model, model), ("data", "model"))

@@ -1,0 +1,191 @@
+"""ShapeDtypeStruct input specs + sharding trees for every dry-run cell.
+
+input_specs(cfg, shape) returns weak-type-correct stand-ins for every model
+input — no device allocation ever happens in the dry-run. The step builders
+return (fn, abstract_args, in_shardings, donate) ready for
+jax.jit(...).lower(...).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import model as model_lib
+from repro.parallel.sharding import (
+    current_rules, logical_spec, param_spec_tree, zero1_spec)
+
+SDS = jax.ShapeDtypeStruct
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Abstract model inputs for one (arch x shape) cell."""
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        out = {"tokens": SDS((B, S), jnp.int32),
+               "labels": SDS((B, S), jnp.int32)}
+    elif shape.kind == "prefill":
+        out = {"tokens": SDS((B, S), jnp.int32)}
+    else:  # decode: one new token against a seq_len cache
+        out = {"tokens": SDS((B, 1), jnp.int32)}
+    if cfg.encoder_layers and shape.kind != "decode":
+        out["frames"] = SDS((B, cfg.frontend_len or 1500, cfg.d_model),
+                            jnp.bfloat16)
+    if cfg.frontend == "vision_patches" and shape.kind != "decode":
+        out["patches"] = SDS((B, model_lib.VLM_PATCHES, cfg.d_model),
+                             jnp.bfloat16)
+    return out
+
+
+def batch_shardings(batch: Dict[str, Any], mesh: Mesh) -> Dict[str, Any]:
+    out = {}
+    for k, v in batch.items():
+        names = ["batch"] + [None] * (len(v.shape) - 1)
+        out[k] = NamedSharding(mesh, logical_spec(v.shape, names, mesh))
+    return out
+
+
+def abstract_params(cfg: ModelConfig) -> Any:
+    return jax.eval_shape(
+        lambda: model_lib.init_params(jax.random.PRNGKey(0), cfg))
+
+
+def _shard_factor(spec: P, mesh: Mesh) -> int:
+    f = 1
+    for part in spec:
+        for ax in ((part,) if isinstance(part, str) else (part or ())):
+            f *= mesh.shape[ax]
+    return f
+
+
+FSDP_THRESHOLD_BYTES = 4e9   # per-device weight budget before FSDP kicks in
+
+
+def param_shardings(cfg: ModelConfig, params_abs, mesh: Mesh,
+                    fsdp: str = "auto"):
+    """TP weight sharding, upgraded to 2D FSDPxTP when the TP-only layout
+    would exceed the per-device budget (llama4-maverick: 50 GB -> 3.1 GB)."""
+    specs = param_spec_tree(params_abs, mesh,
+                            tied_embeddings=cfg.tie_embeddings)
+    flat_spec, treedef = jax.tree.flatten(
+        specs, is_leaf=lambda x: isinstance(x, P))
+    flat_abs = treedef.flatten_up_to(params_abs)
+    if fsdp == "auto":
+        per_dev = sum(
+            a.size * a.dtype.itemsize / _shard_factor(s, mesh)
+            for s, a in zip(flat_spec, flat_abs) if a is not None)
+        fsdp = "on" if per_dev > FSDP_THRESHOLD_BYTES else "off"
+    if fsdp == "on":
+        flat_spec = [zero1_spec(s, a.shape, mesh) if a is not None
+                     and len(a.shape) >= 2 else s
+                     for s, a in zip(flat_spec, flat_abs)]
+    out = [NamedSharding(mesh, s) for s in flat_spec]
+    return treedef.unflatten(out)
+
+
+def opt_shardings(cfg: ModelConfig, opt_state_abs, mesh: Mesh):
+    """Optimizer-state shardings: parameter rules + ZeRO-1 over `data`."""
+    specs = param_spec_tree(opt_state_abs, mesh,
+                            tied_embeddings=cfg.tie_embeddings)
+    flat_spec, treedef = jax.tree.flatten(
+        specs, is_leaf=lambda x: isinstance(x, P))
+    flat_abs = treedef.flatten_up_to(opt_state_abs)
+    out = [NamedSharding(mesh, zero1_spec(s, a.shape, mesh))
+           for s, a in zip(flat_spec, flat_abs)]
+    return treedef.unflatten(out)
+
+
+# cache leaf logical names (mirrors model_lib.constrain_cache)
+def _cache_names(name: str, ndim: int):
+    if name in ("k", "v"):
+        return (None, "batch", "kvheads", "kv_seq_tp", None)
+    if name in ("xk", "xv"):
+        return (None, "batch", None, "kvheads", None)
+    names = [None, "batch"] + [None] * (ndim - 2)
+    if name in ("h", "C") and ndim >= 3:
+        names[2] = "ssm_inner"
+    return tuple(names)
+
+
+def cache_shardings(cfg: ModelConfig, cache_abs, mesh: Mesh):
+    blocks = []
+    for blk in cache_abs["blocks"]:
+        out = {}
+        for name, a in blk.items():
+            spec = logical_spec(a.shape, _cache_names(name, len(a.shape)),
+                                mesh)
+            out[name] = NamedSharding(mesh, spec)
+        blocks.append(out)
+    return {"len": NamedSharding(mesh, logical_spec(
+        cache_abs["len"].shape, ("batch",), mesh)), "blocks": blocks}
+
+
+# ---------------------------------------------------------------------------
+# Step builders per shape kind
+# ---------------------------------------------------------------------------
+
+def build_train_cell(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                     qcfg=None, optimizer: str = "adamw8bit",
+                     accum_steps: Optional[int] = None):
+    """Returns (step_fn, args_abs, in_shardings)."""
+    from repro.training import adamw, adamw8bit, build_train_step
+    if accum_steps is None:
+        # deeper microbatching for 100B+ (MoE dispatch buffers dominate)
+        accum_steps = 16 if cfg.param_count() > 1e11 else 8
+    opt = adamw8bit(1e-3) if optimizer == "adamw8bit" else adamw(1e-3)
+    step = build_train_step(cfg, opt, qcfg=qcfg, remat=True,
+                            accum_steps=accum_steps)
+    params_abs = abstract_params(cfg)
+    opt_abs = jax.eval_shape(opt.init, params_abs)
+    batch = input_specs(cfg, shape)
+    shardings = (param_shardings(cfg, params_abs, mesh),
+                 opt_shardings(cfg, opt_abs, mesh),
+                 batch_shardings(batch, mesh))
+    # donate params + opt state (updated in place on device)
+    return step, (params_abs, opt_abs, batch), shardings, (0, 1)
+
+
+def build_prefill_cell(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                       qcfg=None):
+    params_abs = abstract_params(cfg)
+    batch = input_specs(cfg, shape)
+
+    def prefill_step(params, batch):
+        return model_lib.prefill(params, cfg, batch, qcfg=qcfg)
+
+    shardings = (param_shardings(cfg, params_abs, mesh),
+                 batch_shardings(batch, mesh))
+    return prefill_step, (params_abs, batch), shardings, ()
+
+
+def build_decode_cell(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                      qcfg=None):
+    """serve_step: one new token with a KV cache of seq_len."""
+    params_abs = abstract_params(cfg)
+    B = shape.global_batch
+    enc_len = cfg.frontend_len or 1500 if cfg.encoder_layers else 0
+    cache_abs = model_lib.abstract_cache(cfg, B, shape.seq_len, enc_len)
+    tok = SDS((B, 1), jnp.int32)
+
+    def serve_step(params, token, cache):
+        return model_lib.decode_step(params, cfg, token, cache, qcfg=qcfg)
+
+    shardings = (param_shardings(cfg, params_abs, mesh),
+                 NamedSharding(mesh, logical_spec((B, 1), ("batch", None),
+                                                  mesh)),
+                 cache_shardings(cfg, cache_abs, mesh))
+    # donate the KV cache: decode updates it in place
+    return serve_step, (params_abs, tok, cache_abs), shardings, (2,)
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh, qcfg=None,
+               **kw):
+    """Returns (step_fn, abstract_args, in_shardings, donate_argnums)."""
+    if shape.kind == "train":
+        return build_train_cell(cfg, shape, mesh, qcfg, **kw)
+    if shape.kind == "prefill":
+        return build_prefill_cell(cfg, shape, mesh, qcfg)
+    return build_decode_cell(cfg, shape, mesh, qcfg)

@@ -1,0 +1,14 @@
+"""Model zoo: functional blocks + assembly for all assigned architectures."""
+from repro.models.model import (  # noqa: F401
+    abstract_cache,
+    cache_spec,
+    decode_step,
+    encode,
+    forward,
+    init_cache,
+    init_params,
+    prefill,
+    train_loss,
+    unit_pattern,
+    unit_size,
+)

@@ -1,0 +1,285 @@
+"""GQA/MQA attention with RoPE / M-RoPE, train & decode paths.
+
+Layouts:
+  q:        (B, S, Hq, D)
+  k, v:     (B, S, Hkv, D)
+  cache:    (B, S_max, Hkv, D) contiguous per layer (dry-run serve path);
+            the serving engine uses the paged pool in repro/serving/kv_cache.py
+            with the Pallas paged-attention kernel.
+
+The train/prefill path dispatches to the Pallas flash-attention kernel on TPU
+and to the fused-jnp reference elsewhere (see kernels/flash_attention/ops.py).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+from repro.quant import linear
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (B, S, H, D); positions: (B, S) int32."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # (D/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, D/2)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jnp.ndarray, positions3: jnp.ndarray, theta: float,
+                sections=(2, 1, 1)) -> jnp.ndarray:
+    """Qwen2-VL M-RoPE: head_dim/2 rotary channels split into (t, h, w)
+    sections (ratio 2:1:1); positions3: (3, B, S)."""
+    d = x.shape[-1]
+    half = d // 2
+    tot = sum(sections)
+    bounds = []
+    acc = 0
+    for s in sections:
+        acc += (half * s) // tot
+        bounds.append(acc)
+    bounds[-1] = half
+    freqs = rope_freqs(d, theta)                       # (half,)
+    # Select per-channel position source by section.
+    chan = jnp.arange(half)
+    sec_id = jnp.digitize(chan, jnp.array(bounds[:-1]))  # 0/1/2 per channel
+    pos = jnp.take(positions3, sec_id, axis=0)         # (half, B, S) via axis trick
+    pos = jnp.moveaxis(pos, 0, -1).astype(jnp.float32)  # (B, S, half)
+    ang = pos * freqs
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def positions_for(rope_kind: str, batch: int, seq: int):
+    base = jnp.broadcast_to(jnp.arange(seq, dtype=jnp.int32)[None], (batch, seq))
+    if rope_kind == "mrope":
+        return jnp.broadcast_to(base[None], (3, batch, seq))
+    return base
+
+
+def rotate(rope_kind: str, x, positions, theta):
+    if rope_kind == "rope":
+        return apply_rope(x, positions, theta)
+    if rope_kind == "mrope":
+        return apply_mrope(x, positions, theta)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+def init_attention(key, d_model: int, n_q: int, n_kv: int, head_dim: int,
+                   dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], d_model, n_q * head_dim, dtype),
+        "wk": dense_init(ks[1], d_model, n_kv * head_dim, dtype),
+        "wv": dense_init(ks[2], d_model, n_kv * head_dim, dtype),
+        "wo": dense_init(ks[3], n_q * head_dim, d_model, dtype),
+    }
+
+
+def qkv(p, x, n_q: int, n_kv: int, head_dim: int, qcfg=None):
+    B, S, _ = x.shape
+    q = linear(x, p["wq"], qcfg).reshape(B, S, n_q, head_dim)
+    k = linear(x, p["wk"], qcfg).reshape(B, S, n_kv, head_dim)
+    v = linear(x, p["wv"], qcfg).reshape(B, S, n_kv, head_dim)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# Core attention math (GQA-aware)
+# ---------------------------------------------------------------------------
+
+def _gqa_scores(q, k):
+    """q: (B,Sq,Hq,D), k: (B,Sk,Hkv,D) -> scores (B,Hkv,G,Sq,Sk)."""
+    B, Sq, Hq, D = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, Sq, Hkv, G, D)
+    return jnp.einsum("bqhgd,bkhd->bhgqk", qg, k) / jnp.sqrt(D).astype(q.dtype)
+
+
+def causal_attention(q, k, v, *, q_offset: int = 0,
+                     kv_len: Optional[jnp.ndarray] = None):
+    """Full (training/prefill) causal attention, fp32 softmax.
+
+    q_offset: absolute position of q[0] (for chunked prefill).
+    kv_len:   optional (B,) valid KV lengths (padding mask).
+    """
+    B, Sq, Hq, D = q.shape
+    Sk = k.shape[1]
+    s = _gqa_scores(q, k).astype(jnp.float32)          # (B,Hkv,G,Sq,Sk)
+    qpos = jnp.arange(Sq) + q_offset
+    kpos = jnp.arange(Sk)
+    mask = kpos[None, :] <= qpos[:, None]              # (Sq, Sk)
+    if kv_len is not None:
+        mask = mask[None] & (kpos[None, None, :] < kv_len[:, None, None])
+        mask = mask[:, None, None]                      # (B,1,1,Sq,Sk)
+    else:
+        mask = mask[None, None, None]
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v)
+    return o.reshape(B, Sq, Hq, D)
+
+
+CHUNKED_THRESHOLD = 2048    # use online-softmax blocks above this seq len
+
+
+def causal_attention_chunked(q, k, v, *, block_q: int = 1024,
+                             block_k: int = 1024):
+    """Flash-style causal attention in pure JAX: nested scans over q/kv
+    blocks with online softmax. Working set drops from O(S^2) to
+    O(block_q*block_k) — the dry-run-honest stand-in for the Pallas
+    flash_attention kernel that runs on real TPUs (same tiling).
+    """
+    B, S, Hq, D = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    block_q = min(block_q, S)
+    block_k = min(block_k, S)
+    assert S % block_q == 0 and S % block_k == 0
+    nq, nk = S // block_q, S // block_k
+    scale = 1.0 / (D ** 0.5)
+
+    qb = jnp.moveaxis(q.reshape(B, nq, block_q, Hkv, G, D), 1, 0)
+    kb = jnp.moveaxis(k.reshape(B, nk, block_k, Hkv, D), 1, 0)
+    vb = jnp.moveaxis(v.reshape(B, nk, block_k, Hkv, D), 1, 0)
+
+    def outer(_, qx):
+        qi, qblk = qx                                   # (B,bq,Hkv,G,D)
+        rows = qi * block_q + jnp.arange(block_q)
+
+        def inner(st, kx):
+            m, l, acc = st
+            ki, kblk, vblk = kx
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qblk, kblk) * scale
+            s = s.astype(jnp.float32)                   # (B,Hkv,G,bq,bk)
+            cols = ki * block_k + jnp.arange(block_k)
+            s = jnp.where(cols[None, :] <= rows[:, None], s, -1e30)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+            p = jnp.exp(s - m_new)
+            alpha = jnp.exp(m - m_new)
+            l = l * alpha + jnp.sum(p, axis=-1, keepdims=True)
+            acc = acc * alpha + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p.astype(vblk.dtype), vblk
+            ).astype(jnp.float32)
+            return (m_new, l, acc), None
+
+        m0 = jnp.full((B, Hkv, G, block_q, 1), -1e30, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, G, block_q, 1), jnp.float32)
+        a0 = jnp.zeros((B, Hkv, G, block_q, D), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            inner, (m0, l0, a0), (jnp.arange(nk), kb, vb))
+        out = (acc / jnp.maximum(l, 1e-30)).astype(q.dtype)
+        return None, out                                # (B,Hkv,G,bq,D)
+
+    _, outs = jax.lax.scan(outer, None, (jnp.arange(nq), qb))
+    # (nq,B,Hkv,G,bq,D) -> (B,S,Hq,D)
+    outs = jnp.moveaxis(outs, 0, 1)                     # (B,nq,Hkv,G,bq,D)
+    outs = outs.transpose(0, 1, 4, 2, 3, 5).reshape(B, S, Hq, D)
+    return outs
+
+
+def bidirectional_attention(q, k, v):
+    B, Sq, Hq, D = q.shape
+    s = _gqa_scores(q, k).astype(jnp.float32)
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v)
+    return o.reshape(B, Sq, Hq, D)
+
+
+def decode_attention(q, k_cache, v_cache, cache_len):
+    """Single-token decode: q (B,1,Hq,D) vs cache (B,Hkv,S_max,D).
+
+    Cache layout is heads-major so the sharding resolver tries head-TP before
+    sequence-TP (see parallel/sharding.py). cache_len: (B,) valid lengths
+    (the new token is already written).
+    """
+    B, _, Hq, D = q.shape
+    Hkv, S = k_cache.shape[1], k_cache.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, 1, Hkv, G, D)
+    s = jnp.einsum("bqhgd,bhkd->bhgqk", qg, k_cache) / jnp.sqrt(D).astype(q.dtype)
+    s = s.astype(jnp.float32)                          # (B,Hkv,G,1,S)
+    kpos = jnp.arange(S)
+    mask = kpos[None, :] < cache_len[:, None]          # (B,S)
+    s = jnp.where(mask[:, None, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    o = jnp.einsum("bhgqk,bhkd->bqhgd", p, v_cache)
+    return o.reshape(B, 1, Hq, D)
+
+
+def decode_attention_partial(q, k_cache, v_cache, valid_mask):
+    """Flash-decoding partial softmax for sequence-sharded KV caches.
+
+    q (B,1,Hq,D); k_cache/v_cache (B,Hkv,S_shard,D); valid_mask (B,S_shard).
+    Returns (numerator (B,1,Hq,D) fp32, denominator (B,1,Hq,1) fp32,
+    running max (B,1,Hq,1) fp32) to be combined across shards with
+    repro.parallel.collectives.combine_partial_softmax.
+    """
+    B, _, Hq, D = q.shape
+    Hkv = k_cache.shape[1]
+    G = Hq // Hkv
+    qg = q.reshape(B, 1, Hkv, G, D)
+    s = jnp.einsum("bqhgd,bhkd->bhgqk", qg, k_cache) / jnp.sqrt(D).astype(q.dtype)
+    s = s.astype(jnp.float32)                          # (B,Hkv,G,1,S)
+    s = jnp.where(valid_mask[:, None, None, None, :], s, -jnp.inf)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    m_safe = jnp.where(jnp.isfinite(m), m, 0.0)
+    e = jnp.exp(s - m_safe) * jnp.isfinite(s)
+    num = jnp.einsum("bhgqk,bhkd->bqhgd",
+                     e.astype(q.dtype), v_cache)       # (B,1,Hkv,G,D)
+    denom = jnp.sum(e, axis=-1, keepdims=True)         # (B,Hkv,G,1,1)
+    num = num.astype(jnp.float32).reshape(B, 1, Hq, D)
+    denom = denom.transpose(0, 3, 1, 2, 4).reshape(B, 1, Hq, 1)
+    m_out = m_safe.transpose(0, 3, 1, 2, 4).reshape(B, 1, Hq, 1)
+    m_out = jnp.where(denom > 0, m_out, -jnp.inf)
+    return num, denom, m_out
+
+
+def update_cache(k_cache, v_cache, k_new, v_new, index):
+    """Write one decode step into (B,Hkv,S,D) caches at per-batch `index`."""
+    B = k_new.shape[0]
+    bidx = jnp.arange(B)
+    k_cache = k_cache.at[bidx, :, index].set(k_new[:, 0])
+    v_cache = v_cache.at[bidx, :, index].set(v_new[:, 0])
+    return k_cache, v_cache
+
+
+def fill_cache(k_cache, v_cache, k, v):
+    """Write a full prefill (B,S,Hkv,D) into (B,Hkv,S_max,D) caches."""
+    S = k.shape[1]
+    k_cache = k_cache.at[:, :, :S].set(k.transpose(0, 2, 1, 3))
+    v_cache = v_cache.at[:, :, :S].set(v.transpose(0, 2, 1, 3))
+    return k_cache, v_cache
+
+
+def init_cross_attention(key, d_model: int, n_q: int, n_kv: int, head_dim: int,
+                         dtype=jnp.bfloat16):
+    return init_attention(key, d_model, n_q, n_kv, head_dim, dtype)
+
+
+def cross_attention(p, x, enc_k, enc_v, n_q, n_kv, head_dim, qcfg=None):
+    """x: (B,Sq,d); enc_k/enc_v precomputed (B,Se,Hkv,D)."""
+    B, Sq, _ = x.shape
+    q = linear(x, p["wq"], qcfg).reshape(B, Sq, n_q, head_dim)
+    o = bidirectional_attention(q, enc_k, enc_v)
+    return linear(o.reshape(B, Sq, n_q * head_dim), p["wo"], qcfg)

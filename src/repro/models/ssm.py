@@ -1,0 +1,137 @@
+"""Mamba-style selective SSM block: train scan + O(1)-state decode step.
+
+State carried between decode steps:
+  conv: (B, d_conv-1, d_inner)   last inputs for the causal depthwise conv
+  h:    (B, d_inner, d_state)    SSM hidden state (fp32)
+
+The train/prefill path runs the recurrence with lax.scan over the sequence
+(compact HLO); the TPU hot path swaps in the chunked Pallas kernel
+(repro.kernels.ssm_scan) via ops-level dispatch.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SSMConfig
+from repro.models.layers import dense_init
+from repro.parallel.sharding import constrain
+from repro.quant import linear
+
+
+def _dims(d_model: int, cfg: SSMConfig) -> Tuple[int, int]:
+    di = cfg.expand * d_model
+    dtr = cfg.dt_rank or -(-d_model // 16)
+    return di, dtr
+
+
+def init_mamba(key, d_model: int, cfg: SSMConfig, dtype=jnp.bfloat16) -> Dict:
+    di, dtr = _dims(d_model, cfg)
+    ks = jax.random.split(key, 6)
+    A = jnp.broadcast_to(jnp.arange(1, cfg.d_state + 1, dtype=jnp.float32),
+                         (di, cfg.d_state))
+    return {
+        "in_proj": dense_init(ks[0], d_model, 2 * di, dtype),
+        "conv_w": dense_init(ks[1], di, cfg.d_conv, dtype),
+        "x_proj": dense_init(ks[2], di, dtr + 2 * cfg.d_state, dtype),
+        "dt_proj": dense_init(ks[3], dtr, di, dtype),
+        "dt_bias": jnp.zeros((di,), jnp.float32),
+        "A_log": jnp.log(A),                       # (di, N) fp32
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[5], di, d_model, dtype),
+    }
+
+
+def _ssm_inputs(p, xz, cfg: SSMConfig, conv_state=None, qcfg=None):
+    """Shared front half: split, causal conv, input-dependent discretization.
+
+    xz: (B, S, 2*di). Returns (u, dt, Bm, Cm, z, new_conv_state) where
+      u (B,S,di), dt (B,S,di) fp32, Bm/Cm (B,S,N) fp32, z gate (B,S,di).
+    """
+    di = xz.shape[-1] // 2
+    x, z = jnp.split(xz, 2, axis=-1)
+    k = cfg.d_conv
+    # causal depthwise conv along S with state from previous steps
+    if conv_state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, di), x.dtype)
+    else:
+        pad = conv_state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)                     # (B, S+k-1, di)
+    new_conv = xp[:, -(k - 1):, :] if k > 1 else None
+    w = _weight(p["conv_w"], x.dtype)                          # (di, k)
+    u = sum(xp[:, i:i + x.shape[1], :] * w[:, i] for i in range(k))
+    u = jax.nn.silu(u)
+
+    proj = linear(u, p["x_proj"], qcfg).astype(jnp.float32)    # (B,S,dtr+2N)
+    dtr = proj.shape[-1] - 2 * cfg.d_state
+    dt_r, Bm, Cm = jnp.split(proj, [dtr, dtr + cfg.d_state], axis=-1)
+    dt = jax.nn.softplus(
+        linear(dt_r.astype(x.dtype), p["dt_proj"], qcfg).astype(jnp.float32)
+        + p["dt_bias"])
+    return u, dt, Bm, Cm, z, new_conv
+
+
+def _weight(wp, dtype):
+    if isinstance(wp, dict):
+        q, s = wp["q"], wp["scale"]
+        return q.astype(dtype) if s is None else (
+            q.astype(jnp.bfloat16) * s.astype(jnp.bfloat16)).astype(dtype)
+    return wp.astype(dtype)
+
+
+def mamba_scan_ref(u, dt, Bm, Cm, A, D, h0=None):
+    """Reference selective scan: sequential over S in fp32.
+
+    u (B,S,di); dt (B,S,di); Bm/Cm (B,S,N); A (di,N); D (di,).
+    Returns (y (B,S,di) fp32, h_final (B,di,N) fp32).
+    """
+    Bsz, S, di = u.shape
+    N = A.shape[-1]
+    uf = u.astype(jnp.float32)
+    h = jnp.zeros((Bsz, di, N), jnp.float32) if h0 is None else h0
+
+    def step(h, xs):
+        u_t, dt_t, B_t, C_t = xs
+        dA = jnp.exp(dt_t[..., None] * A)                      # (B,di,N)
+        dBu = (dt_t * u_t)[..., None] * B_t[:, None, :]        # (B,di,N)
+        h = dA * h + dBu
+        y = jnp.einsum("bdn,bn->bd", h, C_t) + D * u_t
+        return h, y
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (uf, dt, Bm, Cm))
+    h, ys = jax.lax.scan(step, h, xs)
+    return jnp.moveaxis(ys, 0, 1), h
+
+
+def apply_mamba(p, x, cfg: SSMConfig, qcfg=None):
+    """Train/prefill path. x: (B,S,d) -> (y (B,S,d), state dict)."""
+    xz = linear(x, p["in_proj"], qcfg)
+    xz = constrain(xz, "batch", None, "ssm_inner")
+    u, dt, Bm, Cm, z, conv = _ssm_inputs(p, xz, cfg, None, qcfg)
+    A = -jnp.exp(p["A_log"])
+    y, h = mamba_scan_ref(u, dt, Bm, Cm, A, p["D"])
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = linear(y, p["out_proj"], qcfg)
+    state = {"conv": (conv.astype(jnp.bfloat16) if conv is not None else
+                      jnp.zeros((x.shape[0], 0, u.shape[-1]), jnp.bfloat16)),
+             "h": h}
+    return out, state
+
+
+def mamba_decode_step(p, x, state, cfg: SSMConfig, qcfg=None):
+    """Single-token decode. x: (B,1,d); state {conv (B,k-1,di), h (B,di,N)}."""
+    xz = linear(x, p["in_proj"], qcfg)
+    u, dt, Bm, Cm, z, conv = _ssm_inputs(p, xz, cfg, state["conv"], qcfg)
+    A = -jnp.exp(p["A_log"])
+    y, h = mamba_scan_ref(u, dt, Bm, Cm, A, p["D"], h0=state["h"])
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = linear(y, p["out_proj"], qcfg)
+    return out, {"conv": conv.astype(jnp.bfloat16), "h": h}
+
+
+def init_mamba_state(batch: int, d_model: int, cfg: SSMConfig):
+    di, _ = _dims(d_model, cfg)
+    return {"conv": jnp.zeros((batch, cfg.d_conv - 1, di), jnp.bfloat16),
+            "h": jnp.zeros((batch, di, cfg.d_state), jnp.float32)}

@@ -1,0 +1,159 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory) and sLSTM (scalar
+memory), each with stabilized exponential gating, train scan + decode step.
+
+mLSTM state: C (B, H, Dk, Dv) matrix memory, n (B, H, Dk) normalizer,
+             m (B, H) gate stabilizer.
+sLSTM state: c, n (B, di) scalar cells, m (B, di) stabilizer,
+             h (B, di) recurrent output.
+
+All states fp32; context-length-independent (the reason xlstm-350m runs the
+long_500k cell).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import XLSTMConfig
+from repro.models.layers import dense_init, init_norm, apply_norm
+from repro.quant import linear
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def init_mlstm(key, d: int, n_heads: int, cfg: XLSTMConfig, dtype=jnp.bfloat16):
+    di = int(cfg.mlstm_proj_factor * d)
+    ks = jax.random.split(key, 8)
+    return {
+        "mlstm_up": dense_init(ks[0], d, 2 * di, dtype),
+        "mlstm_q": dense_init(ks[1], di, di, dtype),
+        "mlstm_k": dense_init(ks[2], di, di, dtype),
+        "mlstm_v": dense_init(ks[3], di, di, dtype),
+        "mlstm_if": dense_init(ks[4], di, 2 * n_heads, dtype),  # i,f gates
+        "mlstm_norm": init_norm("rmsnorm", di, dtype),
+        "mlstm_down": dense_init(ks[6], di, d, dtype),
+    }
+
+
+def _mlstm_gates(p, u, n_heads, qcfg):
+    gf = linear(u, p["mlstm_if"], qcfg).astype(jnp.float32)     # (B,S,2H)
+    logi, logf = jnp.split(gf, 2, axis=-1)
+    return logi, jax.nn.log_sigmoid(logf)                       # log i~, log f
+
+
+def mlstm_seq(p, x, n_heads: int, cfg: XLSTMConfig, state=None, qcfg=None):
+    """x: (B,S,d). Returns (y (B,S,d), new_state)."""
+    B, S, d = x.shape
+    u2 = linear(x, p["mlstm_up"], qcfg)
+    u, z = jnp.split(u2, 2, axis=-1)                            # (B,S,di)
+    di = u.shape[-1]
+    dh = di // n_heads
+    q = linear(u, p["mlstm_q"], qcfg).reshape(B, S, n_heads, dh)
+    k = linear(u, p["mlstm_k"], qcfg).reshape(B, S, n_heads, dh) / jnp.sqrt(dh)
+    v = linear(u, p["mlstm_v"], qcfg).reshape(B, S, n_heads, dh)
+    logi, logf = _mlstm_gates(p, u, n_heads, qcfg)              # (B,S,H)
+
+    if state is None:
+        C0 = jnp.zeros((B, n_heads, dh, dh), jnp.float32)
+        n0 = jnp.zeros((B, n_heads, dh), jnp.float32)
+        m0 = jnp.full((B, n_heads), -jnp.inf, jnp.float32)
+    else:
+        C0, n0, m0 = state["C"], state["n"], state["m"]
+
+    def step(carry, xs):
+        C, n, m = carry
+        q_t, k_t, v_t, li, lf = xs                              # (B,H,dh)...
+        m_new = jnp.maximum(lf + m, li)                         # (B,H)
+        i_g = jnp.exp(li - m_new)
+        f_g = jnp.exp(lf + m - m_new)
+        kf, vf = k_t.astype(jnp.float32), v_t.astype(jnp.float32)
+        C = f_g[..., None, None] * C + i_g[..., None, None] * (
+            kf[..., :, None] * vf[..., None, :])                # (B,H,dk,dv)
+        n = f_g[..., None] * n + i_g[..., None] * kf
+        qf = q_t.astype(jnp.float32)
+        num = jnp.einsum("bhkv,bhk->bhv", C, qf)
+        den = jnp.abs(jnp.einsum("bhk,bhk->bh", n, qf))
+        den = jnp.maximum(den, jnp.exp(-m_new))                 # paper's max(|nq|, e^-m)
+        h = num / den[..., None]
+        return (C, n, m_new), h
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in
+               (q, k, v, logi.reshape(B, S, n_heads),
+                logf.reshape(B, S, n_heads)))
+    (C, n, m), hs = jax.lax.scan(step, (C0, n0, m0), xs)
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, S, di).astype(x.dtype)
+    h = apply_norm(p["mlstm_norm"], h, "rmsnorm")
+    y = linear(h * jax.nn.silu(z), p["mlstm_down"], qcfg)
+    return y, {"C": C, "n": n, "m": m}
+
+
+def init_mlstm_state(batch: int, d: int, n_heads: int, cfg: XLSTMConfig):
+    di = int(cfg.mlstm_proj_factor * d)
+    dh = di // n_heads
+    return {"C": jnp.zeros((batch, n_heads, dh, dh), jnp.float32),
+            "n": jnp.zeros((batch, n_heads, dh), jnp.float32),
+            "m": jnp.full((batch, n_heads), -jnp.inf, jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def init_slstm(key, d: int, cfg: XLSTMConfig, dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 4)
+    ff = int(cfg.slstm_proj_factor * d)
+    return {
+        "slstm_wx": dense_init(ks[0], d, 4 * d, dtype),    # i,f,z,o from input
+        "slstm_wr": dense_init(ks[1], d, 4 * d, dtype),    # recurrent
+        "slstm_up": dense_init(ks[2], d, ff, dtype),
+        "slstm_down": dense_init(ks[3], ff, d, dtype),
+    }
+
+
+def slstm_seq(p, x, cfg: XLSTMConfig, state=None, qcfg=None):
+    """x: (B,S,d) -> (y (B,S,d), state)."""
+    B, S, d = x.shape
+    wx = linear(x, p["slstm_wx"], qcfg).astype(jnp.float32)     # (B,S,4d)
+
+    if state is None:
+        c0 = jnp.zeros((B, d), jnp.float32)
+        n0 = jnp.ones((B, d), jnp.float32)
+        m0 = jnp.zeros((B, d), jnp.float32)
+        h0 = jnp.zeros((B, d), jnp.float32)
+    else:
+        c0, n0, m0, h0 = state["c"], state["n"], state["m"], state["h"]
+
+    wr = p["slstm_wr"]
+    if isinstance(wr, dict):
+        q, s = wr["q"], wr["scale"]
+        wr = q if s is None else (q.astype(jnp.bfloat16) * s.astype(jnp.bfloat16))
+    wrf = wr.astype(jnp.float32)
+
+    def step(carry, wx_t):
+        c, n, m, h = carry
+        g = wx_t + h @ wrf                                      # (B,4d)
+        gi, gf, gz, go = jnp.split(g, 4, axis=-1)
+        m_new = jnp.maximum(gf + m, gi)                         # log-space f
+        i_g = jnp.exp(gi - m_new)
+        f_g = jnp.exp(gf + m - m_new)
+        c = f_g * c + i_g * jnp.tanh(gz)
+        n = f_g * n + i_g
+        h = jax.nn.sigmoid(go) * c / jnp.maximum(n, 1e-6)
+        return (c, n, m_new, h), h
+
+    (c, n, m, h), hs = jax.lax.scan(step, (c0, n0, m0, h0),
+                                    jnp.moveaxis(wx, 1, 0))
+    y = jnp.moveaxis(hs, 0, 1).astype(x.dtype)                  # (B,S,d)
+    ff = jax.nn.gelu(linear(y, p["slstm_up"], qcfg), approximate=True)
+    out = linear(ff, p["slstm_down"], qcfg)
+    return out, {"c": c, "n": n, "m": m, "h": h}
+
+
+def init_slstm_state(batch: int, d: int):
+    return {"c": jnp.zeros((batch, d), jnp.float32),
+            "n": jnp.ones((batch, d), jnp.float32),
+            "m": jnp.zeros((batch, d), jnp.float32),
+            "h": jnp.zeros((batch, d), jnp.float32)}

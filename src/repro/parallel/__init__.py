@@ -1,0 +1,12 @@
+"""Distribution substrate: sharding rules, collectives, pipeline parallelism."""
+from repro.parallel.sharding import (  # noqa: F401
+    DEFAULT_RULES,
+    ShardingRules,
+    constrain,
+    current_mesh,
+    logical_spec,
+    param_spec_tree,
+    shardctx,
+    zero1_spec,
+)
+from repro.parallel.collectives import combine_partial_softmax  # noqa: F401

@@ -1,0 +1,48 @@
+"""Collective helpers used inside shard_map regions.
+
+The flash-decoding combine implements the numerically-safe merge of
+partial-softmax attention results computed on sequence shards of a KV cache:
+each shard returns (numerator, denominator, running_max); the merge rescales
+by exp(m_local - m_global) and psums. Used by the long-context decode path
+and by the collective hillclimb on decode cells.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def combine_partial_softmax(num, den, m, axis_name: str):
+    """Merge flash-decoding partials across `axis_name`.
+
+    num: (..., D) fp32 partial numerator   sum_j e^{s_j - m_local} v_j
+    den: (..., 1) fp32 partial denominator sum_j e^{s_j - m_local}
+    m:   (..., 1) fp32 local running max (-inf where the shard saw no keys)
+    Returns the exact softmax-weighted value combine, fp32.
+    """
+    m_glob = jax.lax.pmax(m, axis_name)
+    m_safe = jnp.where(jnp.isfinite(m_glob), m_glob, 0.0)
+    scale = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+    num = jax.lax.psum(num * scale, axis_name)
+    den = jax.lax.psum(den * scale, axis_name)
+    return num / jnp.maximum(den, 1e-30)
+
+
+def ring_all_gather(x, axis_name: str):
+    """All-gather along `axis_name` via a ring of collective-permutes,
+    stacking shards on a new leading axis. Lets XLA overlap each hop with
+    compute the caller interleaves (overlap hillclimb lever)."""
+    n = jax.lax.axis_size(axis_name)
+    idx = jax.lax.axis_index(axis_name)
+    perm = [(i, (i + 1) % n) for i in range(n)]
+
+    def body(i, state):
+        buf, cur = state
+        buf = jax.lax.dynamic_update_index_in_dim(
+            buf, cur, (idx - i) % n, axis=0)
+        cur = jax.lax.ppermute(cur, axis_name, perm)
+        return buf, cur
+
+    buf = jnp.zeros((n,) + x.shape, x.dtype)
+    buf, _ = jax.lax.fori_loop(0, n, body, (buf, x))
+    return buf

@@ -1,0 +1,252 @@
+"""Logical-axis sharding rules (MaxText-style), resolved against the ambient mesh.
+
+Every tensor in the framework carries *logical* axis names ("batch", "ff",
+"vocab", ...). A ShardingRules table maps logical names to mesh axes. The
+resolver drops any mapping whose mesh-axis product does not divide the
+concrete dimension — so ONE uniform rule set compiles for every
+(arch x shape x mesh) cell, and the roofline then *measures* what the
+fallback (replication / GSPMD resharding) costs. That cost is the input to
+the per-cell hillclimb, where cells get explicit beyond-baseline schemes.
+
+The mesh is ambient: the launcher (dryrun/train/serve) enters `shardctx(mesh)`
+around tracing; `constrain` is a no-op outside any context so the same model
+code runs on a single CPU device in tests.
+"""
+from __future__ import annotations
+
+import contextlib
+import math
+import re
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axes = Union[None, str, Tuple[str, ...]]
+
+
+# Logical axis -> mesh axes. "model" is the tensor-parallel axis; the batch
+# dimension spreads over every data-parallel axis (pod x data).
+DEFAULT_RULES: Dict[str, Axes] = {
+    "batch": ("pod", "data"),
+    "seq": None,                # flipped to "model" under sequence parallelism
+    "kv_seq": ("pod", "data"),  # long-context (batch=1) KV shards over DP axes
+    # KV-cache sequence axis: takes whatever axes the batch dim left free —
+    # "model" for batched decode (heads permitting), all 512 ways at batch=1
+    "kv_seq_tp": ("pod", "data", "model"),
+    "d_model": None,
+    "ff": "model",
+    "heads_proj": "model",      # fused (H*hd) projection dim
+    "qheads": "model",
+    "kvheads": "model",
+    "vocab": "model",
+    "experts": "model",
+    "ssm_inner": "model",
+    "zero1": "data",            # optimizer-state sharding axis
+    "stage": "stage",           # pipeline-parallel stage axis (opt-in meshes)
+}
+
+
+class ShardingRules(dict):
+    """A dict of logical-axis -> mesh-axes with an override constructor."""
+
+    def but(self, **overrides: Axes) -> "ShardingRules":
+        new = ShardingRules(self)
+        new.update(overrides)
+        return new
+
+
+DEFAULT = ShardingRules(DEFAULT_RULES)
+
+_STATE = threading.local()
+
+
+def current_mesh() -> Optional[Mesh]:
+    return getattr(_STATE, "mesh", None)
+
+
+def current_rules() -> ShardingRules:
+    return getattr(_STATE, "rules", DEFAULT)
+
+
+@contextlib.contextmanager
+def shardctx(mesh: Optional[Mesh], rules: Optional[ShardingRules] = None):
+    """Install an ambient (mesh, rules) pair for constrain()/logical_spec()."""
+    prev = (current_mesh(), current_rules())
+    _STATE.mesh = mesh
+    _STATE.rules = rules or DEFAULT
+    try:
+        yield
+    finally:
+        _STATE.mesh, _STATE.rules = prev
+
+
+def _mesh_axes_size(mesh: Mesh, axes: Tuple[str, ...]) -> int:
+    return math.prod(mesh.shape[a] for a in axes)
+
+
+def logical_spec(shape: Sequence[int], names: Sequence[Optional[str]],
+                 mesh: Optional[Mesh] = None,
+                 rules: Optional[ShardingRules] = None) -> P:
+    """Resolve logical axis names against the mesh into a PartitionSpec.
+
+    Any mapping that does not divide the dimension (or references mesh axes
+    that don't exist) is dropped — never an error. A mesh axis is used at
+    most once across the whole spec (first dim wins).
+    """
+    mesh = mesh or current_mesh()
+    rules = rules or current_rules()
+    if mesh is None:
+        return P()
+    used: set = set()
+    parts = []
+    for dim, name in zip(shape, names):
+        axes = rules.get(name) if name else None
+        if axes is None:
+            parts.append(None)
+            continue
+        if isinstance(axes, str):
+            axes = (axes,)
+        axes = tuple(a for a in axes if a in mesh.axis_names and a not in used)
+        size = _mesh_axes_size(mesh, axes) if axes else 1
+        if axes and size > 1 and dim % size == 0:
+            used.update(axes)
+            parts.append(axes if len(axes) > 1 else axes[0])
+        else:
+            parts.append(None)
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def constrain(x: jax.Array, *names: Optional[str]) -> jax.Array:
+    """with_sharding_constraint by logical names; identity with no mesh."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    spec = logical_spec(x.shape, names, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs by pytree path (naming convention of the model zoo).
+# ---------------------------------------------------------------------------
+
+# (path-regex, logical names per dim). First match wins. Stacked layer params
+# gain a leading replicated (scan) dim handled below.
+_PARAM_RULES: Tuple[Tuple[str, Tuple[Optional[str], ...]], ...] = (
+    (r"(^|/)embed$", ("vocab_embed", "d_model")),
+    (r"(^|/)(pos_embed|enc_pos_embed)$", (None, None)),
+    (r"(^|/)lm_head$", ("d_model", "vocab")),
+    (r"(^|/)w[qkv]$", ("d_model", "heads_proj")),
+    (r"(^|/)wo$", ("heads_proj", "d_model")),
+    (r"(^|/)(gate|up)$", ("d_model", "ff")),
+    (r"(^|/)down$", ("ff", "d_model")),
+    (r"(^|/)experts_(gate|up)$", ("experts", "d_model", "ff")),
+    (r"(^|/)experts_down$", ("experts", "ff", "d_model")),
+    (r"(^|/)router$", ("d_model", None)),
+    (r"(^|/)in_proj$", ("d_model", "ssm_inner")),
+    (r"(^|/)out_proj$", ("ssm_inner", "d_model")),
+    (r"(^|/)x_proj$", ("ssm_inner", None)),
+    (r"(^|/)dt_proj$", (None, "ssm_inner")),
+    (r"(^|/)conv_w$", ("ssm_inner", None)),
+    (r"(^|/)A_log$", ("ssm_inner", None)),
+    (r"(^|/)(D|dt_bias)$", ("ssm_inner",)),
+    # xLSTM blocks are small: replicate (see DESIGN §5).
+    (r"(^|/)(mlstm|slstm)_", ()),
+    (r"(^|/)(scale|bias)$", ()),
+)
+
+
+def _names_for_path(path: str, ndim: int) -> Tuple[Optional[str], ...]:
+    for pat, names in _PARAM_RULES:
+        if re.search(pat, path):
+            names = tuple(names)[:ndim]
+            if len(names) < ndim:  # stacked (scan) leading dims -> replicated
+                names = (None,) * (ndim - len(names)) + names
+            return names
+    return (None,) * ndim
+
+
+# vocab-sharded table for tied embeddings, d-sharded for untied lookup-only
+# tables (see DESIGN §5): resolved by the model providing `tied` in the path.
+def _resolve_embed(names, tied: bool):
+    return tuple(("vocab" if tied else None) if n == "vocab_embed"
+                 else ("d_model" if (n == "d_model" and not tied) else
+                       (None if n == "d_model" else n)) for n in names)
+
+
+def param_spec_tree(params, mesh: Optional[Mesh] = None,
+                    rules: Optional[ShardingRules] = None, *,
+                    tied_embeddings: bool = False):
+    """PartitionSpec pytree matching `params` (dicts of arrays / quant dicts)."""
+    mesh = mesh or current_mesh()
+    rules = rules or current_rules()
+
+    def visit(node, path: str):
+        if isinstance(node, dict):
+            # quantized weight {"q":..,"scale":..} shards like the weight
+            if set(node) == {"q", "scale"}:
+                qspec = visit(node["q"], path)
+                sspec = (P() if node["scale"] is None or mesh is None
+                         else logical_spec(node["scale"].shape,
+                                           _names_for_path(path, node["scale"].ndim),
+                                           mesh, rules))
+                return {"q": qspec, "scale": sspec}
+            return {k: visit(v, f"{path}/{k}") for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            return type(node)(visit(v, path) for v in node)
+        if node is None:
+            return None
+        names = _names_for_path(path, node.ndim)
+        if "vocab_embed" in names:
+            names = _resolve_embed(names, tied_embeddings)
+        if mesh is None:
+            return P()
+        return logical_spec(node.shape, names, mesh, rules)
+
+    return visit(params, "")
+
+
+def zero1_spec(weight_spec: P, shape: Sequence[int],
+               mesh: Optional[Mesh] = None,
+               rules: Optional[ShardingRules] = None) -> P:
+    """Optimizer-state spec: weight spec + ZeRO-1 sharding over the data axis
+    on the first still-replicated, divisible dimension."""
+    mesh = mesh or current_mesh()
+    rules = rules or current_rules()
+    if mesh is None:
+        return P()
+    axes = rules.get("zero1")
+    if isinstance(axes, str):
+        axes = (axes,)
+    axes = tuple(a for a in (axes or ()) if a in mesh.axis_names)
+    if not axes:
+        return weight_spec
+    used = set()
+    for part in weight_spec:
+        if isinstance(part, tuple):
+            used.update(part)
+        elif part is not None:
+            used.add(part)
+    axes = tuple(a for a in axes if a not in used)
+    if not axes:
+        return weight_spec
+    size = _mesh_axes_size(mesh, axes)
+    parts = list(weight_spec) + [None] * (len(shape) - len(weight_spec))
+    for i, dim in enumerate(shape):
+        if parts[i] is None and dim % size == 0 and size > 1:
+            parts[i] = axes if len(axes) > 1 else axes[0]
+            break
+    return P(*parts)
+
+
+def shardings_for(params, mesh: Optional[Mesh] = None, **kw):
+    """NamedSharding pytree for jit in_shardings."""
+    mesh = mesh or current_mesh()
+    specs = param_spec_tree(params, mesh, **kw)
+    if mesh is None:
+        return specs
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))

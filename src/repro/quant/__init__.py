@@ -1,0 +1,124 @@
+"""Quantization substrate — the paper's Q axis, adapted to TPU.
+
+The paper sweeps Q in {FP16, FP8} on H100/A100 and finds the FP8 win is
+hardware-conditional (native tensor cores vs. emulation). The TPU analogue:
+
+  * bf16  — baseline on every TPU generation.
+  * int8  — native MXU path on v5e/v5p/v6e (2x peak FLOP/s, 2x weight bw).
+  * fp8   — e4m3; native on v6e-class silicon, *emulated* on v5e (dequant to
+            bf16 before the matmul -> bandwidth win but extra convert cost).
+
+`QuantConfig` routes every matmul in the model zoo. `quantize_tree` converts a
+bf16 param pytree into quantized storage (per-output-channel scales).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+VALID_MODES = ("bf16", "int8", "fp8")
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    mode: str = "bf16"            # bf16 | int8 | fp8
+    native: bool = True           # does the target silicon have native support?
+    act_quant: bool = True        # quantize activations too (int8 path)
+
+    def __post_init__(self):
+        assert self.mode in VALID_MODES, self.mode
+
+    @property
+    def weight_bytes(self) -> int:
+        return 2 if self.mode == "bf16" else 1
+
+
+BF16 = QuantConfig("bf16")
+INT8 = QuantConfig("int8", native=True)
+FP8_EMULATED = QuantConfig("fp8", native=False)   # v5e: no native fp8 matmul
+FP8_NATIVE = QuantConfig("fp8", native=True)      # v6e-class
+
+BY_NAME = {"bf16": BF16, "int8": INT8, "fp8": FP8_EMULATED,
+           "fp8_native": FP8_NATIVE}
+
+
+def _per_channel_scale(w: jnp.ndarray, qmax: float) -> jnp.ndarray:
+    # Reduce over the contraction axis (-2) so stacked (layers, d_in, d_out)
+    # weights quantize per layer per output channel.
+    amax = jnp.max(jnp.abs(w.astype(jnp.float32)), axis=-2, keepdims=True)
+    return jnp.maximum(amax, 1e-8) / qmax
+
+
+def quantize_weight(w: jnp.ndarray, mode: str):
+    """-> dict(q=storage array, scale=(1, d_out) fp32). bf16 passes through."""
+    if mode == "bf16":
+        return {"q": w, "scale": None}
+    if mode == "int8":
+        scale = _per_channel_scale(w, 127.0)
+        q = jnp.clip(jnp.round(w.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
+        return {"q": q, "scale": scale}
+    # fp8 e4m3: max normal 448
+    scale = _per_channel_scale(w, 448.0)
+    q = (w.astype(jnp.float32) / scale).astype(jnp.float8_e4m3fn)
+    return {"q": q, "scale": scale}
+
+
+def linear(x: jnp.ndarray, w, qcfg: Optional[QuantConfig] = None) -> jnp.ndarray:
+    """x @ w with the configured quantization. `w` is either a raw array
+    (bf16 path) or a quantize_weight() dict."""
+    if isinstance(w, dict):
+        q, scale = w["q"], w["scale"]
+    else:
+        q, scale = w, None
+    if qcfg is None or qcfg.mode == "bf16" or scale is None:
+        return jax.lax.dot_general(
+            x, q.astype(x.dtype),
+            (((x.ndim - 1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32).astype(x.dtype)
+
+    if qcfg.mode == "int8" and qcfg.native:
+        # Dynamic per-tensor activation quantization -> int8 x int8 -> int32.
+        xf = x.astype(jnp.float32)
+        xamax = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-8)
+        xs = xamax / 127.0
+        xq = jnp.clip(jnp.round(xf / xs), -127, 127).astype(jnp.int8)
+        acc = jax.lax.dot_general(
+            xq, q, (((x.ndim - 1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32)
+        return (acc.astype(jnp.float32) * (xs * scale)).astype(x.dtype)
+
+    # fp8 (native or emulated) and non-native int8: dequantize the weight
+    # stream and matmul in bf16. On real v6e silicon the native path would
+    # issue fp8 dots; the emulated path matches v5e where fp8 weights only
+    # buy HBM bandwidth. Roofline accounting distinguishes the two.
+    wf = q.astype(jnp.bfloat16) * scale.astype(jnp.bfloat16)
+    return jax.lax.dot_general(
+        x, wf.astype(x.dtype),
+        (((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def quantize_tree(params, mode: str):
+    """Quantize every 2D+ weight matrix in a param pytree (norms/embeddings
+    and 1D vectors stay bf16). Returns a pytree where weights become dicts."""
+    if mode == "bf16":
+        return params
+
+    # Leaves that are not consumed by `linear` (lookups, convs, SSM tensors).
+    SKIP = {"embed", "pos_embed", "enc_pos_embed", "scale", "bias", "conv",
+            "conv_w", "A_log", "D", "router", "dt_bias", "gates"}
+
+    def visit(p, name=""):
+        if isinstance(p, dict):
+            return {k: visit(v, k) for k, v in p.items()}
+        if isinstance(p, (list, tuple)):
+            return type(p)(visit(v, name) for v in p)
+        if (hasattr(p, "ndim") and p.ndim >= 2 and p.dtype == jnp.bfloat16
+                and name not in SKIP):
+            return quantize_weight(p, mode)
+        return p
+
+    return visit(params)

@@ -1,0 +1,14 @@
+"""Continuous-batching serving runtime with a paged KV cache.
+
+One engine, two execution tiers (DESIGN §3 "CPU container strategy"):
+  * RealExecutor — jitted JAX on the local device; wall-clock step timing.
+  * SimExecutor  — calibrated TPU step-time model; virtual-clock timing.
+Both tiers share the scheduler, paging, arrival processes and the
+Prometheus-style metrics registry the cost meter scrapes.
+"""
+from repro.serving.arrivals import (  # noqa: F401
+    ArrivalSpec, gamma_arrivals, poisson_arrivals, synth_requests)
+from repro.serving.engine import Engine, EngineConfig  # noqa: F401
+from repro.serving.executors import RealExecutor, SimExecutor  # noqa: F401
+from repro.serving.metrics import MetricsRegistry  # noqa: F401
+from repro.serving.request import Request, RequestState  # noqa: F401

@@ -1,0 +1,80 @@
+"""Open-loop arrival processes and synthetic request generation.
+
+Matches the paper's protocol (§4.3): Poisson arrivals (burstiness 1.0) by
+default, Gamma inter-arrivals for the burstiness probe (CV=2 ==
+--burstiness 0.25), fixed 512:256 I/O shape by default with the RAG /
+agentic / variable-length (log-normal) shapes of §5.7 available.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.serving.request import Request
+
+
+def poisson_arrivals(rng: np.random.Generator, lam: float, n: int,
+                     start: float = 0.0) -> np.ndarray:
+    """n exponential inter-arrival times at rate lam (CV=1)."""
+    gaps = rng.exponential(1.0 / lam, size=n)
+    return start + np.cumsum(gaps)
+
+
+def gamma_arrivals(rng: np.random.Generator, lam: float, cv: float, n: int,
+                   start: float = 0.0) -> np.ndarray:
+    """Gamma inter-arrivals with coefficient of variation `cv` at rate lam.
+
+    shape k = 1/cv^2, scale = cv^2 / lam  (mean 1/lam, CV = cv).
+    """
+    k = 1.0 / (cv * cv)
+    theta = cv * cv / lam
+    gaps = rng.gamma(k, theta, size=n)
+    return start + np.cumsum(gaps)
+
+
+# I/O shapes from the paper: chat 512:256 (headline), RAG 4096:1024,
+# agentic 1024:4096 (§5.7).
+IO_SHAPES = {
+    "chat": (512, 256),
+    "rag": (4096, 1024),
+    "agentic": (1024, 4096),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ArrivalSpec:
+    lam: float                      # offered rate (req/s)
+    n_requests: int
+    io_shape: str = "chat"          # key of IO_SHAPES or "variable"
+    process: str = "poisson"        # poisson | gamma
+    cv: float = 1.0                 # gamma CV (paper probe: 2.0)
+    seed: int = 0
+    scale: float = 1.0              # token-length scale (CPU tier shrinks)
+    shared_prefix_groups: int = 0   # >0 -> prefix-sharing workload (§5.7)
+
+
+def synth_requests(spec: ArrivalSpec, start: float = 0.0) -> List[Request]:
+    rng = np.random.default_rng(spec.seed)
+    if spec.process == "gamma":
+        times = gamma_arrivals(rng, spec.lam, spec.cv, spec.n_requests, start)
+    else:
+        times = poisson_arrivals(rng, spec.lam, spec.n_requests, start)
+
+    reqs = []
+    for i, t in enumerate(times):
+        if spec.io_shape == "variable":
+            # §5.7 log-normal: input median ~400 (p10/p90 120/906),
+            # output median ~200 (p10/p90 68/408)
+            p_in = int(rng.lognormal(math.log(400), 0.63))
+            p_out = int(rng.lognormal(math.log(200), 0.70))
+            p_in, p_out = max(8, p_in), max(4, p_out)
+        else:
+            p_in, p_out = IO_SHAPES[spec.io_shape]
+        p_in = max(4, int(p_in * spec.scale))
+        p_out = max(2, int(p_out * spec.scale))
+        reqs.append(Request(rid=i, arrival_time=float(t), prompt_len=p_in,
+                            max_new_tokens=p_out))
+    return reqs

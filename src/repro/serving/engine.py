@@ -1,0 +1,225 @@
+"""Continuous-batching engine: FCFS admission + chunked prefill + paged KV.
+
+The scheduling loop mirrors vLLM's continuous batching: every step admits
+as many queued prompts as page capacity and the prefill token budget allow,
+prefills them (recording TTFT), then decodes one token for every running
+slot. Time is whatever the executor says it is — wall-clock (RealExecutor)
+or the TPU model clock (SimExecutor) — so the same queueing dynamics
+produce both measured and simulated C_eff(lambda) curves.
+
+Fault handling: `fail_running()` simulates a replica/slot loss; affected
+requests release pages and re-queue (bounded retries), matching the
+straggler/failure story in DESIGN §5.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.serving.kv_cache import PageManager
+from repro.serving.metrics import MetricsRegistry
+from repro.serving.request import Request, RequestState
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    max_batch: int = 8
+    page_size: int = 16
+    num_pages: int = 1024
+    max_pages_per_seq: int = 128
+    prefill_token_budget: int = 2048    # chunked-prefill budget per step
+    max_prefill_reqs: int = 8
+    max_retries: int = 2
+
+
+class Engine:
+    def __init__(self, cfg: EngineConfig, executor, metrics=None):
+        self.cfg = cfg
+        self.ex = executor
+        self.pm = PageManager(cfg.num_pages, cfg.page_size, cfg.max_batch,
+                              cfg.max_pages_per_seq)
+        self.metrics = metrics or MetricsRegistry()
+        self.t = 0.0
+        self.slot_req: Dict[int, Request] = {}
+        self.slot_tokens = np.zeros(cfg.max_batch, np.int32)
+        self.context_lens = np.zeros(cfg.max_batch, np.int32)
+        # time-weighted in-flight integral for Little's-law checks
+        self._inflight_area = 0.0
+        self._last_t = 0.0
+
+    # ------------------------------------------------------------------
+    def _advance(self, dt: float):
+        inflight = len(self.slot_req)
+        self._inflight_area += inflight * dt
+        self.t += dt
+        self._last_t = self.t
+        self.metrics.set("repro:time_seconds", self.t)
+        self.metrics.set("repro:num_requests_running", inflight)
+
+    def mean_inflight(self) -> float:
+        return self._inflight_area / max(self.t, 1e-9)
+
+    # ------------------------------------------------------------------
+    def _complete(self, slot: int):
+        req = self.slot_req.pop(slot)
+        req.state = RequestState.DONE
+        req.finish_time = self.t
+        self.pm.release(slot)
+        self.ex.reset_slot(slot)
+        self.context_lens[slot] = 0
+        m = self.metrics
+        m.inc("repro:request_success_total")
+        m.observe("repro:e2e_request_latency_seconds", req.e2e)
+        if req.ttft is not None:
+            m.observe("repro:time_to_first_token_seconds", req.ttft)
+        if req.tpot is not None:
+            m.observe("repro:time_per_output_token_seconds", req.tpot)
+
+    def fail_running(self, frac: float = 1.0, rng=None):
+        """Simulate replica loss: re-queue `frac` of running requests."""
+        rng = rng or np.random.default_rng(0)
+        slots = list(self.slot_req)
+        n = max(1, int(len(slots) * frac)) if slots else 0
+        for slot in (rng.choice(slots, n, replace=False) if n else []):
+            req = self.slot_req.pop(int(slot))
+            self.pm.release(int(slot))
+            self.ex.reset_slot(int(slot))
+            self.context_lens[int(slot)] = 0
+            req.slot = -1
+            req.retries += 1
+            self.metrics.inc("repro:request_preempted_total")
+            if req.retries <= self.cfg.max_retries:
+                req.state = RequestState.QUEUED
+                req.prefill_done = 0
+                req.tokens_out = 0
+                req.first_token_time = None
+                self._requeue.append(req)
+            else:
+                req.state = RequestState.FAILED
+                self.metrics.inc("repro:request_failure_total")
+
+    # ------------------------------------------------------------------
+    def run(self, requests: Sequence[Request], *,
+            horizon: Optional[float] = None,
+            failure_times: Sequence[float] = ()) -> List[Request]:
+        """Open-loop run; returns the request list with timings filled.
+
+        Re-entrant: calling run() again with the same list (e.g. under a
+        meter-tick horizon loop) resumes — requests already admitted or
+        finished are not re-enqueued."""
+        pending = sorted(
+            (r for r in requests
+             if r.state == RequestState.QUEUED and r.slot < 0),
+            key=lambda r: r.arrival_time)
+        queue: List[Request] = []
+        self._requeue: List[Request] = getattr(self, "_requeue", [])
+        fail_iter = iter(sorted(failure_times))
+        next_fail = next(fail_iter, None)
+        pad = lambda n, m: ((n + m - 1) // m) * m
+
+        while pending or queue or self.slot_req or self._requeue:
+            if horizon is not None and self.t >= horizon:
+                break
+            # failure injection
+            if next_fail is not None and self.t >= next_fail:
+                self.fail_running(0.5)
+                next_fail = next(fail_iter, None)
+            # arrivals
+            while pending and pending[0].arrival_time <= self.t:
+                queue.append(pending.pop(0))
+            queue = self._requeue + queue
+            self._requeue = []
+
+            # ---- admission: chunked-prefill token budget + page capacity
+            batch: List[Request] = []
+            budget = self.cfg.prefill_token_budget
+            while (queue and len(batch) < self.cfg.max_prefill_reqs and
+                   (queue[0].prompt_len <= budget or not batch) and
+                   self.pm.can_admit(queue[0].prompt_len,
+                                     queue[0].max_new_tokens)):
+                req = queue.pop(0)
+                slot = self.pm.admit(req.prompt_len, req.max_new_tokens)
+                req.slot = slot
+                req.state = RequestState.PREFILL
+                self.slot_req[slot] = req
+                batch.append(req)
+                budget -= req.prompt_len
+                self.metrics.set("repro:kv_cache_usage_perc",
+                                 self.pm.utilization())
+
+            did_work = False
+            if batch:
+                lp = pad(max(r.prompt_len for r in batch), 64)
+                B = self.cfg.max_batch
+                tokens = np.zeros((B, lp), np.int32)
+                lens = np.zeros(B, np.int32)
+                mask = np.zeros(B, bool)
+                rng = np.random.default_rng(batch[0].rid)
+                for r in batch:
+                    row = (np.asarray(r.prompt[:lp], np.int32)
+                           if r.prompt else
+                           rng.integers(0, 1000, r.prompt_len))
+                    tokens[r.slot, :r.prompt_len] = row[:r.prompt_len]
+                    lens[r.slot] = r.prompt_len
+                    mask[r.slot] = True
+                first, dt = self.ex.prefill(tokens, lens, mask,
+                                            self.pm.block_tables)
+                self._advance(dt)
+                for r in batch:
+                    r.state = RequestState.RUNNING
+                    r.tokens_out = 1
+                    r.first_token_time = self.t
+                    r.prev_token_time = self.t
+                    self.slot_tokens[r.slot] = first[r.slot]
+                    self.context_lens[r.slot] = r.prompt_len
+                    self.metrics.inc("repro:prompt_tokens_total",
+                                     r.prompt_len)
+                    self.metrics.inc("repro:generation_tokens_total", 1)
+                    if self.slot_tokens[r.slot] >= 0 and \
+                            r.tokens_out >= r.max_new_tokens:
+                        self._complete(r.slot)
+                did_work = True
+
+            # ---- decode step for all running slots
+            running = [r for r in self.slot_req.values()
+                       if r.state == RequestState.RUNNING]
+            if running:
+                B = self.cfg.max_batch
+                active = np.zeros(B, bool)
+                for r in running:
+                    active[r.slot] = True
+                try:
+                    nxt, dt = self.ex.decode(self.slot_tokens, active,
+                                             self.pm.block_tables,
+                                             context_lens=self.context_lens)
+                except TypeError:
+                    nxt, dt = self.ex.decode(self.slot_tokens, active,
+                                             self.pm.block_tables)
+                self._advance(dt)
+                ngen = 0
+                for r in running:
+                    r.tokens_out += 1
+                    ngen += 1
+                    r.prev_token_time = self.t
+                    self.slot_tokens[r.slot] = nxt[r.slot]
+                    self.context_lens[r.slot] += 1
+                    if r.tokens_out >= r.max_new_tokens:
+                        self._complete(r.slot)
+                self.metrics.inc("repro:generation_tokens_total", ngen)
+                did_work = True
+
+            if not did_work:
+                if pending:
+                    gap = max(pending[0].arrival_time - self.t, 1e-6)
+                    self._advance(gap)
+                elif queue:
+                    # queued but cannot admit (capacity) and nothing
+                    # running -> deadlock guard (shouldn't happen)
+                    raise RuntimeError(
+                        "scheduler stall: queued request cannot ever fit; "
+                        "increase num_pages/max_pages_per_seq")
+                else:
+                    break
+        return list(requests)

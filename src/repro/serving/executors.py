@@ -1,0 +1,90 @@
+"""Execution tiers behind the engine: real JAX steps or a TPU time model.
+
+RealExecutor — owns the device state (pools, seq_lens), runs the jitted
+prefill/decode closures, returns wall-clock durations.
+
+SimExecutor — same interface, zero compute: durations come from a
+calibrated step-time model (repro.simulate.step_time) so the engine's
+scheduler/queueing dynamics play out on a virtual TPU clock. Token values
+are irrelevant to cost metering (only counts and timing matter), so it
+emits zeros.
+"""
+from __future__ import annotations
+
+import time
+from typing import Optional, Tuple
+
+import numpy as np
+
+try:
+    import jax
+    import jax.numpy as jnp
+except Exception:                                    # pragma: no cover
+    jax = None
+
+
+class RealExecutor:
+    """Wall-clock tier: reduced models, real logits, real latencies."""
+
+    def __init__(self, cfg, params, *, num_pages: int, page_size: int,
+                 max_batch: int, qcfg=None, use_kernel: bool = False):
+        from repro.serving.runner import init_pools, make_step_fns
+        self.cfg = cfg
+        self.params = params
+        self.page_size = page_size
+        self.pools = init_pools(cfg, num_pages, page_size, max_batch)
+        self.seq_lens = jnp.zeros((max_batch,), jnp.int32)
+        self.prefill_fn, self.decode_fn = make_step_fns(
+            cfg, page_size, qcfg=qcfg, use_kernel=use_kernel)
+
+    def reset_slot(self, slot: int):
+        self.seq_lens = self.seq_lens.at[slot].set(0)
+
+    def prefill(self, tokens: np.ndarray, lens: np.ndarray,
+                do_mask: np.ndarray, block_tables: np.ndarray
+                ) -> Tuple[np.ndarray, float]:
+        t0 = time.perf_counter()
+        first, self.pools, self.seq_lens = self.prefill_fn(
+            self.params, self.pools, jnp.asarray(block_tables),
+            self.seq_lens, jnp.asarray(tokens), jnp.asarray(lens),
+            jnp.asarray(do_mask))
+        first = np.asarray(jax.block_until_ready(first))
+        return first, time.perf_counter() - t0
+
+    def decode(self, tokens: np.ndarray, active: np.ndarray,
+               block_tables: np.ndarray) -> Tuple[np.ndarray, float]:
+        t0 = time.perf_counter()
+        nxt, self.pools, self.seq_lens = self.decode_fn(
+            self.params, self.pools, jnp.asarray(block_tables),
+            self.seq_lens, jnp.asarray(tokens), jnp.asarray(active))
+        nxt = np.asarray(jax.block_until_ready(nxt))
+        return nxt, time.perf_counter() - t0
+
+
+class SimExecutor:
+    """Virtual-clock tier: step durations from the TPU step-time model."""
+
+    def __init__(self, cfg, step_time_model, *, page_size: int = 16):
+        self.cfg = cfg
+        self.model = step_time_model
+        self.page_size = page_size
+        self._seq_lens: Optional[np.ndarray] = None
+
+    def reset_slot(self, slot: int):
+        pass
+
+    def prefill(self, tokens: np.ndarray, lens: np.ndarray,
+                do_mask: np.ndarray, block_tables: np.ndarray
+                ) -> Tuple[np.ndarray, float]:
+        n_tok = int(lens[do_mask].sum())
+        dt = self.model.prefill_time(n_tok, int(do_mask.sum()))
+        return np.zeros(tokens.shape[0], np.int32), dt
+
+    def decode(self, tokens: np.ndarray, active: np.ndarray,
+               block_tables: np.ndarray, context_lens=None
+               ) -> Tuple[np.ndarray, float]:
+        bs = int(active.sum())
+        ctx = (float(np.mean(context_lens[active]))
+               if context_lens is not None and bs else 0.0)
+        dt = self.model.decode_time(bs, ctx)
+        return np.zeros(tokens.shape[0], np.int32), dt

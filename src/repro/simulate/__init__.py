@@ -1,0 +1,4 @@
+"""TPU-scale simulation tier: hardware book + calibrated step-time model."""
+from repro.simulate.hardware import (  # noqa: F401
+    HW_BY_NAME, HardwareGen, V5E, V5P, V6E)
+from repro.simulate.step_time import StepTimeModel  # noqa: F401

@@ -1,0 +1,53 @@
+"""TPU hardware generations (the paper's H-axis, adapted per DESIGN §3).
+
+The paper's cross-hardware pair (H100 NVL vs A100 PCIe) maps onto
+v5p-class (pricier, faster, higher-bandwidth) vs v5e (cheaper, slower) —
+same structure: the load-driven cost spread must reproduce with compressed
+magnitude on the cheaper part. fp8 is native on the v6e-class entry only;
+v5e runs fp8 through a dequant-emulation path (int8 is native everywhere),
+reproducing the paper's hardware-conditional quantization caveat.
+
+Prices are public on-demand list prices (us-central, mid-2026 era); the
+framework treats them as a replaceable price book, exactly as the paper
+treats Azure rates ("the framework's value is in the methodology, not
+specific dollar amounts", §6.9).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareGen:
+    name: str
+    peak_flops_bf16: float      # FLOP/s per chip
+    peak_flops_int8: float
+    hbm_bw: float               # bytes/s per chip
+    ici_bw: float               # bytes/s per link (one direction)
+    hbm_bytes: float            # per chip
+    price_per_chip_hr: float    # $/chip-hour on-demand
+    native_fp8: bool
+    native_int8: bool = True
+
+    def peak(self, quant: str) -> float:
+        if quant == "int8" and self.native_int8:
+            return self.peak_flops_int8
+        if quant == "fp8" and self.native_fp8:
+            return self.peak_flops_int8          # fp8 rides the 2x MXU path
+        return self.peak_flops_bf16
+
+
+V5E = HardwareGen("tpu-v5e", 197e12, 394e12, 819e9, 50e9, 16e9, 1.20,
+                  native_fp8=False)
+V5P = HardwareGen("tpu-v5p", 459e12, 918e12, 2765e9, 100e9, 95e9, 4.20,
+                  native_fp8=False)
+V6E = HardwareGen("tpu-v6e", 918e12, 1836e12, 1640e9, 100e9, 32e9, 2.70,
+                  native_fp8=True)
+
+HW_BY_NAME = {h.name: h for h in (V5E, V5P, V6E)}
+
+# Pseudo-hardware entry for the CPU real-execution tier: throughput is
+# measured, only the price matters for C_eff shape validation.
+CPU_NODE = HardwareGen("cpu-node", 1e12, 1e12, 5e10, 1e9, 64e9, 1.00,
+                       native_fp8=False, native_int8=False)
+HW_BY_NAME["cpu-node"] = CPU_NODE

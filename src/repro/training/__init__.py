@@ -1,0 +1,7 @@
+"""Training substrate: optimizers, step builder, data, checkpoints."""
+from repro.training.checkpoint import CheckpointManager  # noqa: F401
+from repro.training.compression import (  # noqa: F401
+    compress_int8, decompress_int8, error_feedback_update)
+from repro.training.data import SyntheticDataLoader  # noqa: F401
+from repro.training.optimizer import adamw, adamw8bit  # noqa: F401
+from repro.training.train_step import build_train_step  # noqa: F401

@@ -1,0 +1,34 @@
+"""Gradient compression for the DP all-reduce: int8 + error feedback.
+
+Classic EF-SGD scheme: transmit q = Q(g + e) in int8 with a per-tensor
+scale, keep e' = (g + e) - deQ(q) locally. Halving (vs bf16) or quartering
+(vs fp32) the DP all-reduce bytes directly shrinks the roofline's
+collective term on gradient-bound training steps. Used inside shard_map
+(see tests/test_compression.py for the psum-of-compressed demo).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_int8(g: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    gf = g.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decompress_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def error_feedback_update(g: jnp.ndarray, err: jnp.ndarray
+                          ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Returns (q, scale, new_err) for one tensor."""
+    corrected = g.astype(jnp.float32) + err
+    q, scale = compress_int8(corrected)
+    new_err = corrected - decompress_int8(q, scale)
+    return q, scale, new_err

@@ -1,0 +1,106 @@
+"""Cost-model invariants (paper Eq. 1-4), property-based via hypothesis."""
+import math
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYP = True
+except ImportError:                                       # pragma: no cover
+    HAVE_HYP = False
+
+from repro.core import (c_eff, c_naive, underutilization_penalty,
+                        utilization, interp_c_eff, crossover_lambda,
+                        crossover_table)
+from repro.core.pricing import API_TIERS, APITier
+from repro.core.records import RunRecord
+
+
+def _rec(lam, tps, price=1.2, **kw):
+    base = dict(config="t", model="m", hw="h", n_chips=1, quant="bf16",
+                engine="sim", io_shape="chat", n_requests=10, n_completed=10,
+                window_s=10.0, prompt_tps=0.0, ttft_p50_ms=1, ttft_p90_ms=1,
+                ttft_p99_ms=1, tpot_p50_ms=1, tpot_p99_ms=1, e2e_p50_ms=1,
+                e2e_p99_ms=1, mean_inflight=1.0, price_per_hr=price,
+                c_eff=c_eff(price, tps), theta_max=0.0)
+    base.update(kw)
+    return RunRecord(lam=lam, tps=tps, **base)
+
+
+def test_penalty_is_exactly_one_over_u():
+    """The paper's central identity: C_eff/C_naive == 1/U, by construction."""
+    price, tmax = 6.98, 6238.0
+    for tps in (255.4, 2501.8, 6238.0):
+        lhs = c_eff(price, tps) / c_naive(price, tmax)
+        rhs = underutilization_penalty(tps, tmax)
+        assert math.isclose(lhs, rhs, rel_tol=1e-12)
+
+
+def test_paper_headline_numbers():
+    """Llama 3.1 8B FP16 on one H100 at $6.98/hr (paper Table 3):
+    6238 tok/s -> $0.311/MTok; 255 tok/s at lambda=1 -> $7.60 (24.4x)."""
+    assert math.isclose(c_eff(6.98, 6238.0), 0.3108, rel_tol=1e-3)
+    assert math.isclose(c_eff(6.98, 255.0), 7.603, rel_tol=1e-3)
+    assert math.isclose(underutilization_penalty(255.0, 6238.0), 24.46,
+                        rel_tol=1e-3)
+
+
+if HAVE_HYP:
+    pos = st.floats(min_value=1e-3, max_value=1e9, allow_nan=False)
+
+    @given(price=pos, tps=pos)
+    @settings(max_examples=200, deadline=None)
+    def test_c_eff_properties(price, tps):
+        c = c_eff(price, tps)
+        assert c > 0
+        # linear in price, inverse in throughput
+        assert math.isclose(c_eff(2 * price, tps), 2 * c, rel_tol=1e-9)
+        assert math.isclose(c_eff(price, 2 * tps), c / 2, rel_tol=1e-9)
+
+    @given(tps=pos, tmax=pos)
+    @settings(max_examples=200, deadline=None)
+    def test_utilization_bounds(tps, tmax):
+        u = utilization(min(tps, tmax), tmax)
+        assert 0 <= u <= 1 + 1e-12
+        assert underutilization_penalty(min(tps, tmax), tmax) >= 1 - 1e-12
+
+    @given(st.lists(st.tuples(
+        st.floats(min_value=0.1, max_value=500),
+        st.floats(min_value=1.0, max_value=1e5)),
+        min_size=2, max_size=8, unique_by=lambda t: t[0]))
+    @settings(max_examples=100, deadline=None)
+    def test_interp_within_envelope(pts):
+        recs = [_rec(lam, tps) for lam, tps in pts]
+        lams = sorted(r.lam for r in recs)
+        mid = math.sqrt(lams[0] * lams[-1])
+        v = interp_c_eff(recs, mid)
+        lo = min(r.c_eff for r in recs)
+        hi = max(r.c_eff for r in recs)
+        assert lo - 1e-9 <= v <= hi + 1e-9
+
+
+def test_crossover_monotone_curve():
+    # monotone decreasing C_eff: crossing 1.0 between lam=2 (c=2) & lam=8
+    recs = [_rec(1, 100), _rec(2, 500), _rec(8, 4000), _rec(32, 8000)]
+    # price 1.2 -> c_eff: 3.33, 0.67, 0.083, 0.042
+    res = crossover_lambda(recs, 1.0)
+    assert res is not None
+    lam, extrap = res
+    assert 1 < lam < 2 and not extrap
+    # never crosses an impossibly cheap tier
+    assert crossover_lambda(recs, 1e-9) is None
+
+
+def test_crossover_table_gated():
+    recs = [_rec(1, 100), _rec(10, 1000)]
+    with pytest.raises(ValueError):
+        crossover_table(recs)       # must refuse without SLO-mismatch ack
+    rows = crossover_table(recs, accept_slo_mismatch=True)
+    assert {r["tier"] for r in rows} == set(API_TIERS)
+
+
+def test_api_blended_price():
+    t = APITier("x", 5.0, 30.0)
+    # paper §6.3: 100:500 shape -> ~$25.8-26/MTok aggregate on output basis
+    assert math.isclose(t.blended(100, 500), (100 * 5 + 500 * 30) / 500,
+                        rel_tol=1e-12)

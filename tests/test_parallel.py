@@ -1,0 +1,141 @@
+"""Sharding-rule resolution + multi-device features (via subprocess with
+forced host devices, since the test process owns a single CPU device)."""
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.parallel.sharding import (DEFAULT, logical_spec, param_spec_tree,
+                                     shardctx, zero1_spec)
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def _mesh22():
+    # a fake mesh over 1 device can't exist; use abstract reasoning via the
+    # subprocess for real meshes and pure-logic checks here with mesh=None.
+    return None
+
+
+def test_logical_spec_no_mesh_is_empty():
+    assert logical_spec((4, 8), ("batch", "ff")) == P()
+
+
+def _run_sub(code: str) -> str:
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               PYTHONPATH=str(REPO / "src"))
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env,
+                         timeout=600)
+    assert out.returncode == 0, out.stdout + out.stderr
+    return out.stdout
+
+
+def test_logical_spec_divisibility_drop():
+    out = _run_sub("""
+        import jax
+        from jax.sharding import PartitionSpec as P
+        from repro.parallel.sharding import logical_spec
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        # ff divisible -> sharded; heads=6 not divisible by 4 -> dropped
+        assert logical_spec((8, 16), (None, "ff"), mesh) == P(None, "model")
+        assert logical_spec((8, 6), (None, "qheads"), mesh) == P()
+        # batch takes both axes' product when divisible
+        assert logical_spec((8, 4), ("batch", None), mesh) == P("data")
+        # axis used at most once
+        s = logical_spec((4, 16, 16), ("batch", "ff", "vocab"), mesh)
+        assert s == P("data", "model")
+        print("ok")
+    """)
+    assert "ok" in out
+
+
+def test_zero1_and_param_specs():
+    out = _run_sub("""
+        import jax
+        from jax.sharding import PartitionSpec as P
+        from repro.parallel.sharding import param_spec_tree, zero1_spec
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        import jax.numpy as jnp
+        params = {"blocks": [{"attn": {"wq": jnp.zeros((8, 16))},
+                              "mlp": {"up": jnp.zeros((8, 16)),
+                                      "down": jnp.zeros((16, 8))}}],
+                  "embed": jnp.zeros((32, 8)), "lm_head": jnp.zeros((8, 32))}
+        specs = param_spec_tree(params, mesh)
+        assert specs["blocks"][0]["mlp"]["up"] == P(None, "model")
+        assert specs["blocks"][0]["mlp"]["down"] == P("model")
+        assert specs["lm_head"] == P(None, "model")
+        z = zero1_spec(P(None, "model"), (8, 16), mesh)
+        assert z == P("data", "model")
+        print("ok")
+    """)
+    assert "ok" in out
+
+
+def test_pipeline_parallel_matches_sequential():
+    out = _run_sub("""
+        import jax, jax.numpy as jnp
+        from repro.parallel.pipeline import pipeline_apply
+        mesh = jax.make_mesh((4,), ("stage",))
+        S, NM, MB, D = 4, 8, 2, 16
+        key = jax.random.PRNGKey(0)
+        Ws = jax.random.normal(key, (S, D, D)) * 0.3
+        params = {"w": Ws}
+        def stage_fn(p, x):
+            return jnp.tanh(x @ p["w"])
+        x = jax.random.normal(jax.random.PRNGKey(1), (NM, MB, D))
+        got = pipeline_apply(stage_fn, params, x, mesh)
+        want = x
+        for s in range(S):
+            want = jnp.tanh(want @ Ws[s])
+        import numpy as np
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5)
+        print("ok")
+    """)
+    assert "ok" in out
+
+
+def test_flash_decoding_partial_softmax_combine():
+    out = _run_sub("""
+        import jax, jax.numpy as jnp, numpy as np
+        from functools import partial
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+        from repro.models.attention import (decode_attention,
+                                            decode_attention_partial)
+        from repro.parallel.collectives import combine_partial_softmax
+        mesh = jax.make_mesh((8,), ("kv",))
+        B, Hq, Hkv, S, D = 2, 8, 2, 64, 32
+        ks = jax.random.split(jax.random.PRNGKey(0), 3)
+        q = jax.random.normal(ks[0], (B, 1, Hq, D), jnp.float32)
+        kc = jax.random.normal(ks[1], (B, Hkv, S, D), jnp.float32)
+        vc = jax.random.normal(ks[2], (B, Hkv, S, D), jnp.float32)
+        cache_len = jnp.array([37, 64], jnp.int32)
+        ref = decode_attention(q, kc, vc, cache_len)
+
+        def shard_fn(q, kc, vc, cache_len):
+            i = jax.lax.axis_index("kv")
+            s_loc = kc.shape[2]
+            pos = i * s_loc + jnp.arange(s_loc)
+            valid = pos[None, :] < cache_len[:, None]
+            num, den, m = decode_attention_partial(q, kc, vc, valid)
+            out = combine_partial_softmax(num, den, m, "kv")
+            return out.astype(q.dtype)
+
+        f = shard_map(shard_fn, mesh=mesh,
+                      in_specs=(P(), P(None, None, "kv"),
+                                P(None, None, "kv"), P()),
+                      out_specs=P(), check_rep=False)
+        got = f(q, kc, vc, cache_len)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   rtol=2e-4, atol=2e-4)
+        print("ok")
+    """)
+    assert "ok" in out

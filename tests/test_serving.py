@@ -1,0 +1,118 @@
+"""Serving-engine invariants: completion, token conservation, Little's law,
+page accounting, failure re-queue, chunked-prefill budget."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.models import init_params
+from repro.serving import (ArrivalSpec, Engine, EngineConfig, RealExecutor,
+                           SimExecutor, synth_requests)
+from repro.serving.kv_cache import PageManager
+from repro.simulate import StepTimeModel, V5E
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYP = True
+except ImportError:                                       # pragma: no cover
+    HAVE_HYP = False
+
+
+def _sim_engine(max_batch=64, num_pages=4096, **ecfg_kw):
+    cfg = get_config("llama31-8b")
+    stm = StepTimeModel(cfg, V5E)
+    return Engine(EngineConfig(max_batch=max_batch, page_size=16,
+                               num_pages=num_pages, max_pages_per_seq=64,
+                               **ecfg_kw), SimExecutor(cfg, stm))
+
+
+def test_all_requests_complete_and_tokens_conserved():
+    eng = _sim_engine()
+    reqs = synth_requests(ArrivalSpec(lam=10, n_requests=50, seed=3))
+    eng.run(reqs)
+    assert all(r.finish_time is not None for r in reqs)
+    want = sum(r.max_new_tokens for r in reqs)
+    got = eng.metrics.get("repro:generation_tokens_total")
+    assert got == want
+    assert eng.metrics.get("repro:request_success_total") == 50
+    # all pages returned
+    assert eng.pm.free_pages == eng.pm.num_pages - 1
+    assert len(eng.pm.free_slots) == eng.cfg.max_batch
+
+
+def test_littles_law():
+    """Time-averaged in-flight ~= lambda_effective * mean residence."""
+    eng = _sim_engine(max_batch=128, num_pages=16384)
+    reqs = synth_requests(ArrivalSpec(lam=5, n_requests=300, seed=0))
+    eng.run(reqs)
+    done = [r for r in reqs if r.finish_time is not None]
+    lam_eff = len(done) / eng.t
+    W = float(np.mean([r.e2e for r in done]))
+    N = eng.mean_inflight()
+    assert abs(N - lam_eff * W) / max(N, 1e-9) < 0.15, (N, lam_eff * W)
+
+
+def test_ttft_ordering_and_latency_growth():
+    """TTFT includes queueing; higher lambda => higher p99 TTFT."""
+    p99 = {}
+    for lam in (1.0, 50.0):
+        eng = _sim_engine()
+        reqs = synth_requests(ArrivalSpec(lam=lam, n_requests=100, seed=1))
+        eng.run(reqs)
+        done = [r for r in reqs if r.ttft is not None]
+        for r in done:
+            assert r.first_token_time >= r.arrival_time
+            assert r.finish_time >= r.first_token_time
+        p99[lam] = np.percentile([r.ttft for r in done], 99)
+    assert p99[50.0] > p99[1.0]
+
+
+def test_failure_requeue_completes():
+    eng = _sim_engine()
+    reqs = synth_requests(ArrivalSpec(lam=20, n_requests=40, seed=2))
+    eng.run(reqs, failure_times=[0.5, 1.5])
+    assert eng.metrics.get("repro:request_preempted_total") > 0
+    # bounded retries: every request either finished or exhausted retries
+    for r in reqs:
+        assert r.finish_time is not None or r.retries > eng.cfg.max_retries
+    done = [r for r in reqs if r.finish_time is not None]
+    assert len(done) >= 38          # at most a couple lost to retry budget
+    assert eng.pm.free_pages == eng.pm.num_pages - 1
+
+
+def test_real_executor_roundtrip(rng):
+    cfg = reduced("llama31-8b")
+    params = init_params(rng, cfg)
+    ex = RealExecutor(cfg, params, num_pages=128, page_size=8, max_batch=4)
+    eng = Engine(EngineConfig(max_batch=4, page_size=8, num_pages=128,
+                              max_pages_per_seq=16), ex)
+    reqs = synth_requests(ArrivalSpec(lam=50, n_requests=6, scale=0.02,
+                                      seed=4))
+    eng.run(reqs)
+    assert all(r.finish_time is not None for r in reqs)
+    assert eng.metrics.get("repro:generation_tokens_total") == \
+        sum(r.max_new_tokens for r in reqs)
+
+
+if HAVE_HYP:
+    @given(st.lists(st.tuples(st.integers(1, 60), st.integers(1, 40)),
+                    min_size=1, max_size=25),
+           st.integers(0, 10_000))
+    @settings(max_examples=25, deadline=None)
+    def test_page_manager_never_leaks(lens, seed):
+        pm = PageManager(num_pages=128, page_size=8, max_batch=8,
+                         max_pages_per_seq=16)
+        rng = np.random.default_rng(seed)
+        live = []
+        for prompt, new in lens:
+            if pm.can_admit(prompt, new):
+                slot = pm.admit(prompt, new)
+                assert slot is not None
+                live.append(slot)
+            if live and rng.random() < 0.5:
+                pm.release(live.pop(rng.integers(len(live))))
+        for s in live:
+            pm.release(s)
+        assert pm.free_pages == pm.num_pages - 1
+        assert sorted(pm.free_slots) == list(range(8))
+        assert pm.utilization() == 0.0

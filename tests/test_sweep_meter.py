@@ -1,0 +1,128 @@
+"""Lambda-sweep protocol + live meter: the paper's claims reproduce in-sim."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import (CostMeter, LAMBDA_LADDER, lambda_sweep,
+                        slo_operating_point, stability_table)
+from repro.core.sweep import run_point
+from repro.serving import ArrivalSpec, Engine, EngineConfig, SimExecutor
+from repro.simulate import StepTimeModel, V5E, V5P
+
+
+def _factory(arch="llama31-8b", hw=V5E, quant="bf16", n_chips=1,
+             max_batch=128):
+    cfg = get_config(arch)
+
+    def make():
+        stm = StepTimeModel(cfg, hw, n_chips=n_chips, quant=quant)
+        return Engine(EngineConfig(max_batch=max_batch, page_size=16,
+                                   num_pages=32768, max_pages_per_seq=64),
+                      SimExecutor(cfg, stm))
+    return make
+
+
+def _sweep(arch="llama31-8b", hw=V5E, quant="bf16", ladder=(1, 5, 25, 100),
+           price=1.20, n_chips=1):
+    return lambda_sweep(
+        _factory(arch, hw, quant, n_chips), ladder=ladder,
+        requests_per_point=lambda lam: int(min(600, max(120, 20 * lam))),
+        warmup_per_point=lambda lam: 0,
+        config=arch, model=arch, hw=hw.name, price_per_hr=price * n_chips,
+        n_chips=n_chips, quant=quant, engine_kind="sim")
+
+
+def test_cost_cliff_shape():
+    """Paper Fig.1: C_eff falls steeply then flattens; penalty collapses
+    toward 1 at saturation."""
+    recs = _sweep()
+    ceffs = [r.c_eff for r in recs]
+    assert ceffs[0] > 3 * ceffs[-1]              # the cliff
+    assert recs[0].penalty > 3.0                 # idle penalty
+    assert abs(recs[-1].penalty - 1.0) < 0.25    # saturation -> ~1x
+    # monotone non-increasing cost along the ladder
+    for a, b in zip(ceffs, ceffs[1:]):
+        assert b <= a * 1.05
+
+
+def test_penalty_equals_one_over_u():
+    recs = _sweep()
+    for r in recs:
+        assert math.isclose(r.penalty, 1.0 / r.util, rel_tol=1e-9)
+
+
+def test_cross_hardware_spread_compression():
+    """Paper §5.9: the cheaper/slower part shows a NARROWER idle-to-sat
+    spread. v5e (cheap, slow) vs v5p (fast, pricey)."""
+    spread = {}
+    for hw, price in ((V5E, 1.20), (V5P, 4.20)):
+        recs = _sweep(hw=hw, price=price)
+        spread[hw.name] = max(r.c_eff for r in recs) / \
+            min(r.c_eff for r in recs)
+    assert spread["tpu-v5p"] > spread["tpu-v5e"], spread
+    # both still show the order-of-magnitude-class cliff
+    assert spread["tpu-v5e"] > 3
+
+
+def test_moe_fp8_asymmetry():
+    """Paper §5.3 TPU analogue: the int8/fp8-style weight-halving helps the
+    memory-bound MoE (qwen3-30b-a3b) more than the dense 8B."""
+    gain = {}
+    for arch in ("llama31-8b", "qwen3-30b-a3b"):
+        sat = {}
+        for quant in ("bf16", "int8"):
+            recs = _sweep(arch=arch, quant=quant, ladder=(25, 100))
+            sat[quant] = max(r.tps for r in recs)
+        gain[arch] = sat["int8"] / sat["bf16"]
+    assert gain["qwen3-30b-a3b"] > gain["llama31-8b"], gain
+
+
+def test_slo_point_and_premium():
+    recs = _sweep(ladder=(1, 5, 10, 25, 50, 100))
+    res = slo_operating_point(recs, ttft_p99_ms=1000.0, tpot_p99_ms=120.0)
+    assert res.premium >= 1.0
+    if res.lam_max is not None:
+        assert res.c_at_sla >= res.c_sat
+
+
+def test_meter_agrees_with_engine_ground_truth():
+    """§6.7 'validation of agreement': the Prometheus-scraping meter must
+    reproduce the engine's own windowed cost within float noise."""
+    cfg = get_config("llama31-8b")
+    stm = StepTimeModel(cfg, V5E)
+    eng = Engine(EngineConfig(max_batch=128, page_size=16, num_pages=32768,
+                              max_pages_per_seq=64), SimExecutor(cfg, stm))
+    meter = CostMeter(1.20, scrape=lambda: eng.metrics.render())
+    from repro.serving import synth_requests
+    reqs = synth_requests(ArrivalSpec(lam=10, n_requests=150, seed=0))
+    meter.tick()
+    horizon = 0.0
+    while any(r.finish_time is None for r in reqs):
+        horizon += 5.0
+        eng.run(reqs, horizon=horizon)
+        meter.tick()
+        if horizon > 3600:
+            break
+    total_tok = eng.metrics.get("repro:generation_tokens_total")
+    metered_tok = sum(s.tokens for s in meter.samples)
+    assert abs(metered_tok - total_tok) <= 1e-6
+    summ = meter.summary()
+    truth = 1.20 * 1e6 / (3600.0 * total_tok / eng.t)
+    assert math.isclose(summ["time_weighted_avg"], truth, rel_tol=1e-6)
+    assert summ["worst_minute"] >= summ["best_minute"]
+
+
+def test_stability_cv_small_for_repeats():
+    """§5.8: repeat runs with distinct seeds reproduce TPS/C_eff tightly."""
+    runs = {}
+    for lam in (5.0,):
+        rs = []
+        for seed in range(3):
+            spec = ArrivalSpec(lam=lam, n_requests=150, seed=seed)
+            rec = run_point(_factory(), spec, price_per_hr=1.20)
+            rs.append(rec)
+        runs[lam] = rs
+    table = stability_table(runs)
+    assert table[0]["c_eff_cv_pct"] < 5.0
