@@ -1,0 +1,83 @@
+"""Engine scheduler throughput: the fast-forward (event-driven) clock vs
+the per-token reference loop on the sim tier (ISSUE 1 perf trajectory).
+
+Reported per (lambda, mode): wall seconds for the measured point,
+simulated-requests-per-wall-second, scheduler-steps-per-second (simulated
+decode steps retired per wall second), iterations, fast-forward jumps,
+and the speedup vs the step-by-step baseline. Target: >=10x on the
+lambda=200 chat-shape paper-scale point. Timings are medians over
+`REPS` interleaved repetitions (the request-synthesis cost is excluded —
+this benchmark tracks the scheduler, not workload generation).
+"""
+from __future__ import annotations
+
+import json
+import statistics
+import time
+from pathlib import Path
+
+from repro.core.sweep import SimEngineSpec
+from repro.serving import ArrivalSpec, synth_requests
+
+from benchmarks.common import emit
+
+BENCH_JSON = Path(__file__).resolve().parent.parent / \
+    "BENCH_engine_throughput.json"
+
+REPS = 3
+# (lambda, paper-scale request count): 60*lam clamped [500, 6000] (§5.8)
+POINTS = ((5, 500), (50, 3000), (200, 6000))
+
+
+def _factory(fast_forward: bool) -> SimEngineSpec:
+    return SimEngineSpec("llama31-8b", hw="tpu-v5p", max_batch=256,
+                         num_pages=131072, max_pages_per_seq=512,
+                         prefill_token_budget=8192,
+                         fast_forward=fast_forward)
+
+
+def _measure(fast_forward: bool, lam: float, n_requests: int):
+    walls, eng = [], None
+    for _ in range(REPS):
+        eng = _factory(fast_forward)()
+        reqs = synth_requests(ArrivalSpec(lam=lam, n_requests=n_requests,
+                                          seed=0))
+        t0 = time.perf_counter()
+        eng.run(reqs)
+        walls.append(time.perf_counter() - t0)
+    done = eng.metrics.get("repro:request_success_total")
+    return statistics.median(walls), done, eng
+
+
+def run(quick: bool = False):
+    rows = []
+    for lam, n in POINTS:
+        if quick:
+            n = max(300, n // 4)
+        wall = {}
+        for ff in (False, True):
+            w, done, eng = _measure(ff, lam, n)
+            wall[ff] = w
+            rows.append({
+                "lam": lam, "n_requests": n,
+                "mode": "fast_forward" if ff else "reference",
+                "wall_s": w,
+                "sim_req_per_wall_s": done / w,
+                "sched_steps_per_s": eng.n_decode_steps / w,
+                "iterations": eng.n_iterations,
+                "ff_jumps": eng.n_ff_jumps,
+                "speedup_vs_reference": wall[False] / w,
+            })
+    emit("engine_throughput", rows)
+    worst = min(r["speedup_vs_reference"] for r in rows
+                if r["mode"] == "fast_forward" and r["lam"] == 200)
+    BENCH_JSON.write_text(json.dumps(
+        {"bench": "engine_throughput", "quick": quick,
+         "lambda200_speedup_vs_reference": worst, "target": 10.0,
+         "rows": rows}, indent=2) + "\n")
+    print(f"# lambda=200 fast-forward speedup: {worst:.1f}x "
+          f"(target >=10x); trajectory -> {BENCH_JSON.name}")
+
+
+if __name__ == "__main__":
+    run()

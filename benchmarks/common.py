@@ -16,11 +16,10 @@ import dataclasses
 from pathlib import Path
 from typing import Callable, Dict, List, Optional, Sequence
 
-from repro.configs import get_config
-from repro.core import lambda_sweep
+from repro.core import SimEngineSpec, lambda_sweep, parallel_sweep
 from repro.core.records import RunRecord, write_csv
-from repro.serving import Engine, EngineConfig, SimExecutor
-from repro.simulate import HW_BY_NAME, StepTimeModel
+from repro.serving import Engine
+from repro.simulate import HW_BY_NAME
 
 RESULTS = Path(__file__).resolve().parent.parent / "results" / "bench"
 
@@ -47,24 +46,22 @@ CONFIGS = (
 
 def engine_factory(bc: BenchConfig, hw_name: str = "tpu-v5p",
                    max_batch: int = 256) -> Callable[[], Engine]:
-    cfg = get_config(bc.arch)
-    hw = HW_BY_NAME[hw_name]
-
-    def make():
-        stm = StepTimeModel(cfg, hw, n_chips=bc.n_chips, quant=bc.quant)
-        return Engine(EngineConfig(max_batch=max_batch, page_size=16,
-                                   num_pages=131072, max_pages_per_seq=512,
-                                   prefill_token_budget=8192),
-                      SimExecutor(cfg, stm))
-    return make
+    """Picklable factory (SimEngineSpec) so any bench sweep can fan its
+    ladder points across a process pool via `sweep_config(parallel=True)`."""
+    return SimEngineSpec(bc.arch, hw=hw_name, quant=bc.quant,
+                         n_chips=bc.n_chips, max_batch=max_batch,
+                         page_size=16, num_pages=131072,
+                         max_pages_per_seq=512, prefill_token_budget=8192)
 
 
 def sweep_config(bc: BenchConfig, *, hw_name: str = "tpu-v5p",
                  ladder: Sequence[float] = LADDER, io_shape: str = "chat",
                  process: str = "poisson", cv: float = 1.0,
-                 seed: int = 0, n_scale: float = 1.0) -> List[RunRecord]:
+                 seed: int = 0, n_scale: float = 1.0,
+                 parallel: bool = False) -> List[RunRecord]:
     hw = HW_BY_NAME[hw_name]
-    return lambda_sweep(
+    driver = parallel_sweep if parallel else lambda_sweep
+    return driver(
         engine_factory(bc, hw_name), ladder=ladder, io_shape=io_shape,
         process=process, cv=cv, seed=seed,
         requests_per_point=lambda lam: int(

@@ -7,6 +7,7 @@ registry in __init__.py maps --arch ids to ModelConfig builders.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Optional, Sequence, Tuple
 
 # ---------------------------------------------------------------------------
@@ -150,6 +151,7 @@ class ModelConfig:
         return tuple(out)
 
 
+@functools.lru_cache(maxsize=None)
 def _param_count(cfg: ModelConfig, active_only: bool) -> int:
     """Analytic parameter count; active_only counts top-k experts only."""
     d, hd = cfg.d_model, cfg.resolved_head_dim

@@ -21,4 +21,5 @@ from repro.core.pricing import API_TIERS, APITier, chip_hour_price  # noqa: F401
 from repro.core.records import RunRecord, read_csv, write_csv  # noqa: F401
 from repro.core.slo import SLOResult, slo_operating_point  # noqa: F401
 from repro.core.stability import cv, stability_table  # noqa: F401
-from repro.core.sweep import LAMBDA_LADDER, lambda_sweep, run_point  # noqa: F401
+from repro.core.sweep import (  # noqa: F401
+    LAMBDA_LADDER, SimEngineSpec, lambda_sweep, parallel_sweep, run_point)

@@ -5,11 +5,26 @@ measured run; when the server is queue-limited the statistics use
 completed-requests-within-window, exactly as the paper does at lambda>=50.
 The sweep emits RunRecords; theta_max is back-filled as the max measured
 TPS across the ladder (raw saturation, no SLO bound — §4.4).
+
+Two drivers share the same per-point protocol:
+
+* `lambda_sweep`  — serial, any engine factory.
+* `parallel_sweep` — independent (lambda, config) points fanned across a
+  `concurrent.futures` process pool. Per-point seeds are derived exactly
+  as in the serial path (`seed + int(lam * 1000)`), so the two drivers
+  return identical records in ladder order. The engine factory must be
+  picklable (use `SimEngineSpec`); if the pool cannot be used (factory
+  not picklable, pool start failure) the sweep silently falls back to
+  the serial path — results are the same either way.
 """
 from __future__ import annotations
 
+import concurrent.futures
 import dataclasses
-from typing import Callable, List, Optional, Sequence
+import multiprocessing
+import pickle
+import sys
+from typing import Callable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -20,6 +35,49 @@ from repro.serving.engine import Engine, EngineConfig
 
 # The paper's 7-point ladder.
 LAMBDA_LADDER = (1, 5, 10, 25, 50, 100, 200)
+
+
+# paper §5.8: prompts = 60*lam clamped [500,6000]; module-level (not
+# lambdas) so the defaults survive pickling into pool workers.
+def default_requests_per_point(lam: float) -> int:
+    return int(min(6000, max(500, 60 * lam)))
+
+
+def default_warmup_per_point(lam: float) -> int:
+    return int(max(100, 30 * lam) // 10)
+
+
+@dataclasses.dataclass(frozen=True)
+class SimEngineSpec:
+    """Picklable sim-tier engine factory (the unit parallel_sweep ships to
+    pool workers; also handy anywhere a closure-free factory is needed)."""
+    arch: str
+    hw: str = "tpu-v5e"
+    quant: str = "bf16"
+    n_chips: int = 1
+    max_batch: int = 128
+    page_size: int = 16
+    num_pages: int = 32768
+    max_pages_per_seq: int = 64
+    prefill_token_budget: int = 2048
+    max_prefill_reqs: int = 8
+    fast_forward: bool = True
+
+    def __call__(self) -> Engine:
+        from repro.configs import get_config
+        from repro.serving.executors import SimExecutor
+        from repro.simulate import HW_BY_NAME, StepTimeModel
+        cfg = get_config(self.arch)
+        stm = StepTimeModel(cfg, HW_BY_NAME[self.hw], n_chips=self.n_chips,
+                            quant=self.quant)
+        ecfg = EngineConfig(
+            max_batch=self.max_batch, page_size=self.page_size,
+            num_pages=self.num_pages,
+            max_pages_per_seq=self.max_pages_per_seq,
+            prefill_token_budget=self.prefill_token_budget,
+            max_prefill_reqs=self.max_prefill_reqs,
+            fast_forward=self.fast_forward)
+        return Engine(ecfg, SimExecutor(cfg, stm))
 
 
 def _pct(vals, q):
@@ -39,11 +97,8 @@ def run_point(engine_factory: Callable[[], Engine], spec: ArrivalSpec, *,
         wspec = dataclasses.replace(spec, n_requests=warmup,
                                     seed=spec.seed + 7777)
         eng.run(synth_requests(wspec))
-        # reset clock + metrics, keep compiled state warm
-        eng.t = 0.0
-        eng._inflight_area = 0.0
-        eng.metrics.counters.clear()
-        eng.metrics.hists.clear()
+        # reset clock + metrics (gauges included), keep compiled state warm
+        eng.reset_measurement()
 
     reqs = synth_requests(spec)
     eng.run(reqs, horizon=horizon, failure_times=failure_times)
@@ -71,6 +126,31 @@ def run_point(engine_factory: Callable[[], Engine], spec: ArrivalSpec, *,
     return rec
 
 
+def _ladder_specs(ladder, *, io_shape, scale, requests_per_point,
+                  warmup_per_point, seed, process, cv
+                  ) -> List[Tuple[ArrivalSpec, int]]:
+    """Per-point arrival specs + warmup counts, shared by both drivers so
+    the deterministic seed derivation can never diverge."""
+    if requests_per_point is None:
+        requests_per_point = default_requests_per_point
+    if warmup_per_point is None:
+        warmup_per_point = default_warmup_per_point
+    out = []
+    for lam in ladder:
+        spec = ArrivalSpec(lam=lam, n_requests=requests_per_point(lam),
+                           io_shape=io_shape, process=process, cv=cv,
+                           seed=seed + int(lam * 1000), scale=scale)
+        out.append((spec, warmup_per_point(lam)))
+    return out
+
+
+def _backfill_theta(records: List[RunRecord]) -> List[RunRecord]:
+    theta_max = max(r.tps for r in records)
+    for r in records:
+        r.theta_max = theta_max
+    return records
+
+
 def lambda_sweep(engine_factory, *, ladder: Sequence[float] = LAMBDA_LADDER,
                  io_shape: str = "chat", scale: float = 1.0,
                  requests_per_point: Callable[[float], int] = None,
@@ -79,22 +159,68 @@ def lambda_sweep(engine_factory, *, ladder: Sequence[float] = LAMBDA_LADDER,
                  process: str = "poisson", cv: float = 1.0,
                  **record_kw) -> List[RunRecord]:
     """Full ladder sweep; back-fills theta_max = max TPS across points."""
-    # paper §5.8: prompts = 60*lam clamped [500,6000]; here scaled down for
-    # the CPU tier via requests_per_point.
-    if requests_per_point is None:
-        requests_per_point = lambda lam: int(min(6000, max(500, 60 * lam)))
-    if warmup_per_point is None:
-        warmup_per_point = lambda lam: int(max(100, 30 * lam) // 10)
+    specs = _ladder_specs(ladder, io_shape=io_shape, scale=scale,
+                          requests_per_point=requests_per_point,
+                          warmup_per_point=warmup_per_point, seed=seed,
+                          process=process, cv=cv)
+    records = [run_point(engine_factory, spec, warmup=warm, horizon=horizon,
+                         **record_kw)
+               for spec, warm in specs]
+    return _backfill_theta(records)
 
-    records = []
-    for lam in ladder:
-        spec = ArrivalSpec(lam=lam, n_requests=requests_per_point(lam),
-                           io_shape=io_shape, process=process, cv=cv,
-                           seed=seed + int(lam * 1000), scale=scale)
-        rec = run_point(engine_factory, spec, warmup=warmup_per_point(lam),
-                        horizon=horizon, **record_kw)
-        records.append(rec)
-    theta_max = max(r.tps for r in records)
-    for r in records:
-        r.theta_max = theta_max
-    return records
+
+def _run_point_task(payload) -> RunRecord:
+    """Top-level pool-worker entry (must be importable under spawn)."""
+    engine_factory, spec, warmup, horizon, record_kw = payload
+    return run_point(engine_factory, spec, warmup=warmup, horizon=horizon,
+                     **record_kw)
+
+
+def parallel_sweep(engine_factory, *,
+                   ladder: Sequence[float] = LAMBDA_LADDER,
+                   io_shape: str = "chat", scale: float = 1.0,
+                   requests_per_point: Callable[[float], int] = None,
+                   warmup_per_point: Callable[[float], int] = None,
+                   horizon: Optional[float] = None, seed: int = 0,
+                   process: str = "poisson", cv: float = 1.0,
+                   max_workers: Optional[int] = None,
+                   mp_context: Optional[str] = None,
+                   **record_kw) -> List[RunRecord]:
+    """`lambda_sweep` with independent ladder points fanned across a
+    process pool; records come back in ladder order with identical values
+    (same deterministic per-point seeds, same per-point protocol).
+
+    Start method (`mp_context=None`): `fork` when JAX has not been
+    imported into this process (sim-tier parents stay JAX-free because
+    the executors import it lazily) — workers then start in
+    milliseconds; otherwise `spawn`, which avoids forking a parent that
+    may hold live JAX threads at the cost of ~1s interpreter+numpy
+    startup per worker. Pool overhead only amortizes for paper-scale
+    points; tiny ladders are often faster through `lambda_sweep`.
+    """
+    specs = _ladder_specs(ladder, io_shape=io_shape, scale=scale,
+                          requests_per_point=requests_per_point,
+                          warmup_per_point=warmup_per_point, seed=seed,
+                          process=process, cv=cv)
+    payloads = [(engine_factory, spec, warm, horizon, dict(record_kw))
+                for spec, warm in specs]
+    records: Optional[List[RunRecord]] = None
+    if mp_context is None:
+        mp_context = ("fork"
+                      if "fork" in multiprocessing.get_all_start_methods()
+                      and "jax" not in sys.modules else "spawn")
+    if len(payloads) > 1:
+        try:
+            ctx = multiprocessing.get_context(mp_context)
+            with concurrent.futures.ProcessPoolExecutor(
+                    max_workers=max_workers or min(len(payloads),
+                                                   multiprocessing.cpu_count()),
+                    mp_context=ctx) as pool:
+                records = list(pool.map(_run_point_task, payloads))
+        except (pickle.PicklingError, AttributeError, TypeError,
+                OSError, EOFError,
+                concurrent.futures.process.BrokenProcessPool):
+            records = None            # unpicklable factory / broken pool
+    if records is None:
+        records = [_run_point_task(p) for p in payloads]
+    return _backfill_theta(records)

@@ -2,10 +2,34 @@
 
 The scheduling loop mirrors vLLM's continuous batching: every step admits
 as many queued prompts as page capacity and the prefill token budget allow,
-prefills them (recording TTFT), then decodes one token for every running
-slot. Time is whatever the executor says it is — wall-clock (RealExecutor)
-or the TPU model clock (SimExecutor) — so the same queueing dynamics
-produce both measured and simulated C_eff(lambda) curves.
+prefills them (recording TTFT), then decodes for the running slots. Time is
+whatever the executor says it is — wall-clock (RealExecutor) or the TPU
+model clock (SimExecutor) — so the same queueing dynamics produce both
+measured and simulated C_eff(lambda) curves.
+
+Two scheduler paths share identical semantics (ISSUE 1):
+
+* **event-driven fast-forward** (`EngineConfig.fast_forward`, the default
+  when the executor provides `decode_multi`): between scheduling events —
+  next arrival while the queue is empty, next completion, next failure
+  injection, horizon — the running batch composition is constant, so the
+  engine advances the clock by the closed-form sum of the next `k` decode
+  steps in one `decode_multi` call and updates all per-slot bookkeeping
+  (tokens_out, context_lens, completion detection) with vectorized numpy
+  ops. An arrival is *not* an event while the FCFS queue head is blocked
+  on capacity: admission can only unblock at a completion or failure.
+* **reference per-token loop** (`fast_forward=False`): one Python
+  iteration per decode token, kept verbatim as the executable spec; the
+  equivalence tests compare the two paths and the throughput benchmark
+  uses it as the step-by-step baseline.
+
+Equivalence guarantee: both paths take the same scheduling decisions in
+the same order (admissions, prefills, completions, failure re-queues), so
+RunRecord fields (tps, c_eff, ttft/tpot/e2e percentiles, mean_inflight)
+agree to float-rounding tolerance. `RealExecutor` cannot predict wall
+time, so its `decode_multi` falls back to per-step execution internally —
+the fast path then degenerates to the reference loop with vectorized
+bookkeeping, still semantically identical.
 
 Fault handling: `fail_running()` simulates a replica/slot loss; affected
 requests release pages and re-queue (bounded retries), matching the
@@ -14,7 +38,8 @@ straggler/failure story in DESIGN §5.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence
+from collections import deque
+from typing import Deque, Dict, List, Optional, Sequence
 
 import numpy as np
 
@@ -32,6 +57,8 @@ class EngineConfig:
     prefill_token_budget: int = 2048    # chunked-prefill budget per step
     max_prefill_reqs: int = 8
     max_retries: int = 2
+    fast_forward: bool = True           # event-driven clock; False = per-token
+    #                                     reference loop (the baseline/oracle)
 
 
 class Engine:
@@ -45,9 +72,25 @@ class Engine:
         self.slot_req: Dict[int, Request] = {}
         self.slot_tokens = np.zeros(cfg.max_batch, np.int32)
         self.context_lens = np.zeros(cfg.max_batch, np.int32)
+        # per-slot mirrors of request bookkeeping (fast path works on these
+        # and syncs back to Request objects at completion / run() exit)
+        self.active = np.zeros(cfg.max_batch, bool)
+        self.tokens_out_arr = np.zeros(cfg.max_batch, np.int64)
+        self.max_new_arr = np.zeros(cfg.max_batch, np.int64)
+        self._requeue: List[Request] = []
+        # pre-bound latency histograms (reset() clears them in place)
+        self._h_e2e = self.metrics.hist("repro:e2e_request_latency_seconds")
+        self._h_ttft = self.metrics.hist(
+            "repro:time_to_first_token_seconds")
+        self._h_tpot = self.metrics.hist(
+            "repro:time_per_output_token_seconds")
         # time-weighted in-flight integral for Little's-law checks
         self._inflight_area = 0.0
         self._last_t = 0.0
+        # scheduler instrumentation (bench_engine_throughput)
+        self.n_iterations = 0
+        self.n_decode_steps = 0
+        self.n_ff_jumps = 0
 
     # ------------------------------------------------------------------
     def _advance(self, dt: float):
@@ -61,6 +104,16 @@ class Engine:
     def mean_inflight(self) -> float:
         return self._inflight_area / max(self.t, 1e-9)
 
+    def reset_measurement(self):
+        """Zero the virtual clock + metrics at a warmup/measurement boundary.
+
+        Only valid when no request is mid-flight (warmup fully drained) —
+        in-flight timestamps would otherwise straddle the reset."""
+        self.t = 0.0
+        self._inflight_area = 0.0
+        self._last_t = 0.0
+        self.metrics.reset()
+
     # ------------------------------------------------------------------
     def _complete(self, slot: int):
         req = self.slot_req.pop(slot)
@@ -69,13 +122,15 @@ class Engine:
         self.pm.release(slot)
         self.ex.reset_slot(slot)
         self.context_lens[slot] = 0
-        m = self.metrics
-        m.inc("repro:request_success_total")
-        m.observe("repro:e2e_request_latency_seconds", req.e2e)
+        self.active[slot] = False
+        self.tokens_out_arr[slot] = 0
+        self.max_new_arr[slot] = 0
+        self.metrics.inc("repro:request_success_total")
+        self._h_e2e.observe(req.e2e)
         if req.ttft is not None:
-            m.observe("repro:time_to_first_token_seconds", req.ttft)
+            self._h_ttft.observe(req.ttft)
         if req.tpot is not None:
-            m.observe("repro:time_per_output_token_seconds", req.tpot)
+            self._h_tpot.observe(req.tpot)
 
     def fail_running(self, frac: float = 1.0, rng=None):
         """Simulate replica loss: re-queue `frac` of running requests."""
@@ -87,6 +142,9 @@ class Engine:
             self.pm.release(int(slot))
             self.ex.reset_slot(int(slot))
             self.context_lens[int(slot)] = 0
+            self.active[int(slot)] = False
+            self.tokens_out_arr[int(slot)] = 0
+            self.max_new_arr[int(slot)] = 0
             req.slot = -1
             req.retries += 1
             self.metrics.inc("repro:request_preempted_total")
@@ -109,17 +167,196 @@ class Engine:
         Re-entrant: calling run() again with the same list (e.g. under a
         meter-tick horizon loop) resumes — requests already admitted or
         finished are not re-enqueued."""
+        if self.cfg.fast_forward and hasattr(self.ex, "decode_multi"):
+            return self._run_fast(requests, horizon=horizon,
+                                  failure_times=failure_times)
+        return self._run_reference(requests, horizon=horizon,
+                                   failure_times=failure_times)
+
+    # ---- admission (shared helper) -----------------------------------
+    def _admit_from(self, queue) -> List[Request]:
+        batch: List[Request] = []
+        budget = self.cfg.prefill_token_budget
+        while (queue and len(batch) < self.cfg.max_prefill_reqs and
+               (queue[0].prompt_len <= budget or not batch) and
+               self.pm.can_admit(queue[0].prompt_len,
+                                 queue[0].max_new_tokens)):
+            req = queue.popleft() if isinstance(queue, deque) else queue.pop(0)
+            slot = self.pm.admit(req.prompt_len, req.max_new_tokens)
+            req.slot = slot
+            req.state = RequestState.PREFILL
+            self.slot_req[slot] = req
+            batch.append(req)
+            budget -= req.prompt_len
+            self.metrics.set("repro:kv_cache_usage_perc",
+                             self.pm.utilization())
+        return batch
+
+    def _prefill_tokens(self, batch: List[Request]) -> np.ndarray:
+        """Materialise the padded token matrix (only if the executor reads
+        token values; the sim tier meters counts and timing only)."""
+        B = self.cfg.max_batch
+        if not getattr(self.ex, "needs_tokens", True):
+            return np.zeros((B, 0), np.int32)
+        lp = -(-max(r.prompt_len for r in batch) // 64) * 64
+        tokens = np.zeros((B, lp), np.int32)
+        rng = np.random.default_rng(batch[0].rid)
+        for r in batch:
+            row = (np.asarray(r.prompt[:lp], np.int32)
+                   if r.prompt else
+                   rng.integers(0, 1000, r.prompt_len))
+            tokens[r.slot, :r.prompt_len] = row[:r.prompt_len]
+        return tokens
+
+    # ---- fast path ----------------------------------------------------
+    def _run_fast(self, requests: Sequence[Request], *,
+                  horizon: Optional[float] = None,
+                  failure_times: Sequence[float] = ()) -> List[Request]:
+        B = self.cfg.max_batch
+        pending = sorted(
+            (r for r in requests
+             if r.state == RequestState.QUEUED and r.slot < 0),
+            key=lambda r: r.arrival_time)
+        pi = 0                              # pending cursor (no pop(0))
+        queue: Deque[Request] = deque()
+        fail_iter = iter(sorted(failure_times))
+        next_fail = next(fail_iter, None)
+        needs_tok = getattr(self.ex, "needs_tokens", True)
+
+        # resync slot mirrors from request objects (re-entry / mode switch)
+        self.active[:] = False
+        self.tokens_out_arr[:] = 0
+        self.max_new_arr[:] = 0
+        for slot, r in self.slot_req.items():
+            self.active[slot] = True
+            self.tokens_out_arr[slot] = r.tokens_out
+            self.max_new_arr[slot] = r.max_new_tokens
+
+        while pi < len(pending) or queue or self.slot_req or self._requeue:
+            self.n_iterations += 1
+            if horizon is not None and self.t >= horizon:
+                break
+            # failure injection
+            if next_fail is not None and self.t >= next_fail:
+                self.fail_running(0.5)
+                next_fail = next(fail_iter, None)
+            # arrivals
+            while pi < len(pending) and pending[pi].arrival_time <= self.t:
+                queue.append(pending[pi])
+                pi += 1
+            if self._requeue:
+                queue.extendleft(reversed(self._requeue))
+                self._requeue = []
+
+            batch = self._admit_from(queue)
+            did_work = False
+            if batch:
+                lens = np.zeros(B, np.int32)
+                mask = np.zeros(B, bool)
+                for r in batch:
+                    lens[r.slot] = r.prompt_len
+                    mask[r.slot] = True
+                first, dt = self.ex.prefill(self._prefill_tokens(batch),
+                                            lens, mask,
+                                            self.pm.block_tables)
+                self._advance(dt)
+                n_prompt = 0
+                for r in batch:
+                    r.state = RequestState.RUNNING
+                    r.tokens_out = 1
+                    r.first_token_time = self.t
+                    r.prev_token_time = self.t
+                    self.slot_tokens[r.slot] = first[r.slot]
+                    self.context_lens[r.slot] = r.prompt_len
+                    self.active[r.slot] = True
+                    self.tokens_out_arr[r.slot] = 1
+                    self.max_new_arr[r.slot] = r.max_new_tokens
+                    n_prompt += r.prompt_len
+                self.metrics.inc("repro:prompt_tokens_total", n_prompt)
+                self.metrics.inc("repro:generation_tokens_total", len(batch))
+                for r in batch:
+                    if self.slot_tokens[r.slot] >= 0 and \
+                            r.tokens_out >= r.max_new_tokens:
+                        self._complete(r.slot)
+                did_work = True
+
+            # ---- decode: closed-form jump to the next scheduling event
+            nrun = int(self.active.sum())
+            if nrun:
+                if batch:
+                    # composition just changed; take exactly one step (the
+                    # reference loop decodes once per prefill iteration)
+                    k_max, tbudget = 1, None
+                else:
+                    rem = (self.max_new_arr[self.active] -
+                           self.tokens_out_arr[self.active])
+                    k_max = int(rem.min())
+                    cands = []
+                    if not queue and pi < len(pending):
+                        # arrivals only matter while nothing is queued: a
+                        # blocked FCFS head keeps newcomers unadmittable
+                        cands.append(pending[pi].arrival_time - self.t)
+                    if next_fail is not None:
+                        cands.append(next_fail - self.t)
+                    if horizon is not None:
+                        cands.append(horizon - self.t)
+                    tbudget = min(cands) if cands else None
+                nxt, dt, steps = self.ex.decode_multi(
+                    self.slot_tokens, self.active, self.pm.block_tables,
+                    self.context_lens, k_max, tbudget)
+                self._advance(dt)
+                self.n_decode_steps += steps
+                if steps > 1:
+                    self.n_ff_jumps += 1
+                act = self.active
+                if needs_tok:
+                    self.slot_tokens[act] = nxt[act]
+                self.tokens_out_arr[act] += steps
+                self.context_lens[act] += steps
+                self.metrics.inc("repro:generation_tokens_total",
+                                 steps * nrun)
+                done_mask = act & (self.tokens_out_arr >= self.max_new_arr)
+                if done_mask.any():
+                    for slot in np.flatnonzero(done_mask):
+                        slot = int(slot)
+                        r = self.slot_req[slot]
+                        r.tokens_out = int(self.tokens_out_arr[slot])
+                        r.prev_token_time = self.t
+                        self._complete(slot)
+                did_work = True
+
+            if not did_work:
+                if pi < len(pending):
+                    gap = max(pending[pi].arrival_time - self.t, 1e-6)
+                    self._advance(gap)
+                elif queue:
+                    raise RuntimeError(
+                        "scheduler stall: queued request cannot ever fit; "
+                        "increase num_pages/max_pages_per_seq")
+                else:
+                    break
+
+        # sync slot mirrors back onto in-flight request objects so a
+        # re-entrant run() (or the caller) sees consistent progress
+        for slot, r in self.slot_req.items():
+            r.tokens_out = int(self.tokens_out_arr[slot])
+            r.prev_token_time = self.t
+        return list(requests)
+
+    # ---- reference path (the executable spec / benchmark baseline) ----
+    def _run_reference(self, requests: Sequence[Request], *,
+                       horizon: Optional[float] = None,
+                       failure_times: Sequence[float] = ()) -> List[Request]:
         pending = sorted(
             (r for r in requests
              if r.state == RequestState.QUEUED and r.slot < 0),
             key=lambda r: r.arrival_time)
         queue: List[Request] = []
-        self._requeue: List[Request] = getattr(self, "_requeue", [])
         fail_iter = iter(sorted(failure_times))
         next_fail = next(fail_iter, None)
-        pad = lambda n, m: ((n + m - 1) // m) * m
 
         while pending or queue or self.slot_req or self._requeue:
+            self.n_iterations += 1
             if horizon is not None and self.t >= horizon:
                 break
             # failure injection
@@ -132,36 +369,14 @@ class Engine:
             queue = self._requeue + queue
             self._requeue = []
 
-            # ---- admission: chunked-prefill token budget + page capacity
-            batch: List[Request] = []
-            budget = self.cfg.prefill_token_budget
-            while (queue and len(batch) < self.cfg.max_prefill_reqs and
-                   (queue[0].prompt_len <= budget or not batch) and
-                   self.pm.can_admit(queue[0].prompt_len,
-                                     queue[0].max_new_tokens)):
-                req = queue.pop(0)
-                slot = self.pm.admit(req.prompt_len, req.max_new_tokens)
-                req.slot = slot
-                req.state = RequestState.PREFILL
-                self.slot_req[slot] = req
-                batch.append(req)
-                budget -= req.prompt_len
-                self.metrics.set("repro:kv_cache_usage_perc",
-                                 self.pm.utilization())
-
+            batch = self._admit_from(queue)
             did_work = False
             if batch:
-                lp = pad(max(r.prompt_len for r in batch), 64)
                 B = self.cfg.max_batch
-                tokens = np.zeros((B, lp), np.int32)
+                tokens = self._prefill_tokens(batch)
                 lens = np.zeros(B, np.int32)
                 mask = np.zeros(B, bool)
-                rng = np.random.default_rng(batch[0].rid)
                 for r in batch:
-                    row = (np.asarray(r.prompt[:lp], np.int32)
-                           if r.prompt else
-                           rng.integers(0, 1000, r.prompt_len))
-                    tokens[r.slot, :r.prompt_len] = row[:r.prompt_len]
                     lens[r.slot] = r.prompt_len
                     mask[r.slot] = True
                 first, dt = self.ex.prefill(tokens, lens, mask,
@@ -198,6 +413,7 @@ class Engine:
                     nxt, dt = self.ex.decode(self.slot_tokens, active,
                                              self.pm.block_tables)
                 self._advance(dt)
+                self.n_decode_steps += 1
                 ngen = 0
                 for r in running:
                     r.tokens_out += 1

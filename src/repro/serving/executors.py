@@ -1,34 +1,43 @@
 """Execution tiers behind the engine: real JAX steps or a TPU time model.
 
 RealExecutor — owns the device state (pools, seq_lens), runs the jitted
-prefill/decode closures, returns wall-clock durations.
+prefill/decode closures, returns wall-clock durations. JAX is imported
+lazily so sim-only processes (parallel_sweep workers) never pay for it.
 
 SimExecutor — same interface, zero compute: durations come from a
 calibrated step-time model (repro.simulate.step_time) so the engine's
 scheduler/queueing dynamics play out on a virtual TPU clock. Token values
 are irrelevant to cost metering (only counts and timing matter), so it
-emits zeros.
+emits zeros and advertises `needs_tokens = False` (the engine then skips
+materialising prompt token matrices).
+
+`decode_multi(tokens, active, block_tables, context_lens, max_steps,
+time_budget)` is the fast-forward hook: take up to `max_steps` decode
+steps with a frozen batch, stopping after the first step whose cumulative
+duration reaches `time_budget` (events are processed at the top of the
+engine loop, i.e. *after* the step that crosses them — identical to the
+per-token reference loop). SimExecutor answers in O(log k) closed-form
+model evaluations; RealExecutor falls back to per-step execution because
+wall-clock durations cannot be predicted.
 """
 from __future__ import annotations
 
-import time
 from typing import Optional, Tuple
 
 import numpy as np
-
-try:
-    import jax
-    import jax.numpy as jnp
-except Exception:                                    # pragma: no cover
-    jax = None
 
 
 class RealExecutor:
     """Wall-clock tier: reduced models, real logits, real latencies."""
 
+    needs_tokens = True
+
     def __init__(self, cfg, params, *, num_pages: int, page_size: int,
                  max_batch: int, qcfg=None, use_kernel: bool = False):
+        import jax
+        import jax.numpy as jnp
         from repro.serving.runner import init_pools, make_step_fns
+        self._jax, self._jnp = jax, jnp
         self.cfg = cfg
         self.params = params
         self.page_size = page_size
@@ -43,6 +52,8 @@ class RealExecutor:
     def prefill(self, tokens: np.ndarray, lens: np.ndarray,
                 do_mask: np.ndarray, block_tables: np.ndarray
                 ) -> Tuple[np.ndarray, float]:
+        import time
+        jax, jnp = self._jax, self._jnp
         t0 = time.perf_counter()
         first, self.pools, self.seq_lens = self.prefill_fn(
             self.params, self.pools, jnp.asarray(block_tables),
@@ -53,6 +64,8 @@ class RealExecutor:
 
     def decode(self, tokens: np.ndarray, active: np.ndarray,
                block_tables: np.ndarray) -> Tuple[np.ndarray, float]:
+        import time
+        jax, jnp = self._jax, self._jnp
         t0 = time.perf_counter()
         nxt, self.pools, self.seq_lens = self.decode_fn(
             self.params, self.pools, jnp.asarray(block_tables),
@@ -60,9 +73,28 @@ class RealExecutor:
         nxt = np.asarray(jax.block_until_ready(nxt))
         return nxt, time.perf_counter() - t0
 
+    def decode_multi(self, tokens: np.ndarray, active: np.ndarray,
+                     block_tables: np.ndarray, context_lens: np.ndarray,
+                     max_steps: int, time_budget: Optional[float] = None
+                     ) -> Tuple[np.ndarray, float, int]:
+        """Per-step fallback: real logits cannot be fast-forwarded."""
+        cur = np.array(tokens)
+        total = 0.0
+        steps = 0
+        while steps < int(max_steps):
+            nxt, dt = self.decode(cur, active, block_tables)
+            cur[active] = nxt[active]
+            total += dt
+            steps += 1
+            if time_budget is not None and total >= time_budget:
+                break
+        return cur, total, max(steps, 1)
+
 
 class SimExecutor:
     """Virtual-clock tier: step durations from the TPU step-time model."""
+
+    needs_tokens = False
 
     def __init__(self, cfg, step_time_model, *, page_size: int = 16):
         self.cfg = cfg
@@ -88,3 +120,29 @@ class SimExecutor:
                if context_lens is not None and bs else 0.0)
         dt = self.model.decode_time(bs, ctx)
         return np.zeros(tokens.shape[0], np.int32), dt
+
+    def decode_multi(self, tokens: np.ndarray, active: np.ndarray,
+                     block_tables: np.ndarray, context_lens: np.ndarray,
+                     max_steps: int, time_budget: Optional[float] = None
+                     ) -> Tuple[np.ndarray, float, int]:
+        """Closed-form jump: every context grows by one token per step, so
+        the k-step duration is `StepTimeModel.decode_time_multi`; the step
+        count crossing `time_budget` is found by bisection on that O(1)
+        sum (smallest k with S(k) >= budget, capped at max_steps)."""
+        bs = int(active.sum())
+        ctx0 = (float(np.mean(context_lens[active]))
+                if context_lens is not None and bs else 0.0)
+        k = max(int(max_steps), 1)
+        m = self.model
+        if (time_budget is not None and k > 1 and
+                m.decode_time_multi(bs, ctx0, k) >= time_budget):
+            lo, hi = 1, k
+            while lo < hi:
+                mid = (lo + hi) // 2
+                if m.decode_time_multi(bs, ctx0, mid) >= time_budget:
+                    hi = mid
+                else:
+                    lo = mid + 1
+            k = lo
+        dt = m.decode_time_multi(bs, ctx0, k)
+        return np.zeros(tokens.shape[0], np.int32), dt, k

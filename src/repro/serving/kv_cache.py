@@ -50,11 +50,14 @@ class PageManager:
         assert need <= self.max_pages_per_seq, (
             f"request needs {need} pages > max_pages_per_seq "
             f"{self.max_pages_per_seq}")
-        pages = [self.free.pop() for _ in range(need)]
+        # take the last `need` pages in pop() order (one slice, not n pops);
+        # guard need==0: `del free[-0:]` would wipe the whole free list
+        pages = self.free[:-need - 1:-1] if need else []
+        if need:
+            del self.free[-need:]
         self.pages_of[slot] = pages
-        row = np.zeros(self.max_pages_per_seq, np.int32)
-        row[:need] = pages
-        self.block_tables[slot] = row
+        self.block_tables[slot, :need] = pages
+        self.block_tables[slot, need:] = 0
         return slot
 
     def release(self, slot: int):

@@ -17,22 +17,40 @@ _BUCKETS = (0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1, 0.25, 0.5,
 
 
 class Histogram:
+    """Bucketed histogram with amortized bookkeeping: observe() is an O(1)
+    append; bucket counts and the sorted view are folded lazily on first
+    read (render/percentile), which the engine hot loop never hits."""
+
     def __init__(self):
-        self.counts = [0] * len(_BUCKETS)
+        self.clear()
+
+    def clear(self):
         self.total = 0.0
         self.n = 0
         self.samples: List[float] = []
+        self._counts: List[int] = [0] * len(_BUCKETS)
+        self._folded = 0                             # samples already bucketed
+        self._sorted: Optional[List[float]] = None   # amortized-sort cache
 
     def observe(self, v: float):
-        self.counts[bisect.bisect_left(_BUCKETS, v)] += 1
         self.total += v
         self.n += 1
         self.samples.append(v)
+        self._sorted = None
+
+    @property
+    def counts(self) -> List[int]:
+        for v in self.samples[self._folded:]:
+            self._counts[bisect.bisect_left(_BUCKETS, v)] += 1
+        self._folded = len(self.samples)
+        return self._counts
 
     def percentile(self, q: float) -> float:
         if not self.samples:
             return float("nan")
-        s = sorted(self.samples)
+        if self._sorted is None:
+            self._sorted = sorted(self.samples)
+        s = self._sorted
         idx = min(len(s) - 1, max(0, int(round(q / 100.0 * (len(s) - 1)))))
         return s[idx]
 
@@ -53,7 +71,27 @@ class MetricsRegistry:
         self.gauges[name] = v
 
     def observe(self, name: str, v: float):
-        self.hists.setdefault(name, Histogram()).observe(v)
+        self.hist(name).observe(v)
+
+    def hist(self, name: str) -> Histogram:
+        """Get-or-create a histogram; callers on hot paths may keep the
+        returned object (reset() clears contents in place, so bound
+        references stay live)."""
+        h = self.hists.get(name)
+        if h is None:
+            h = self.hists[name] = Histogram()
+        return h
+
+    def reset(self):
+        """Drop all recorded state (counters, gauges, histograms) — the
+        warmup/measurement boundary in sweep protocols. Unlike clearing
+        `counters`/`hists` piecemeal, this also flushes gauges so no
+        stale time/running-request readings leak into the window.
+        Histograms are cleared in place so pre-bound references survive."""
+        self.counters.clear()
+        self.gauges.clear()
+        for h in self.hists.values():
+            h.clear()
 
     def get(self, name: str) -> float:
         if name in self.counters:

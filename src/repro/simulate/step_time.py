@@ -17,6 +17,7 @@ Quantization semantics (paper §5.3 / §5.9 Result 2, TPU-adapted):
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Optional
 
 from repro.configs.base import ModelConfig
@@ -47,15 +48,26 @@ class StepTimeModel:
     moe_dispatch_overhead: float = 1.5e-6  # s per routed token
 
     # ---- derived ---------------------------------------------------------
+    def __post_init__(self):
+        # ModelConfig is frozen, so cfg-derived constants cannot go stale;
+        # caching them here keeps the virtual-clock hot path (one
+        # decode_time* call per scheduling event) free of the analytic
+        # parameter walk. dataclasses.replace() re-runs this.
+        self._total_params = self.cfg.param_count()
+        self._active_params = self.cfg.active_param_count()
+        self._kv_bytes_tok = self.cfg.kv_bytes_per_token()
+        self._n_attn = sum(1 for k in self.cfg.block_pattern()
+                           if k == "attn")
+
     @property
     def weight_bytes(self) -> float:
         per = 1 if self.quant in ("int8", "fp8") else 2
-        return self.cfg.param_count() * per
+        return self._total_params * per
 
     @property
     def active_weight_bytes(self) -> float:
         per = 1 if self.quant in ("int8", "fp8") else 2
-        return self.cfg.active_param_count() * per
+        return self._active_params * per
 
     @property
     def _peak(self) -> float:
@@ -82,36 +94,73 @@ class StepTimeModel:
         return base
 
     # ---- decode ------------------------------------------------------------
-    def decode_time(self, batch: int, mean_ctx: float) -> float:
-        """One decode step for `batch` in-flight sequences."""
-        if batch == 0:
-            return self.fixed_overhead
-        flops = 2.0 * self.cfg.active_param_count() * batch
+    def _decode_terms(self, batch: int):
+        """Shared per-step decode roofline terms at batch size `batch`:
+        (compute_s, mem_base_s, mem_slope_s_per_ctx_token, const_s).
+        Step time at context c is ``max(compute, mem_base + slope*c) +
+        const``. Single source of truth for decode_time AND
+        decode_time_multi — the fast-forward clock jump must never drift
+        from the per-step reference, so any new roofline term belongs
+        here, not in either caller."""
+        flops = 2.0 * self._active_params * batch
         compute = flops / (self.n_chips * self._peak_decode *
                            self.mfu_decode)
-        kv_read = batch * mean_ctx * self.cfg.kv_bytes_per_token()
+        bw = self.n_chips * self.hw.hbm_bw * self.mbu
         # dense weights + the touched expert subset stream once per step;
         # with large batches an MoE touches ~all experts, so interpolate
         touched = min(1.0, max(self.active_weight_bytes / self.weight_bytes,
                                batch * (self.cfg.moe.top_k /
                                         self.cfg.moe.num_experts)
                                if self.cfg.moe else 1.0))
-        mem_bytes = self.weight_bytes * touched + kv_read
-        memory = mem_bytes / (self.n_chips * self.hw.hbm_bw * self.mbu)
-        coll = self._collective_time(batch)
-        moe_oh = (self.moe_dispatch_overhead * batch
-                  if self.cfg.moe is not None else 0.0)
-        return max(compute, memory) + coll + moe_oh + self.fixed_overhead
+        mem_base = self.weight_bytes * touched / bw
+        mem_slope = batch * self._kv_bytes_tok / bw
+        const = (self._collective_time(batch) +
+                 (self.moe_dispatch_overhead * batch
+                  if self.cfg.moe is not None else 0.0) +
+                 self.fixed_overhead)
+        return compute, mem_base, mem_slope, const
+
+    def decode_time(self, batch: int, mean_ctx: float) -> float:
+        """One decode step for `batch` in-flight sequences."""
+        if batch == 0:
+            return self.fixed_overhead
+        compute, mem_base, mem_slope, const = self._decode_terms(batch)
+        return max(compute, mem_base + mem_slope * mean_ctx) + const
+
+    def decode_time_multi(self, batch: int, ctx0: float, k: int) -> float:
+        """Closed-form sum of `k` consecutive decode steps.
+
+        Between scheduling events the batch is frozen and every context
+        grows by one token per step, so step i costs
+        ``max(compute, mem0 + i*slope) + const`` with a single
+        compute->memory crossover along the way — the k-step total
+        collapses to one arithmetic series. This is the O(1) clock jump
+        behind the engine's event-driven fast-forward path; both paths
+        read the same `_decode_terms`, so the sum stays numerically
+        equivalent (to float rounding) to summing
+        ``decode_time(batch, ctx0 + i)`` for i in range(k).
+        """
+        if k <= 0:
+            return 0.0
+        if k == 1 or batch == 0:
+            return k * self.decode_time(batch, ctx0)
+        compute, mem_base, slope, const = self._decode_terms(batch)
+        mem0 = mem_base + slope * ctx0
+        if slope <= 0.0:
+            return k * (max(compute, mem0) + const)
+        # steps with memory below the compute roofline: i < (C - mem0)/slope
+        m = min(max(int(math.ceil((compute - mem0) / slope)), 0), k)
+        series = (k - m) * mem0 + slope * (m + k - 1) * (k - m) / 2.0
+        return m * compute + series + k * const
 
     # ---- prefill -----------------------------------------------------------
     def prefill_time(self, n_tokens: int, n_reqs: int) -> float:
         if n_tokens == 0:
             return 0.0
         mean_len = n_tokens / max(n_reqs, 1)
-        flops = 2.0 * self.cfg.active_param_count() * n_tokens
+        flops = 2.0 * self._active_params * n_tokens
         # quadratic attention term
-        n_attn = sum(1 for k in self.cfg.block_pattern() if k == "attn")
-        flops += (2 * 2 * n_attn * self.cfg.num_heads *
+        flops += (2 * 2 * self._n_attn * self.cfg.num_heads *
                   self.cfg.resolved_head_dim * n_tokens * mean_len)
         compute = flops / (self.n_chips * self._peak * self.mfu)
         mem_bytes = self.weight_bytes + \

@@ -1,0 +1,220 @@
+"""Event-driven fast-forward scheduler equivalence (ISSUE 1).
+
+The fast path must reproduce the reference per-token loop exactly:
+identical scheduling decisions (admissions, completions, failure
+re-queues) and timings within float-rounding tolerance — across Poisson
+and bursty gamma arrivals, failure injection, horizon truncation and
+re-entrant runs. Plus the closed-form `decode_time_multi` against the
+per-step sum, and the satellite regressions (fail_running before run,
+MetricsRegistry.reset)."""
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.serving import (ArrivalSpec, Engine, EngineConfig, SimExecutor,
+                           synth_requests)
+from repro.serving.request import RequestState
+from repro.simulate import StepTimeModel, V5E, V5P
+
+RTOL = 1e-9
+
+
+def _engine(fast_forward, arch="llama31-8b", hw=V5E, max_batch=32,
+            num_pages=8192, max_pages_per_seq=64, **ecfg_kw):
+    cfg = get_config(arch)
+    stm = StepTimeModel(cfg, hw)
+    return Engine(EngineConfig(max_batch=max_batch, page_size=16,
+                               num_pages=num_pages,
+                               max_pages_per_seq=max_pages_per_seq,
+                               fast_forward=fast_forward, **ecfg_kw),
+                  SimExecutor(cfg, stm))
+
+
+def _run_pair(spec, *, horizon=None, failure_times=(), **ekw):
+    out = []
+    for ff in (False, True):
+        eng = _engine(ff, **ekw)
+        reqs = synth_requests(spec)
+        eng.run(reqs, horizon=horizon, failure_times=failure_times)
+        out.append((eng, reqs))
+    return out
+
+
+def _assert_equivalent(ref, fast):
+    (eref, rref), (efast, rfast) = ref, fast
+    assert abs(eref.t - efast.t) <= RTOL * max(1.0, eref.t)
+    assert np.isclose(eref.mean_inflight(), efast.mean_inflight(),
+                      rtol=RTOL, atol=1e-12)
+    for a, b in zip(rref, rfast):
+        assert a.state == b.state
+        assert a.tokens_out == b.tokens_out
+        assert a.retries == b.retries
+        assert (a.finish_time is None) == (b.finish_time is None)
+        for ta, tb in ((a.finish_time, b.finish_time),
+                       (a.first_token_time, b.first_token_time)):
+            assert (ta is None) == (tb is None)
+            if ta is not None:
+                assert abs(ta - tb) <= RTOL * max(1.0, abs(ta))
+    for key in ("repro:generation_tokens_total",
+                "repro:prompt_tokens_total",
+                "repro:request_success_total",
+                "repro:request_preempted_total"):
+        assert eref.metrics.get(key) == efast.metrics.get(key), key
+
+
+CASES = [
+    pytest.param(dict(lam=2, n_requests=60, seed=0), {}, {}, id="idle"),
+    pytest.param(dict(lam=20, n_requests=120, seed=1), {}, {}, id="loaded"),
+    pytest.param(dict(lam=80, n_requests=200, seed=2), {}, {},
+                 id="saturated"),
+    pytest.param(dict(lam=20, n_requests=100, seed=3, process="gamma",
+                      cv=2.0), {}, {}, id="bursty-gamma"),
+    pytest.param(dict(lam=15, n_requests=80, seed=4, io_shape="variable"),
+                 {}, dict(max_pages_per_seq=512, num_pages=16384),
+                 id="variable-shape"),
+    pytest.param(dict(lam=20, n_requests=40, seed=2),
+                 dict(failure_times=[0.5, 1.5]), {}, id="failures"),
+    pytest.param(dict(lam=20, n_requests=150, seed=5), dict(horizon=4.0),
+                 {}, id="horizon-truncated"),
+    pytest.param(dict(lam=10, n_requests=50, seed=6),
+                 dict(failure_times=[0.3], horizon=12.0), {},
+                 id="failures+horizon"),
+]
+
+
+@pytest.mark.parametrize("case,runkw,ekw", CASES)
+def test_fast_forward_matches_reference(case, runkw, ekw):
+    spec = ArrivalSpec(**case)
+    ref, fast = _run_pair(spec, **runkw, **ekw)
+    _assert_equivalent(ref, fast)
+
+
+def test_fast_forward_reentrant_horizon_loop():
+    """Meter-tick style: repeated run() calls under a growing horizon must
+    resume identically on both paths."""
+    res = {}
+    for ff in (False, True):
+        eng = _engine(ff)
+        reqs = synth_requests(ArrivalSpec(lam=10, n_requests=100, seed=0))
+        h = 0.0
+        while any(r.finish_time is None for r in reqs):
+            h += 2.0
+            eng.run(reqs, horizon=h)
+            assert h < 3600
+        res[ff] = (eng, reqs)
+    _assert_equivalent(res[False], res[True])
+
+
+def test_fast_forward_littles_law():
+    """The jump path must preserve the time-weighted in-flight integral:
+    mean_inflight ~= lambda_effective * mean residence."""
+    eng = _engine(True, max_batch=128, num_pages=16384)
+    reqs = synth_requests(ArrivalSpec(lam=5, n_requests=300, seed=0))
+    eng.run(reqs)
+    done = [r for r in reqs if r.finish_time is not None]
+    lam_eff = len(done) / eng.t
+    W = float(np.mean([r.e2e for r in done]))
+    N = eng.mean_inflight()
+    assert abs(N - lam_eff * W) / max(N, 1e-9) < 0.15, (N, lam_eff * W)
+
+
+def test_fast_forward_actually_jumps():
+    """Sanity: the fast path takes far fewer scheduler iterations than the
+    per-token reference on the same workload."""
+    (eref, _), (efast, _) = _run_pair(ArrivalSpec(lam=20, n_requests=120,
+                                                  seed=1))
+    assert efast.n_ff_jumps > 0
+    assert efast.n_iterations < eref.n_iterations / 4
+    assert efast.n_decode_steps == eref.n_decode_steps
+
+
+def test_decode_time_multi_matches_stepwise_sum():
+    """Closed-form k-step decode sum vs the naive per-step loop."""
+    for arch, hw in (("llama31-8b", V5E), ("qwen3-30b-a3b", V5P),
+                     ("mixtral-8x7b", V5E)):
+        stm = StepTimeModel(get_config(arch), hw)
+        for batch in (1, 8, 64, 256):
+            for ctx0 in (0.0, 37.5, 512.0, 4096.0):
+                for k in (1, 2, 7, 100, 1000):
+                    want = sum(stm.decode_time(batch, ctx0 + i)
+                               for i in range(k))
+                    got = stm.decode_time_multi(batch, ctx0, k)
+                    assert got == pytest.approx(want, rel=1e-9), \
+                        (arch, batch, ctx0, k)
+    assert stm.decode_time_multi(8, 100.0, 0) == 0.0
+    assert stm.decode_time_multi(0, 0.0, 5) == \
+        pytest.approx(5 * stm.decode_time(0, 0.0))
+
+
+def test_real_executor_fallback_keeps_fast_path_correct():
+    """An executor without closed-form jumps (decode_multi loops per step)
+    still completes everything under the fast scheduler."""
+
+    class SteppingSim(SimExecutor):
+        """Sim timing, but per-step decode_multi like RealExecutor."""
+        needs_tokens = True
+
+        def decode_multi(self, tokens, active, block_tables, context_lens,
+                         max_steps, time_budget=None):
+            cur = np.array(tokens)
+            total, steps = 0.0, 0
+            ctx = np.array(context_lens)
+            while steps < int(max_steps):
+                nxt, dt = self.decode(cur, active, block_tables,
+                                      context_lens=ctx)
+                cur[active] = nxt[active]
+                ctx[active] += 1
+                total += dt
+                steps += 1
+                if time_budget is not None and total >= time_budget:
+                    break
+            return cur, total, max(steps, 1)
+
+    cfg = get_config("llama31-8b")
+    stm = StepTimeModel(cfg, V5E)
+    results = {}
+    for ex in (SimExecutor(cfg, stm), SteppingSim(cfg, stm)):
+        eng = Engine(EngineConfig(max_batch=32, page_size=16,
+                                  num_pages=8192, max_pages_per_seq=64,
+                                  fast_forward=True), ex)
+        reqs = synth_requests(ArrivalSpec(lam=20, n_requests=60, seed=7))
+        eng.run(reqs)
+        results[type(ex).__name__] = (eng, reqs)
+    _assert_equivalent(results["SimExecutor"], results["SteppingSim"])
+
+
+def test_fail_running_before_run_does_not_raise():
+    """Satellite: `_requeue` is initialised in __init__, so a driver can
+    inject a failure before ever calling run()."""
+    eng = _engine(True)
+    reqs = synth_requests(ArrivalSpec(lam=5, n_requests=3, seed=0))
+    r = reqs[0]
+    slot = eng.pm.admit(r.prompt_len, r.max_new_tokens)
+    r.slot = slot
+    eng.slot_req[slot] = r
+    eng.fail_running(1.0)                       # must not raise
+    assert eng._requeue and eng._requeue[0] is r
+    assert r.state == RequestState.QUEUED
+    # the re-queued request is picked up by a subsequent run()
+    eng.run(reqs)
+    assert all(q.finish_time is not None for q in reqs)
+
+
+def test_metrics_reset_clears_gauges_and_keeps_bound_hists():
+    """Satellite: reset() flushes counters, gauges AND histogram contents
+    (in place, so the engine's pre-bound histogram refs stay live)."""
+    eng = _engine(True)
+    reqs = synth_requests(ArrivalSpec(lam=10, n_requests=20, seed=1))
+    eng.run(reqs)
+    m = eng.metrics
+    assert m.get("repro:time_seconds") > 0
+    assert m.hists["repro:e2e_request_latency_seconds"].n == 20
+    m.reset()
+    assert m.counters == {} and m.gauges == {}
+    assert m.hists["repro:e2e_request_latency_seconds"].n == 0
+    # a fresh measured run records into the same (cleared) histograms
+    eng.reset_measurement()
+    reqs2 = synth_requests(ArrivalSpec(lam=10, n_requests=15, seed=2))
+    eng.run(reqs2)
+    assert m.hists["repro:e2e_request_latency_seconds"].n == 15
+    assert sum(m.hists["repro:e2e_request_latency_seconds"].counts) == 15

@@ -1,0 +1,69 @@
+"""parallel_sweep must reproduce serial lambda_sweep records exactly —
+same deterministic per-point seeds, same ladder order — whether the
+points actually ran in pool workers or fell back to the serial path."""
+import dataclasses
+
+from repro.core import SimEngineSpec, lambda_sweep, parallel_sweep
+from repro.serving import Engine, EngineConfig, SimExecutor
+
+LADDER = (1, 10, 50)
+
+
+def _kw():
+    return dict(ladder=LADDER,
+                requests_per_point=lambda lam: 80,
+                warmup_per_point=lambda lam: 0,
+                config="C1", model="llama31-8b", hw="tpu-v5e",
+                price_per_hr=1.2)
+
+
+def _records_equal(xs, ys):
+    assert len(xs) == len(ys)
+    for a, b in zip(xs, ys):
+        assert dataclasses.asdict(a) == dataclasses.asdict(b)
+    assert [r.lam for r in xs] == list(LADDER)      # ladder order preserved
+
+
+def test_parallel_matches_serial():
+    fac = SimEngineSpec("llama31-8b", max_batch=64, num_pages=8192)
+    serial = lambda_sweep(fac, **_kw())
+    par = parallel_sweep(fac, max_workers=3, **_kw())
+    _records_equal(serial, par)
+
+
+def test_parallel_with_warmup_matches_serial():
+    fac = SimEngineSpec("llama31-8b", max_batch=64, num_pages=8192)
+    kw = _kw()
+    kw["warmup_per_point"] = lambda lam: 10
+    serial = lambda_sweep(fac, **kw)
+    par = parallel_sweep(fac, **kw)
+    _records_equal(serial, par)
+
+
+def test_unpicklable_factory_falls_back_to_serial():
+    """A closure factory cannot cross the process boundary; the sweep must
+    quietly degrade to the serial path with identical results."""
+    from repro.configs import get_config
+    from repro.simulate import StepTimeModel, V5E
+
+    def closure_factory():
+        cfg = get_config("llama31-8b")
+        return Engine(EngineConfig(max_batch=64, page_size=16,
+                                   num_pages=8192, max_pages_per_seq=64),
+                      SimExecutor(cfg, StepTimeModel(cfg, V5E)))
+
+    serial = lambda_sweep(closure_factory, **_kw())
+    par = parallel_sweep(closure_factory, **_kw())
+    _records_equal(serial, par)
+
+
+def test_sim_engine_spec_is_picklable_and_builds():
+    import pickle
+
+    fac = SimEngineSpec("qwen3-30b-a3b", hw="tpu-v5p", quant="int8",
+                        n_chips=2, fast_forward=False)
+    fac2 = pickle.loads(pickle.dumps(fac))
+    eng = fac2()
+    assert isinstance(eng, Engine)
+    assert eng.cfg.fast_forward is False
+    assert eng.ex.model.quant == "int8" and eng.ex.model.n_chips == 2

@@ -94,6 +94,20 @@ def test_real_executor_roundtrip(rng):
         sum(r.max_new_tokens for r in reqs)
 
 
+def test_page_manager_zero_length_admit_keeps_free_list():
+    """Regression: admit(0, 0) must reserve a slot with zero pages, not
+    wipe the free list (the sliced `del free[-0:]` pitfall)."""
+    pm = PageManager(num_pages=128, page_size=8, max_batch=8,
+                     max_pages_per_seq=16)
+    slot = pm.admit(0, 0)
+    assert slot is not None
+    assert pm.free_pages == pm.num_pages - 1
+    assert pm.pages_of[slot] == []
+    pm.release(slot)
+    assert pm.free_pages == pm.num_pages - 1
+    assert sorted(pm.free_slots) == list(range(8))
+
+
 if HAVE_HYP:
     @given(st.lists(st.tuples(st.integers(1, 60), st.integers(1, 40)),
                     min_size=1, max_size=25),
