@@ -3,34 +3,31 @@ hosting actually beat each API tier once utilization is measured rather
 than assumed — and how asymmetric input/output pricing moves the answer
 for different workload shapes.
 
+Consumes the `crossover_trio` experiment store (three (model, quant, TP)
+configs on tpu-v5p); cells missing from the store are run once and
+persisted, so re-invocations analyze without re-running engines.
+
     PYTHONPATH=src python examples/crossover_report.py
 """
-from repro.configs import get_config
-from repro.core import c_naive, crossover_table, lambda_sweep
+from repro.core import c_naive, crossover_table
 from repro.core.pricing import API_TIERS
-from repro.serving import Engine, EngineConfig, SimExecutor
-from repro.simulate import StepTimeModel, V5P
-
-CONFIGS = (("llama31-8b", "bf16", 1), ("qwen3-30b-a3b", "int8", 1),
-           ("mixtral-8x7b", "bf16", 2))
+from repro.experiments import ExperimentStore, PlanRunner, get_plan
+from repro.simulate import V5P
 
 
 def main():
-    for arch, quant, chips in CONFIGS:
-        cfg = get_config(arch)
-        price = V5P.price_per_chip_hr * chips
+    plan = get_plan("crossover_trio")
+    store = ExperimentStore(plan.name)
+    cached = len(store.completed_ids(plan))
+    print(f"crossover_trio: {cached}/{len(plan.cells)} cells in store "
+          f"({store.dir})")
+    records = PlanRunner(plan, store=store).run()
+    by_group = {}
+    for r in records:
+        by_group.setdefault((r.model, r.quant, r.n_chips), []).append(r)
 
-        def factory():
-            stm = StepTimeModel(cfg, V5P, n_chips=chips, quant=quant)
-            return Engine(
-                EngineConfig(max_batch=256, page_size=16, num_pages=65536,
-                             max_pages_per_seq=64), SimExecutor(cfg, stm))
-
-        recs = lambda_sweep(
-            factory, ladder=(1, 2, 5, 10, 25, 50, 100),
-            requests_per_point=lambda lam: int(min(600, max(120, 20 * lam))),
-            warmup_per_point=lambda lam: 0, config=arch, model=arch,
-            hw=V5P.name, price_per_hr=price, engine_kind="sim")
+    for (arch, quant, chips), recs in by_group.items():
+        price = recs[0].price_per_hr
         naive = c_naive(price, max(r.tps for r in recs))
 
         print(f"\n=== {arch} {quant} x{chips} on {V5P.name} "

@@ -1,35 +1,26 @@
 """Quickstart: the concurrency-aware cost framework in ~60 seconds.
 
-Runs a lambda sweep of the paper's dense reference config on the simulated
-v5e tier, prints the C_eff(lambda) curve, the underutilization penalty
-(the paper's headline 1/U factor), and the API crossover table.
+Runs the `quickstart` experiment plan (the paper's dense reference config
+on the simulated v5e tier) against the resumable store — a second
+invocation reads the finished cells instead of re-running engines — then
+prints the C_eff(lambda) curve, the underutilization penalty (the paper's
+headline 1/U factor), and the API crossover table.
 
     PYTHONPATH=src python examples/quickstart.py
 """
-from repro.configs import get_config
-from repro.core import (crossover_table, lambda_sweep, slo_operating_point)
-from repro.serving import Engine, EngineConfig, SimExecutor
-from repro.simulate import StepTimeModel, V5E
-
-ARCH = "llama31-8b"
+from repro.core import crossover_table, slo_operating_point
+from repro.experiments import ExperimentStore, PlanRunner, get_plan
+from repro.simulate import V5E
 
 
 def main():
-    cfg = get_config(ARCH)
-
-    def factory():
-        stm = StepTimeModel(cfg, V5E, n_chips=1, quant="bf16")
-        return Engine(EngineConfig(max_batch=256, page_size=16,
-                                   num_pages=65536, max_pages_per_seq=64),
-                      SimExecutor(cfg, stm))
-
-    print(f"sweeping {ARCH} on {V5E.name} (${V5E.price_per_chip_hr}/chip-hr)")
-    recs = lambda_sweep(
-        factory, ladder=(1, 5, 10, 25, 50, 100),
-        requests_per_point=lambda lam: int(min(600, max(120, 20 * lam))),
-        warmup_per_point=lambda lam: 0,
-        config="quickstart", model=ARCH, hw=V5E.name,
-        price_per_hr=V5E.price_per_chip_hr, engine_kind="sim")
+    plan = get_plan("quickstart")
+    store = ExperimentStore(plan.name)
+    cached = len(store.completed_ids(plan))
+    print(f"sweeping {plan.cells[0].arch} on {V5E.name} "
+          f"(${V5E.price_per_chip_hr}/chip-hr) — "
+          f"{cached}/{len(plan.cells)} cells already in {store.dir}")
+    recs = PlanRunner(plan, store=store).run()
 
     print(f"\n{'lam':>5} {'tok/s':>9} {'$ / MTok':>9} {'penalty':>8} "
           f"{'TTFT p99':>10} {'in-flight':>9}")
@@ -54,6 +45,9 @@ def main():
           f"lam={slo.lam_max}, ${slo.c_at_sla:.3f}/MTok "
           f"= {slo.premium:.2f}x the (SLA-infeasible: "
           f"{not slo.sat_feasible}) saturation floor ${slo.c_sat:.3f}")
+
+    print(f"\nfull paper matrices: python -m repro.experiments.run "
+          f"--plan paper_a100 --resume")
 
 
 if __name__ == "__main__":

@@ -6,7 +6,8 @@ completed-requests-within-window, exactly as the paper does at lambda>=50.
 The sweep emits RunRecords; theta_max is back-filled as the max measured
 TPS across the ladder (raw saturation, no SLO bound — §4.4).
 
-Two drivers share the same per-point protocol:
+Two drivers share the same per-point protocol; both are thin ladder
+plans over the experiment-matrix subsystem (`repro.experiments`, ISSUE 2):
 
 * `lambda_sweep`  — serial, any engine factory.
 * `parallel_sweep` — independent (lambda, config) points fanned across a
@@ -14,17 +15,14 @@ Two drivers share the same per-point protocol:
   as in the serial path (`seed + int(lam * 1000)`), so the two drivers
   return identical records in ladder order. The engine factory must be
   picklable (use `SimEngineSpec`); if the pool cannot be used (factory
-  not picklable, pool start failure) the sweep silently falls back to
-  the serial path — results are the same either way.
+  not picklable, pool start failure) the sweep falls back to the serial
+  path with a `RuntimeWarning` naming the reason — results are the same
+  either way, just single-core.
 """
 from __future__ import annotations
 
-import concurrent.futures
 import dataclasses
-import multiprocessing
-import pickle
-import sys
-from typing import Callable, List, Optional, Sequence, Tuple
+from typing import Callable, List, Optional, Sequence
 
 import numpy as np
 
@@ -126,29 +124,22 @@ def run_point(engine_factory: Callable[[], Engine], spec: ArrivalSpec, *,
     return rec
 
 
-def _ladder_specs(ladder, *, io_shape, scale, requests_per_point,
-                  warmup_per_point, seed, process, cv
-                  ) -> List[Tuple[ArrivalSpec, int]]:
-    """Per-point arrival specs + warmup counts, shared by both drivers so
-    the deterministic seed derivation can never diverge."""
-    if requests_per_point is None:
-        requests_per_point = default_requests_per_point
-    if warmup_per_point is None:
-        warmup_per_point = default_warmup_per_point
-    out = []
-    for lam in ladder:
-        spec = ArrivalSpec(lam=lam, n_requests=requests_per_point(lam),
-                           io_shape=io_shape, process=process, cv=cv,
-                           seed=seed + int(lam * 1000), scale=scale)
-        out.append((spec, warmup_per_point(lam)))
-    return out
-
-
-def _backfill_theta(records: List[RunRecord]) -> List[RunRecord]:
-    theta_max = max(r.tps for r in records)
-    for r in records:
-        r.theta_max = theta_max
-    return records
+def _ladder_sweep(engine_factory, *, parallel, ladder, io_shape, scale,
+                  requests_per_point, warmup_per_point, horizon, seed,
+                  process, cv, max_workers=None, mp_context=None,
+                  **record_kw) -> List[RunRecord]:
+    """Both drivers: build the single-group ladder plan (seeds
+    `seed + int(lam * 1000)`, unchanged since PR 1) and hand it to the
+    experiment runner. Imported lazily — `repro.experiments` depends on
+    this module at import time, not vice versa."""
+    from repro.experiments.plan import ladder_plan
+    from repro.experiments.runner import PlanRunner
+    plan = ladder_plan(ladder=ladder, io_shape=io_shape, scale=scale,
+                       requests_per_point=requests_per_point,
+                       warmup_per_point=warmup_per_point, horizon=horizon,
+                       seed=seed, process=process, cv=cv, **record_kw)
+    return PlanRunner(plan, factory=engine_factory).run(
+        parallel=parallel, max_workers=max_workers, mp_context=mp_context)
 
 
 def lambda_sweep(engine_factory, *, ladder: Sequence[float] = LAMBDA_LADDER,
@@ -159,21 +150,11 @@ def lambda_sweep(engine_factory, *, ladder: Sequence[float] = LAMBDA_LADDER,
                  process: str = "poisson", cv: float = 1.0,
                  **record_kw) -> List[RunRecord]:
     """Full ladder sweep; back-fills theta_max = max TPS across points."""
-    specs = _ladder_specs(ladder, io_shape=io_shape, scale=scale,
-                          requests_per_point=requests_per_point,
-                          warmup_per_point=warmup_per_point, seed=seed,
-                          process=process, cv=cv)
-    records = [run_point(engine_factory, spec, warmup=warm, horizon=horizon,
-                         **record_kw)
-               for spec, warm in specs]
-    return _backfill_theta(records)
-
-
-def _run_point_task(payload) -> RunRecord:
-    """Top-level pool-worker entry (must be importable under spawn)."""
-    engine_factory, spec, warmup, horizon, record_kw = payload
-    return run_point(engine_factory, spec, warmup=warmup, horizon=horizon,
-                     **record_kw)
+    return _ladder_sweep(engine_factory, parallel=False, ladder=ladder,
+                         io_shape=io_shape, scale=scale,
+                         requests_per_point=requests_per_point,
+                         warmup_per_point=warmup_per_point, horizon=horizon,
+                         seed=seed, process=process, cv=cv, **record_kw)
 
 
 def parallel_sweep(engine_factory, *,
@@ -197,30 +178,15 @@ def parallel_sweep(engine_factory, *,
     may hold live JAX threads at the cost of ~1s interpreter+numpy
     startup per worker. Pool overhead only amortizes for paper-scale
     points; tiny ladders are often faster through `lambda_sweep`.
+
+    If the pool cannot be used (unpicklable factory, pool start failure)
+    the sweep emits a `RuntimeWarning` naming the reason and degrades to
+    the serial path with identical results.
     """
-    specs = _ladder_specs(ladder, io_shape=io_shape, scale=scale,
-                          requests_per_point=requests_per_point,
-                          warmup_per_point=warmup_per_point, seed=seed,
-                          process=process, cv=cv)
-    payloads = [(engine_factory, spec, warm, horizon, dict(record_kw))
-                for spec, warm in specs]
-    records: Optional[List[RunRecord]] = None
-    if mp_context is None:
-        mp_context = ("fork"
-                      if "fork" in multiprocessing.get_all_start_methods()
-                      and "jax" not in sys.modules else "spawn")
-    if len(payloads) > 1:
-        try:
-            ctx = multiprocessing.get_context(mp_context)
-            with concurrent.futures.ProcessPoolExecutor(
-                    max_workers=max_workers or min(len(payloads),
-                                                   multiprocessing.cpu_count()),
-                    mp_context=ctx) as pool:
-                records = list(pool.map(_run_point_task, payloads))
-        except (pickle.PicklingError, AttributeError, TypeError,
-                OSError, EOFError,
-                concurrent.futures.process.BrokenProcessPool):
-            records = None            # unpicklable factory / broken pool
-    if records is None:
-        records = [_run_point_task(p) for p in payloads]
-    return _backfill_theta(records)
+    return _ladder_sweep(engine_factory, parallel=True, ladder=ladder,
+                         io_shape=io_shape, scale=scale,
+                         requests_per_point=requests_per_point,
+                         warmup_per_point=warmup_per_point, horizon=horizon,
+                         seed=seed, process=process, cv=cv,
+                         max_workers=max_workers, mp_context=mp_context,
+                         **record_kw)

@@ -1,0 +1,34 @@
+"""Declarative experiment-matrix subsystem (ISSUE 2).
+
+The paper's headline numbers come from full benchmark *matrices* — 42
+H100-analogue and 56 A100-analogue cells over (model, hardware, quant,
+lambda) — not from single lambda ladders. This package turns those
+matrices into first-class, resumable objects:
+
+  plan.py    — Cell / GridSpec / ExperimentPlan frozen dataclasses; a grid
+               spec expands deterministically (same spec -> same cell list
+               and same per-cell seeds, derived from the plan seed).
+  store.py   — resumable on-disk result store:
+               results/experiments/<plan>/cell_<id>.json per finished cell
+               plus a consolidated CSV + manifest; completed cells are
+               skipped on restart.
+  runner.py  — PlanRunner: shards *whole cells* across the spawn process
+               pool (the ladder-point pool generalized), falls back to
+               serial with an explicit warning, streams finished records
+               into the store.
+  plans.py   — the first-class plans: paper_h100 (42 cells on tpu-v5p),
+               paper_a100 (56 cells on tpu-v5e), mini_2x2 (CI smoke),
+               quickstart.
+  analyze.py — derives the paper's figures from a store: penalty-vs-lambda
+               spread, active-params saturation ordering, per-hardware FP8
+               uplift, API crossover.
+  run.py     — CLI: python -m repro.experiments.run --plan paper_a100 --resume
+
+`core.sweep.lambda_sweep` / `parallel_sweep` are thin ladder plans over
+this machinery; `launch.optimized_sweep` builds its grid via `iter_grid`.
+"""
+from repro.experiments.plan import (  # noqa: F401
+    Cell, ExperimentPlan, GridSpec, iter_grid, ladder_plan)
+from repro.experiments.plans import PLANS, get_plan  # noqa: F401
+from repro.experiments.runner import PlanRunner, run_cell  # noqa: F401
+from repro.experiments.store import ExperimentStore  # noqa: F401

@@ -1,0 +1,260 @@
+"""Declarative experiment cells and plans.
+
+A `Cell` is one fully-specified measurement — everything `run_point`
+needs, flattened into a frozen, picklable, hashable record: model/hw/quant
+coordinates, the offered rate, the arrival protocol (request counts baked
+to ints at expansion time) and the engine knobs. A `GridSpec` expands an
+arch x hw x quant x n_chips x lambda x io_shape product into an
+`ExperimentPlan`; expansion is pure, so the same spec always yields the
+same cell list with the same per-cell seeds.
+
+Seed derivation: each ladder group (every coordinate except lambda) gets a
+group seed from the plan seed plus a CRC32 of the group key — stable
+across processes and Python versions, unlike `hash()` — and each cell in
+the group derives `group_seed + int(lam * 1000)`, the exact rule
+`core.sweep._ladder_specs` has always used. A ladder plan built from the
+same seed therefore reproduces `lambda_sweep` records bit-for-bit.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import itertools
+import json
+import zlib
+from typing import Callable, Dict, Iterator, List, Optional, Sequence, Tuple
+
+from repro.core.pricing import chip_hour_price
+from repro.core.sweep import (LAMBDA_LADDER, SimEngineSpec,
+                              default_requests_per_point,
+                              default_warmup_per_point)
+
+
+def quick_requests_per_point(lam: float) -> int:
+    """The examples' reduced protocol (~10x lighter than the paper's)."""
+    return int(min(600, max(120, 20 * lam)))
+
+
+def smoke_requests_per_point(lam: float) -> int:
+    """CI-smoke tier: just enough traffic to exercise the queue."""
+    return int(min(80, max(30, 4 * lam)))
+
+
+def zero_warmup(lam: float) -> int:
+    return 0
+
+
+# protocol name -> (requests_per_point, warmup_per_point); cells bake the
+# resulting ints so workers never ship callables across the pool.
+PROTOCOLS: Dict[str, Tuple[Callable[[float], int], Callable[[float], int]]] = {
+    "paper": (default_requests_per_point, default_warmup_per_point),
+    "quick": (quick_requests_per_point, zero_warmup),
+    "smoke": (smoke_requests_per_point, zero_warmup),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Cell:
+    """One (model, hw, quant, n_chips, lambda, io_shape) measurement."""
+    plan: str
+    config: str                 # record label (paper C1..C6 or free-form)
+    model: str
+    arch: str                   # registry key for the engine factory
+    hw: str
+    quant: str
+    n_chips: int
+    lam: float
+    io_shape: str
+    seed: int
+    n_requests: int
+    warmup: int
+    price_per_hr: float
+    process: str = "poisson"
+    cv: float = 1.0
+    scale: float = 1.0
+    horizon: Optional[float] = None
+    failure_times: Tuple[float, ...] = ()
+    engine_kind: str = "sim"
+    # engine knobs (SimEngineSpec fields)
+    max_batch: int = 256
+    page_size: int = 16
+    num_pages: int = 65536
+    max_pages_per_seq: int = 64
+    prefill_token_budget: int = 2048
+    max_prefill_reqs: int = 8
+    fast_forward: bool = True
+
+    @property
+    def cell_id(self) -> str:
+        lam = f"{self.lam:g}".replace(".", "p")
+        raw = (f"{self.arch}_{self.hw}_{self.quant}_x{self.n_chips}"
+               f"_{self.io_shape}_lam{lam}")
+        return raw.replace("/", "-")
+
+    @property
+    def group_key(self) -> Tuple:
+        """Ladder group: theta_max is back-filled across cells that share
+        everything but the offered rate."""
+        return (self.config, self.model, self.arch, self.hw, self.quant,
+                self.n_chips, self.io_shape, self.process, self.cv,
+                self.scale, self.engine_kind)
+
+    def fingerprint(self) -> str:
+        """Spec hash stored beside each result; a stale on-disk cell (spec
+        changed since it ran) is re-run instead of resumed."""
+        blob = json.dumps(dataclasses.asdict(self), sort_keys=True)
+        return hashlib.sha256(blob.encode()).hexdigest()[:16]
+
+    def engine_spec(self) -> SimEngineSpec:
+        return SimEngineSpec(
+            arch=self.arch, hw=self.hw, quant=self.quant,
+            n_chips=self.n_chips, max_batch=self.max_batch,
+            page_size=self.page_size, num_pages=self.num_pages,
+            max_pages_per_seq=self.max_pages_per_seq,
+            prefill_token_budget=self.prefill_token_budget,
+            max_prefill_reqs=self.max_prefill_reqs,
+            fast_forward=self.fast_forward)
+
+    def arrival_spec(self):
+        from repro.serving.arrivals import ArrivalSpec
+        return ArrivalSpec(lam=self.lam, n_requests=self.n_requests,
+                           io_shape=self.io_shape, process=self.process,
+                           cv=self.cv, seed=self.seed, scale=self.scale)
+
+    def record_kw(self) -> Dict:
+        return dict(config=self.config, model=self.model, hw=self.hw,
+                    n_chips=self.n_chips, quant=self.quant,
+                    engine_kind=self.engine_kind,
+                    price_per_hr=self.price_per_hr)
+
+
+def group_seed(plan_seed: int, group_key: Sequence) -> int:
+    """Stable per-group base seed (CRC32, not hash(): PYTHONHASHSEED-proof)."""
+    key = "|".join(str(k) for k in group_key)
+    return plan_seed + (zlib.crc32(key.encode()) % 900_000_000)
+
+
+def cell_seed(plan_seed: int, group_key: Sequence, lam: float) -> int:
+    """group base + the ladder rule `_ladder_specs` has always used."""
+    return group_seed(plan_seed, group_key) + int(lam * 1000)
+
+
+@dataclasses.dataclass(frozen=True)
+class ExperimentPlan:
+    name: str
+    cells: Tuple[Cell, ...]
+    seed: int = 0
+    description: str = ""
+
+    def __len__(self) -> int:
+        return len(self.cells)
+
+    def groups(self) -> Dict[Tuple, List[Cell]]:
+        out: Dict[Tuple, List[Cell]] = {}
+        for c in self.cells:
+            out.setdefault(c.group_key, []).append(c)
+        return out
+
+    def transform(self, fn: Callable[[Cell], Cell],
+                  suffix: str = "") -> "ExperimentPlan":
+        """Plan transform: map every cell (e.g. a PERF-override variant).
+        The transformed plan keeps per-cell seeds unless `fn` changes them."""
+        cells = tuple(fn(c) for c in self.cells)
+        return dataclasses.replace(
+            self, name=self.name + suffix, cells=cells)
+
+    def subset(self, pred: Callable[[Cell], bool]) -> "ExperimentPlan":
+        return dataclasses.replace(
+            self, cells=tuple(c for c in self.cells if pred(c)))
+
+
+def iter_grid(**axes: Sequence) -> Iterator[Dict]:
+    """Ordered cartesian product over named axes — the one grid walker the
+    subsystem (and launch/optimized_sweep) share, so every consumer
+    enumerates cells in the same deterministic order."""
+    names = list(axes)
+    for combo in itertools.product(*(axes[n] for n in names)):
+        yield dict(zip(names, combo))
+
+
+@dataclasses.dataclass(frozen=True)
+class GridSpec:
+    """Declarative arch x hw x quant x n_chips x lambda x io_shape grid."""
+    name: str
+    archs: Tuple[str, ...]
+    hws: Tuple[str, ...] = ("tpu-v5e",)
+    quants: Tuple[str, ...] = ("bf16",)
+    ladder: Tuple[float, ...] = LAMBDA_LADDER
+    io_shapes: Tuple[str, ...] = ("chat",)
+    n_chips: int = 1
+    # per-arch TP override as (arch, n_chips) pairs (frozen-friendly map)
+    n_chips_by_arch: Tuple[Tuple[str, int], ...] = ()
+    seed: int = 0
+    protocol: str = "paper"
+    process: str = "poisson"
+    cv: float = 1.0
+    scale: float = 1.0
+    description: str = ""
+    # engine knobs applied to every cell
+    max_batch: int = 256
+    num_pages: int = 65536
+    max_pages_per_seq: int = 64
+    fast_forward: bool = True
+
+    def chips_for(self, arch: str) -> int:
+        return dict(self.n_chips_by_arch).get(arch, self.n_chips)
+
+    def expand(self) -> ExperimentPlan:
+        """Pure expansion: same spec -> same cells, same seeds."""
+        req_fn, warm_fn = PROTOCOLS[self.protocol]
+        cells: List[Cell] = []
+        for ax in iter_grid(arch=self.archs, hw=self.hws, quant=self.quants,
+                            io_shape=self.io_shapes, lam=self.ladder):
+            chips = self.chips_for(ax["arch"])
+            cell = Cell(
+                plan=self.name, config=ax["arch"], model=ax["arch"],
+                arch=ax["arch"], hw=ax["hw"], quant=ax["quant"],
+                n_chips=chips, lam=float(ax["lam"]),
+                io_shape=ax["io_shape"], seed=0,
+                n_requests=req_fn(ax["lam"]), warmup=warm_fn(ax["lam"]),
+                price_per_hr=chip_hour_price(ax["hw"], chips),
+                process=self.process, cv=self.cv, scale=self.scale,
+                max_batch=self.max_batch, num_pages=self.num_pages,
+                max_pages_per_seq=self.max_pages_per_seq,
+                fast_forward=self.fast_forward)
+            cells.append(dataclasses.replace(
+                cell, seed=cell_seed(self.seed, cell.group_key, cell.lam)))
+        return ExperimentPlan(name=self.name, cells=tuple(cells),
+                              seed=self.seed, description=self.description)
+
+
+def ladder_plan(*, name: str = "ladder", ladder: Sequence[float],
+                io_shape: str = "chat", scale: float = 1.0,
+                requests_per_point: Optional[Callable[[float], int]] = None,
+                warmup_per_point: Optional[Callable[[float], int]] = None,
+                horizon: Optional[float] = None, seed: int = 0,
+                process: str = "poisson", cv: float = 1.0,
+                config: str = "", model: str = "", hw: str = "cpu-node",
+                n_chips: int = 1, quant: str = "bf16",
+                engine_kind: str = "sim", price_per_hr: float = 1.0,
+                failure_times: Sequence[float] = (),
+                arch: str = "") -> ExperimentPlan:
+    """The single-group plan behind `lambda_sweep`/`parallel_sweep`.
+
+    Seeds are `seed + int(lam * 1000)` — the raw sweep seed, NOT routed
+    through `group_seed`, so refactored sweeps reproduce the historical
+    records exactly.
+    """
+    if requests_per_point is None:
+        requests_per_point = default_requests_per_point
+    if warmup_per_point is None:
+        warmup_per_point = default_warmup_per_point
+    cells = tuple(
+        Cell(plan=name, config=config, model=model, arch=arch, hw=hw,
+             quant=quant, n_chips=n_chips, lam=float(lam), io_shape=io_shape,
+             seed=seed + int(lam * 1000), n_requests=requests_per_point(lam),
+             warmup=warmup_per_point(lam), price_per_hr=price_per_hr,
+             process=process, cv=cv, scale=scale, horizon=horizon,
+             failure_times=tuple(failure_times), engine_kind=engine_kind)
+        for lam in ladder)
+    return ExperimentPlan(name=name, cells=cells, seed=seed)

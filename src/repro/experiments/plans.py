@@ -1,0 +1,124 @@
+"""First-class experiment plans: the paper's benchmark matrices.
+
+The paper's headline matrices are 42 H100 cells and 56 A100 cells over
+(model, quant, lambda) — 6 resp. 8 (model, quant) combinations times the
+7-point lambda ladder. Per DESIGN §3 the hardware axis maps onto TPU
+generations: H100 NVL -> tpu-v5p (fast, pricey, 95 GB), A100 PCIe ->
+tpu-v5e (slow, cheap, 16 GB). Both parts emulate fp8 (no native fp8
+MXU path), reproducing the paper's hardware-conditional quantization
+caveat: the HBM win survives, the compute path pays a dequant penalty, so
+compute-bound dense models can invert while memory-bound MoEs still gain.
+
+TP degrees are chosen so bf16 weights fit the part's HBM (the sim tier
+does not enforce fit, but cross-cell $/token comparisons are only
+meaningful for deployable footprints); price_per_hr scales with chips.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+from repro.core.sweep import LAMBDA_LADDER
+from repro.experiments.plan import ExperimentPlan, GridSpec
+
+# paper benchmark trio: dense 8B / ultra-sparse 30B-A3B MoE / 47B-A13B MoE
+PAPER_TRIO = ("llama31-8b", "qwen3-30b-a3b", "mixtral-8x7b")
+
+
+def paper_h100() -> ExperimentPlan:
+    """42 cells: 3 models x 2 quants x 7-lambda ladder on tpu-v5p."""
+    return GridSpec(
+        name="paper_h100",
+        description="H100-analogue matrix (paper §5): 3 models x "
+                    "{bf16, fp8} x 7-point ladder on tpu-v5p",
+        archs=PAPER_TRIO,
+        hws=("tpu-v5p",),
+        quants=("bf16", "fp8"),
+        ladder=LAMBDA_LADDER,
+        n_chips_by_arch=(("llama31-8b", 1), ("qwen3-30b-a3b", 1),
+                         ("mixtral-8x7b", 2)),
+        seed=0,
+        protocol="paper",
+    ).expand()
+
+
+def paper_a100() -> ExperimentPlan:
+    """56 cells: 4 models x 2 quants x 7-lambda ladder on tpu-v5e.
+
+    The extra dense mid-size model (phi3-medium-14b) widens the
+    active-params ordering probe on the cheaper part, giving the 8-combo
+    A100-analogue matrix of the paper."""
+    return GridSpec(
+        name="paper_a100",
+        description="A100-analogue matrix (paper §5): 4 models x "
+                    "{bf16, fp8} x 7-point ladder on tpu-v5e",
+        archs=PAPER_TRIO + ("phi3-medium-14b",),
+        hws=("tpu-v5e",),
+        quants=("bf16", "fp8"),
+        ladder=LAMBDA_LADDER,
+        n_chips_by_arch=(("llama31-8b", 2), ("phi3-medium-14b", 4),
+                         ("qwen3-30b-a3b", 8), ("mixtral-8x7b", 8)),
+        seed=0,
+        protocol="paper",
+    ).expand()
+
+
+def mini_2x2() -> ExperimentPlan:
+    """CI smoke: 2 archs x 2 lambdas, smoke-tier traffic (4 cells)."""
+    return GridSpec(
+        name="mini_2x2",
+        description="2x2 CI smoke matrix (sim tier)",
+        archs=("llama31-8b", "qwen3-30b-a3b"),
+        hws=("tpu-v5e",),
+        quants=("bf16",),
+        ladder=(5, 50),
+        seed=0,
+        protocol="smoke",
+        max_batch=64,
+        num_pages=8192,
+    ).expand()
+
+
+def quickstart() -> ExperimentPlan:
+    """The quickstart example's single-model ladder as a stored plan."""
+    return GridSpec(
+        name="quickstart",
+        description="quickstart: llama31-8b on tpu-v5e, quick protocol",
+        archs=("llama31-8b",),
+        hws=("tpu-v5e",),
+        quants=("bf16",),
+        ladder=(1, 5, 10, 25, 50, 100),
+        seed=0,
+        protocol="quick",
+    ).expand()
+
+
+def crossover_trio() -> ExperimentPlan:
+    """The crossover example's three configs on tpu-v5p, quick protocol."""
+    plans = []
+    for arch, quant, chips in (("llama31-8b", "bf16", 1),
+                               ("qwen3-30b-a3b", "int8", 1),
+                               ("mixtral-8x7b", "bf16", 2)):
+        plans.append(GridSpec(
+            name="crossover_trio", archs=(arch,), hws=("tpu-v5p",),
+            quants=(quant,), ladder=(1, 2, 5, 10, 25, 50, 100),
+            n_chips=chips, seed=0, protocol="quick").expand())
+    cells = tuple(c for p in plans for c in p.cells)
+    return ExperimentPlan(
+        name="crossover_trio", cells=cells, seed=0,
+        description="crossover example: 3 (model, quant, TP) configs on "
+                    "tpu-v5p, quick protocol")
+
+
+PLANS: Dict[str, Callable[[], ExperimentPlan]] = {
+    "paper_h100": paper_h100,
+    "paper_a100": paper_a100,
+    "mini_2x2": mini_2x2,
+    "quickstart": quickstart,
+    "crossover_trio": crossover_trio,
+}
+
+
+def get_plan(name: str) -> ExperimentPlan:
+    if name not in PLANS:
+        raise KeyError(f"unknown plan {name!r}; known: {sorted(PLANS)}")
+    return PLANS[name]()

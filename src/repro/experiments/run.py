@@ -1,0 +1,64 @@
+"""CLI: run an experiment plan against the resumable store.
+
+    PYTHONPATH=src python -m repro.experiments.run --plan paper_a100 --resume
+    PYTHONPATH=src python -m repro.experiments.run --plan mini_2x2 --analyze
+
+Resume is the default: re-invoking after a kill finishes only the
+remaining cells and re-derives an identical consolidated CSV. `--fresh`
+ignores (and overwrites) stored cells instead.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+from repro.experiments.analyze import report
+from repro.experiments.plans import PLANS, get_plan
+from repro.experiments.runner import PlanRunner
+from repro.experiments.store import ExperimentStore
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--plan", required=True,
+                    help=f"one of: {', '.join(sorted(PLANS))}")
+    ap.add_argument("--resume", action="store_true", default=True,
+                    help="skip cells already in the store (default)")
+    ap.add_argument("--fresh", dest="resume", action="store_false",
+                    help="re-run every cell, overwriting stored results")
+    ap.add_argument("--serial", action="store_true",
+                    help="disable the process pool")
+    ap.add_argument("--workers", type=int, default=None)
+    ap.add_argument("--mp-context", default=None,
+                    choices=(None, "fork", "spawn", "forkserver"))
+    ap.add_argument("--root", default=None,
+                    help="store root (default results/experiments)")
+    ap.add_argument("--analyze", action="store_true",
+                    help="print the paper-figure report after the run")
+    args = ap.parse_args(argv)
+
+    plan = get_plan(args.plan)
+    store = ExperimentStore(plan.name, args.root)
+    already = len(store.completed_ids(plan)) if args.resume else 0
+    print(f"plan {plan.name}: {len(plan.cells)} cells "
+          f"({already} already in store at {store.dir})")
+
+    t0 = time.time()
+
+    def progress(cell, rec, n_done, n_total):
+        print(f"[{n_done:>3}/{n_total}] {cell.cell_id:<46} "
+              f"tps={rec.tps:>8.1f} c_eff=${rec.c_eff:>8.3f}", flush=True)
+
+    runner = PlanRunner(plan, store=store)
+    records = runner.run(resume=args.resume, parallel=not args.serial,
+                         max_workers=args.workers,
+                         mp_context=args.mp_context, progress=progress)
+    print(f"\n{len(records)}/{len(plan.cells)} cells consolidated to "
+          f"{store.csv_path} in {time.time() - t0:.1f}s")
+    if args.analyze:
+        print()
+        print(report(records, title=plan.name))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,18 @@
+"""Pallas-TPU API compatibility shims.
+
+`pltpu.TPUCompilerParams` was renamed `pltpu.CompilerParams` across JAX
+releases; the container may carry either side of the rename. Every kernel
+routes its compiler params through `tpu_compiler_params` so the kernels
+compile (and run under interpret=True in CI) on both.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+_PARAMS_CLS = getattr(pltpu, "CompilerParams", None) or \
+    getattr(pltpu, "TPUCompilerParams")
+
+
+def tpu_compiler_params(**kwargs):
+    """pltpu.CompilerParams(...) under whichever name this JAX exports."""
+    return _PARAMS_CLS(**kwargs)

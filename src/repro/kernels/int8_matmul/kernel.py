@@ -17,6 +17,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import tpu_compiler_params
+
 
 def _mm_kernel(x_ref, w_ref, xs_ref, ws_ref, o_ref, acc_sc, *, num_kb: int):
     ki = pl.program_id(2)
@@ -63,7 +65,7 @@ def int8_matmul_kernel(x_q, w_q, x_scale, w_scale, *, block_m: int = 256,
         out_specs=pl.BlockSpec((block_m, block_n), lambda mi, ni, ki: (mi, ni)),
         out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
         scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.int32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x_q, w_q, x_scale, w_scale)

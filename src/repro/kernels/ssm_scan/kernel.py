@@ -18,6 +18,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import tpu_compiler_params
+
 
 def _scan_kernel(u_ref, dt_ref, b_ref, c_ref, a_ref, d_ref, h0_ref,
                  y_ref, hout_ref, h_sc, *, chunk: int, num_chunks: int):
@@ -85,7 +87,7 @@ def ssm_scan_kernel(u, dt, Bm, Cm, A, D, h0, *, chunk: int = 256,
             jax.ShapeDtypeStruct((B, di, N), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((block_di, N), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary", "arbitrary")),
         interpret=interpret,
     )(u, dt, Bm, Cm, A, D, h0)

@@ -4,6 +4,12 @@ os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
 
 """Beyond-paper optimized sweep: apply the §Perf winners fleet-wide.
 
+The (arch x shape) grid comes from the experiment subsystem's shared grid
+walker (`repro.experiments.iter_grid`) and the PERF overrides are applied
+as a *plan transform*: `perf_variant(cfg)` maps a baseline cell to its
+optimized twin, and the sweep runs the transformed grid — the same
+declarative shape as an ExperimentPlan.transform over engine cells.
+
 Serving cells (decode/prefill): fp8-e4m3 KV cache + flash-decoding.
 Recurrent-arch cells (ssm/hybrid): + shard_map-local recurrence.
 Saves results/dryrun_opt/<cell>.json; prints baseline-vs-optimized frac.
@@ -11,6 +17,7 @@ Saves results/dryrun_opt/<cell>.json; prints baseline-vs-optimized frac.
     PYTHONPATH=src python -m repro.launch.optimized_sweep [--shapes decode_32k,long_500k]
 """
 import argparse     # noqa: E402
+import contextlib   # noqa: E402
 import json         # noqa: E402
 from pathlib import Path  # noqa: E402
 
@@ -18,9 +25,28 @@ import jax.numpy as jnp   # noqa: E402
 
 import repro.models.model as model_lib       # noqa: E402
 from repro.configs import ALL_ARCHS, get_config  # noqa: E402
+from repro.experiments.plan import iter_grid  # noqa: E402
 from repro.launch.dryrun import RESULTS, run_cell  # noqa: E402
 
 OPT_RESULTS = RESULTS.parent / "dryrun_opt"
+
+
+def perf_variant(cfg) -> "model_lib.PerfConfig":
+    """The transform: baseline cell -> §Perf-winner overrides for it."""
+    return model_lib.PerfConfig(
+        kv_cache_dtype=jnp.float8_e4m3fn,
+        flash_decode=True,
+        local_recurrence=cfg.family in ("ssm", "hybrid"))
+
+
+@contextlib.contextmanager
+def perf_overrides(perf: "model_lib.PerfConfig"):
+    prev = model_lib.PERF
+    model_lib.PERF = perf
+    try:
+        yield
+    finally:
+        model_lib.PERF = prev
 
 
 def main():
@@ -32,39 +58,34 @@ def main():
     OPT_RESULTS.mkdir(parents=True, exist_ok=True)
 
     rows = []
-    for arch in args.archs.split(","):
+    for ax in iter_grid(arch=args.archs.split(","), shape=shapes):
+        arch, shape = ax["arch"], ax["shape"]
         cfg = get_config(arch)
-        arch_shapes = [s.name for s in cfg.shapes() if s.name in shapes]
-        for shape in arch_shapes:
-            base_f = RESULTS / f"{arch}_{shape}_16x16_bf16.json"
-            base = json.load(open(base_f)) if base_f.exists() else None
-            prev = model_lib.PERF
-            try:
-                model_lib.PERF = model_lib.PerfConfig(
-                    kv_cache_dtype=jnp.float8_e4m3fn,
-                    flash_decode=True,
-                    local_recurrence=cfg.family in ("ssm", "hybrid"))
+        if shape not in {s.name for s in cfg.shapes()}:
+            continue
+        base_f = RESULTS / f"{arch}_{shape}_16x16_bf16.json"
+        base = json.load(open(base_f)) if base_f.exists() else None
+        try:
+            with perf_overrides(perf_variant(cfg)):
                 rec = run_cell(arch, shape, save=False, verbose=False)
-            except Exception as e:  # noqa: BLE001
-                print(f"FAIL {arch} x {shape}: {e}")
-                continue
-            finally:
-                model_lib.PERF = prev
-            (OPT_RESULTS / f"{arch}_{shape}_16x16_bf16.json").write_text(
-                json.dumps(rec, indent=1))
-            t = rec["roofline"]
-            b = base["roofline"] if base else {}
-            rows.append((arch, shape, b.get("roofline_frac"),
-                         t["roofline_frac"], b.get("memory_s"),
-                         t["memory_s"], b.get("collective_s"),
-                         t["collective_s"]))
-            print(f"{arch:<26} {shape:<11} frac "
-                  f"{b.get('roofline_frac', float('nan')):.3f}"
-                  f"->{t['roofline_frac']:.3f}  mem "
-                  f"{b.get('memory_s', float('nan')):.4g}"
-                  f"->{t['memory_s']:.4g}  coll "
-                  f"{b.get('collective_s', float('nan')):.4g}"
-                  f"->{t['collective_s']:.4g}")
+        except Exception as e:  # noqa: BLE001
+            print(f"FAIL {arch} x {shape}: {e}")
+            continue
+        (OPT_RESULTS / f"{arch}_{shape}_16x16_bf16.json").write_text(
+            json.dumps(rec, indent=1))
+        t = rec["roofline"]
+        b = base["roofline"] if base else {}
+        rows.append((arch, shape, b.get("roofline_frac"),
+                     t["roofline_frac"], b.get("memory_s"),
+                     t["memory_s"], b.get("collective_s"),
+                     t["collective_s"]))
+        print(f"{arch:<26} {shape:<11} frac "
+              f"{b.get('roofline_frac', float('nan')):.3f}"
+              f"->{t['roofline_frac']:.3f}  mem "
+              f"{b.get('memory_s', float('nan')):.4g}"
+              f"->{t['memory_s']:.4g}  coll "
+              f"{b.get('collective_s', float('nan')):.4g}"
+              f"->{t['collective_s']:.4g}")
     better = sum(1 for r in rows if r[2] is not None and r[3] > r[2])
     print(f"\n{better}/{len(rows)} cells improved roofline fraction")
 

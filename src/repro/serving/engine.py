@@ -240,6 +240,22 @@ class Engine:
             if next_fail is not None and self.t >= next_fail:
                 self.fail_running(0.5)
                 next_fail = next(fail_iter, None)
+            # idle regime (ISSUE 2): batch and queue both empty — jump the
+            # clock straight to the next arrival and admit it (plus any
+            # co-arrivals) in this same wakeup, instead of burning a whole
+            # scheduler iteration on the advance alone. The reference loop
+            # re-checks horizon and failure injection at the top of its
+            # next iteration before admitting, so replay those two checks
+            # here to keep the event order identical.
+            if (not self.slot_req and not queue and not self._requeue
+                    and pi < len(pending)
+                    and pending[pi].arrival_time > self.t):
+                self._advance(max(pending[pi].arrival_time - self.t, 1e-6))
+                if horizon is not None and self.t >= horizon:
+                    break
+                if next_fail is not None and self.t >= next_fail:
+                    self.fail_running(0.5)
+                    next_fail = next(fail_iter, None)
             # arrivals
             while pi < len(pending) and pending[pi].arrival_time <= self.t:
                 queue.append(pending[pi])

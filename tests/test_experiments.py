@@ -1,0 +1,221 @@
+"""Experiment-matrix subsystem (ISSUE 2): plan expansion determinism,
+shard-vs-serial record identity, and resume-after-partial-run artifact
+identity."""
+import dataclasses
+import json
+
+import pytest
+
+from repro.experiments import (Cell, ExperimentStore, GridSpec, PlanRunner,
+                               get_plan)
+from repro.experiments.plan import cell_seed, ladder_plan
+from repro.experiments.store import backfill_theta
+
+
+def _mini_spec(**over):
+    kw = dict(name="mini", archs=("llama31-8b", "qwen3-30b-a3b"),
+              hws=("tpu-v5e",), quants=("bf16",), ladder=(5, 50),
+              seed=0, protocol="smoke", max_batch=64, num_pages=8192)
+    kw.update(over)
+    return GridSpec(**kw)
+
+
+# ---- expansion determinism -------------------------------------------
+
+
+def test_expansion_deterministic_and_seeded():
+    """Same spec -> same cell list, same derived seeds; the plan seed and
+    every grid coordinate perturb the derivation."""
+    a, b = _mini_spec().expand(), _mini_spec().expand()
+    assert a == b
+    assert [c.cell_id for c in a.cells] == [c.cell_id for c in b.cells]
+    assert len({c.cell_id for c in a.cells}) == len(a.cells)
+    for c in a.cells:
+        assert c.seed == cell_seed(0, c.group_key, c.lam)
+    # a different plan seed moves every cell seed
+    c = _mini_spec(seed=123).expand()
+    assert [x.seed for x in c.cells] != [x.seed for x in a.cells]
+    assert [x.cell_id for x in c.cells] == [x.cell_id for x in a.cells]
+    # ladder cells within a group differ only by the lam-derived offset
+    g0 = [x for x in a.cells if x.arch == "llama31-8b"]
+    assert g0[1].seed - g0[0].seed == int(50 * 1000) - int(5 * 1000)
+
+
+def test_paper_plans_have_paper_cell_counts():
+    h100, a100 = get_plan("paper_h100"), get_plan("paper_a100")
+    assert len(h100) == 42 and all(c.hw == "tpu-v5p" for c in h100.cells)
+    assert len(a100) == 56 and all(c.hw == "tpu-v5e" for c in a100.cells)
+    for plan in (h100, a100):
+        assert len({c.cell_id for c in plan.cells}) == len(plan)
+        assert {c.quant for c in plan.cells} == {"bf16", "fp8"}
+        assert {c.lam for c in plan.cells} == {1, 5, 10, 25, 50, 100, 200}
+        # price book is baked per cell: chips scale the hourly price
+        for c in plan.cells:
+            from repro.core.pricing import chip_hour_price
+            assert c.price_per_hr == chip_hour_price(c.hw, c.n_chips)
+
+
+def test_plan_transform_maps_cells():
+    plan = _mini_spec().expand()
+    doubled = plan.transform(
+        lambda c: dataclasses.replace(c, n_chips=2), suffix="_x2")
+    assert doubled.name == "mini_x2"
+    assert all(c.n_chips == 2 for c in doubled.cells)
+    assert [c.seed for c in doubled.cells] == [c.seed for c in plan.cells]
+
+
+def test_ladder_plan_uses_raw_sweep_seeds():
+    """The lambda_sweep compatibility path must keep the historical
+    `seed + int(lam*1000)` derivation untouched."""
+    plan = ladder_plan(ladder=(1, 10, 50), seed=7, arch="llama31-8b",
+                      config="C1", model="llama31-8b", hw="tpu-v5e")
+    assert [c.seed for c in plan.cells] == [7 + 1000, 7 + 10000, 7 + 50000]
+
+
+# ---- shard-vs-serial identity ----------------------------------------
+
+
+def test_sharded_records_match_serial_on_mini_plan():
+    plan = _mini_spec().expand()
+    assert len(plan) == 4
+    serial = PlanRunner(plan).run(parallel=False)
+    sharded = PlanRunner(plan).run(parallel=True)
+    assert len(serial) == len(sharded) == 4
+    for a, b in zip(serial, sharded):
+        assert dataclasses.asdict(a) == dataclasses.asdict(b)
+    # theta_max back-fills per ladder group, not across the whole plan
+    by_arch = {}
+    for c, r in zip(plan.cells, serial):
+        by_arch.setdefault(c.arch, []).append(r)
+    for recs in by_arch.values():
+        assert all(r.theta_max == max(x.tps for x in recs) for r in recs)
+
+
+# ---- resumable store -------------------------------------------------
+
+
+def test_resume_after_partial_run_identical_csv(tmp_path):
+    plan = _mini_spec().expand()
+    store = ExperimentStore(plan.name, tmp_path)
+    PlanRunner(plan, store=store).run(parallel=False)
+    full_csv = store.csv_path.read_bytes()
+    full_manifest = store.manifest_path.read_bytes()
+    assert json.loads(full_manifest)["n_completed"] == 4
+
+    # simulate a killed run: drop two finished cells + the consolidation
+    for cell in plan.cells[1:3]:
+        store.cell_path(cell).unlink()
+    store.csv_path.unlink()
+    assert store.completed_ids(plan) == {plan.cells[0].cell_id,
+                                         plan.cells[3].cell_id}
+
+    ran = []
+    PlanRunner(plan, store=store).run(
+        parallel=False,
+        progress=lambda c, r, i, n: ran.append(c.cell_id))
+    assert sorted(ran) == sorted(c.cell_id for c in plan.cells[1:3])
+    assert store.csv_path.read_bytes() == full_csv
+    assert store.manifest_path.read_bytes() == full_manifest
+
+
+def test_stale_fingerprint_forces_rerun(tmp_path):
+    plan = _mini_spec().expand()
+    store = ExperimentStore(plan.name, tmp_path)
+    PlanRunner(plan, store=store).run(parallel=False)
+    # the same grid with another seed invalidates every stored cell
+    reseeded = _mini_spec(seed=99).expand()
+    assert store.completed_ids(reseeded) == set()
+    ran = []
+    PlanRunner(reseeded, store=store).run(
+        parallel=False,
+        progress=lambda c, r, i, n: ran.append(c.cell_id))
+    assert len(ran) == 4
+
+
+def test_store_survives_torn_cell_file(tmp_path):
+    plan = _mini_spec().expand()
+    store = ExperimentStore(plan.name, tmp_path)
+    PlanRunner(plan, store=store).run(parallel=False)
+    store.cell_path(plan.cells[0]).write_text('{"cell_id": "trunca')
+    assert plan.cells[0].cell_id not in store.completed_ids(plan)
+    records = PlanRunner(plan, store=store).run(parallel=False)
+    assert len(records) == 4
+
+
+def test_backfill_theta_partial_groups():
+    plan = _mini_spec().expand()
+    recs = PlanRunner(plan).run(parallel=False)
+    partial = {plan.cells[0].cell_id: dataclasses.replace(recs[0])}
+    out = backfill_theta(plan, partial)
+    assert len(out) == 1 and out[0].theta_max == out[0].tps
+
+
+def test_cell_is_picklable_and_builds_engine():
+    import pickle
+    cell = get_plan("paper_a100").cells[0]
+    cell2 = pickle.loads(pickle.dumps(cell))
+    assert cell2 == cell
+    eng = cell2.engine_spec()()
+    assert eng.cfg.max_batch == cell.max_batch
+
+
+def test_broken_pool_keeps_finished_cells(monkeypatch):
+    """A pool that dies mid-run must keep the cells it finished (each
+    reported exactly once), warn, and complete only the rest serially."""
+    import concurrent.futures
+
+    plan = _mini_spec().expand()
+    orig = concurrent.futures.as_completed
+
+    def dies_after_one(futs):
+        it = orig(futs)
+        yield next(it)
+        raise concurrent.futures.process.BrokenProcessPool("injected")
+
+    monkeypatch.setattr(concurrent.futures, "as_completed", dies_after_one)
+    seen = []
+    with pytest.warns(RuntimeWarning, match="process pool failed"):
+        recs = PlanRunner(plan).run(
+            parallel=True,
+            progress=lambda c, r, i, n: seen.append(i))
+    assert seen == [1, 2, 3, 4]          # monotone: no double-reports
+    monkeypatch.setattr(concurrent.futures, "as_completed", orig)
+    serial = PlanRunner(plan).run(parallel=False)
+    assert [dataclasses.asdict(a) for a in recs] == \
+        [dataclasses.asdict(b) for b in serial]
+
+
+def test_task_exception_fails_fast_without_pool_warning():
+    """A broken *cell* (not a broken pool) must propagate its own error
+    instead of being misread as an infrastructure failure and re-run
+    serially behind a misleading warning."""
+    import warnings as warnings_mod
+
+    plan = _mini_spec().expand()
+    bad = plan.transform(lambda c: dataclasses.replace(c, n_chips="2"))
+    with warnings_mod.catch_warnings(record=True) as caught:
+        warnings_mod.simplefilter("always")
+        with pytest.raises(TypeError):
+            PlanRunner(bad).run(parallel=True)
+    assert not any("process pool failed" in str(w.message) for w in caught)
+
+
+def test_failure_times_flow_through_cells():
+    """The sweep API accepted failure_times pre-refactor; cells carry it."""
+    from repro.core import SimEngineSpec, lambda_sweep
+    fac = SimEngineSpec("llama31-8b", max_batch=64, num_pages=8192)
+    recs = lambda_sweep(fac, ladder=(10,),
+                        requests_per_point=lambda lam: 60,
+                        warmup_per_point=lambda lam: 0,
+                        failure_times=[0.5], config="C1",
+                        model="llama31-8b", hw="tpu-v5e")
+    assert recs[0].n_completed == 60
+    plan = ladder_plan(ladder=(10,), failure_times=[0.5])
+    assert plan.cells[0].failure_times == (0.5,)
+
+
+def test_unknown_plan_and_protocol_raise():
+    with pytest.raises(KeyError, match="unknown plan"):
+        get_plan("nope")
+    with pytest.raises(KeyError):
+        _mini_spec(protocol="nope").expand()

@@ -3,6 +3,8 @@ same deterministic per-point seeds, same ladder order — whether the
 points actually ran in pool workers or fell back to the serial path."""
 import dataclasses
 
+import pytest
+
 from repro.core import SimEngineSpec, lambda_sweep, parallel_sweep
 from repro.serving import Engine, EngineConfig, SimExecutor
 
@@ -40,9 +42,10 @@ def test_parallel_with_warmup_matches_serial():
     _records_equal(serial, par)
 
 
-def test_unpicklable_factory_falls_back_to_serial():
+def test_unpicklable_factory_falls_back_to_serial_with_warning():
     """A closure factory cannot cross the process boundary; the sweep must
-    quietly degrade to the serial path with identical results."""
+    degrade to the serial path with identical results — and say so
+    (ISSUE 2 satellite: the fallback warns instead of hiding)."""
     from repro.configs import get_config
     from repro.simulate import StepTimeModel, V5E
 
@@ -53,7 +56,8 @@ def test_unpicklable_factory_falls_back_to_serial():
                       SimExecutor(cfg, StepTimeModel(cfg, V5E)))
 
     serial = lambda_sweep(closure_factory, **_kw())
-    par = parallel_sweep(closure_factory, **_kw())
+    with pytest.warns(RuntimeWarning, match="falling back to the serial"):
+        par = parallel_sweep(closure_factory, **_kw())
     _records_equal(serial, par)
 
 
