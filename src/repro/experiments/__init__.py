@@ -17,11 +17,14 @@ matrices into first-class, resumable objects:
                serial with an explicit warning, streams finished records
                into the store.
   plans.py   — the first-class plans: paper_h100 (42 cells on tpu-v5p),
-               paper_a100 (56 cells on tpu-v5e), mini_2x2 (CI smoke),
-               quickstart.
+               paper_a100 (56 cells on tpu-v5e), paper_crosshw (126 cells
+               across v5e + v5p + v6e, ISSUE 3), mini_2x2 / mini_crosshw
+               (CI smokes), quickstart.
   analyze.py — derives the paper's figures from a store: penalty-vs-lambda
                spread, active-params saturation ordering, per-hardware FP8
-               uplift, API crossover.
+               uplift, API crossover; cross-hardware tables (spread
+               compression, native-fp8-conditioned inversion, ordering
+               survival) from a multi-hardware store.
   run.py     — CLI: python -m repro.experiments.run --plan paper_a100 --resume
 
 `core.sweep.lambda_sweep` / `parallel_sweep` are thin ladder plans over

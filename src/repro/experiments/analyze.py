@@ -6,16 +6,28 @@ crossover points through `core.crossover`, the active-params saturation
 ordering (§5.2), and the per-hardware FP8 uplift table (§5.3's
 hardware-conditional inversion).
 
+Cross-hardware tables (ISSUE 3, from a multi-hardware store such as
+`paper_crosshw`): the spread-compression table — per (model, quant) the
+min/max C_eff and load-driven spread on every hardware generation plus
+the compression ratio between the widest and narrowest part (the paper's
+2.5-36.3x H100 vs 7.0-11.4x A100 replication, §5.9/§7) — the FP8-uplift
+table conditioned on native-fp8 hardware, and whether the active-params
+saturation ordering survives on every generation.
+
     PYTHONPATH=src python -m repro.experiments.analyze --plan paper_a100
+    PYTHONPATH=src python -m repro.experiments.analyze --plan paper_crosshw \
+        --json results/experiments/paper_crosshw/analysis.json
 """
 from __future__ import annotations
 
 import argparse
+import json
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.cost import c_naive, underutilization_penalty
 from repro.core.crossover import crossover_table
 from repro.core.records import RunRecord
+from repro.simulate.hardware import HW_BY_NAME
 
 
 def _groups(records: Sequence[RunRecord]
@@ -115,6 +127,100 @@ def fp8_uplift(records: Sequence[RunRecord],
     return out
 
 
+def spread_compression(records: Sequence[RunRecord]) -> List[dict]:
+    """§5.9/§7: per (model, quant), the load-driven C_eff spread on every
+    hardware generation in the store, plus the compression ratio between
+    the widest and the narrowest part. The paper's claim-robustness
+    argument is that the spread *reproduces with compressed magnitude* on
+    the cheaper part — single-hardware confounding would not survive
+    this axis."""
+    by_mq: Dict[Tuple, Dict[Tuple, dict]] = {}
+    for key, group in _groups(records).items():
+        model, hw, quant, n_chips, io_shape = key
+        ceffs = [r.c_eff for r in group]
+        # distinct footprints (two TP degrees on one part) stay distinct
+        # rows instead of silently overwriting each other
+        by_mq.setdefault((model, quant, io_shape), {})[(hw, n_chips)] = {
+            "hw": hw, "n_chips": n_chips,
+            "c_min": min(ceffs), "c_max": max(ceffs),
+            "spread": max(ceffs) / min(ceffs),
+            "theta_max": group[0].theta_max,
+        }
+    out = []
+    for (model, quant, io_shape), by_hw in sorted(by_mq.items()):
+        if len({h for h, _ in by_hw}) < 2:
+            continue                 # the table is cross-hardware only
+        widest = max(by_hw.values(), key=lambda h: h["spread"])
+        narrowest = min(by_hw.values(), key=lambda h: h["spread"])
+        out.append({
+            "model": model, "quant": quant, "io_shape": io_shape,
+            "per_hw": [by_hw[k] for k in sorted(by_hw)],
+            "widest_hw": widest["hw"], "narrowest_hw": narrowest["hw"],
+            "compression": widest["spread"] / narrowest["spread"],
+        })
+    return out
+
+
+def fp8_inversion(records: Sequence[RunRecord],
+                  baseline: str = "bf16", variant: str = "fp8"
+                  ) -> List[dict]:
+    """The FP8-uplift table conditioned on native-fp8 hardware: the
+    paper's hardware-conditional caveat says the dense inversion is a
+    property of the *part* (emulated-fp8 dequant penalty), not the model —
+    so it must appear on non-native hardware and vanish on native-fp8
+    hardware. `consistent` records whether each row obeys that rule
+    (memory-bound MoEs may legitimately gain everywhere)."""
+    out = []
+    for row in fp8_uplift(records, baseline=baseline, variant=variant):
+        hw = HW_BY_NAME.get(row["hw"])
+        native = bool(hw.native_fp8) if hw is not None else False
+        out.append({
+            **row, "native_fp8": native,
+            # an inversion on a native-fp8 part would break the story;
+            # a gain on an emulating part is fine (MoEs keep the HBM win)
+            "consistent": not (native and row["inverted"]),
+        })
+    return out
+
+
+def crosshw_ordering(records: Sequence[RunRecord]) -> List[dict]:
+    """§5.2 across the hardware axis: per quant, does the per-chip
+    active-params saturation ordering survive on every generation?"""
+    by_quant: Dict[str, List[dict]] = {}
+    for row in active_params_ordering(records):
+        by_quant.setdefault(row["quant"], []).append(row)
+    out = []
+    for quant, rows in sorted(by_quant.items()):
+        if len(rows) < 2:
+            continue
+        out.append({
+            "quant": quant,
+            "hws": [r["hw"] for r in rows],
+            "holds_on": [r["hw"] for r in rows
+                         if r["ordered_by_active_params"]],
+            "survives_all_hw": all(r["ordered_by_active_params"]
+                                   for r in rows),
+        })
+    return out
+
+
+def crosshw_tables(records: Sequence[RunRecord]) -> Dict[str, List[dict]]:
+    """The three cross-hardware artifacts as one JSON-ready payload."""
+    return {
+        "spread_compression": spread_compression(records),
+        "fp8_inversion": fp8_inversion(records),
+        "active_params_ordering": crosshw_ordering(records),
+    }
+
+
+def write_tables(records: Sequence[RunRecord], path) -> None:
+    """Persist `crosshw_tables` as JSON — the one serialization both CLIs
+    (`run.py --analyze-json`, `analyze.py --json`) share, so the committed
+    artifact can never drift between the two entry points."""
+    with open(path, "w") as f:
+        json.dump(crosshw_tables(records), f, indent=1, sort_keys=True)
+
+
 def crossover_summary(records: Sequence[RunRecord]) -> List[dict]:
     """Per-group API crossover points (list prices, no SLA — §6.4 gate
     acknowledged explicitly here, as the examples always did)."""
@@ -150,17 +256,40 @@ def report(records: Sequence[RunRecord], title: str = "") -> str:
         lines.append(f"{row['hw']} {row['quant']}: {order}  "
                      f"[{ok} active-params order]")
 
-    uplift = fp8_uplift(records)
+    uplift = fp8_inversion(records)
     if uplift:
         lines.append("")
-        lines.append("-- FP8 uplift vs bf16 at saturation (per hardware) --")
-        lines.append(f"{'hw':<9} {'model':<24} {'TPS uplift':>10} "
-                     f"{'cost ratio':>10}  note")
+        lines.append("-- FP8 uplift vs bf16 at saturation (per hardware, "
+                     "conditioned on native fp8) --")
+        lines.append(f"{'hw':<9} {'fp8':<8} {'model':<24} "
+                     f"{'TPS uplift':>10} {'cost ratio':>10}  note")
         for row in uplift:
             note = "INVERTED (fp8 slower)" if row["inverted"] else "gain"
-            lines.append(f"{row['hw']:<9} {row['model']:<24} "
+            if not row["consistent"]:
+                note += "  !! inconsistent with native fp8"
+            native = "native" if row["native_fp8"] else "emulated"
+            lines.append(f"{row['hw']:<9} {native:<8} {row['model']:<24} "
                          f"{row['tps_uplift']:>9.2f}x "
                          f"{row['cost_ratio']:>9.2f}x  {note}")
+
+    compression = spread_compression(records)
+    if compression:
+        lines.append("")
+        lines.append("-- cross-hardware spread compression (§5.9/§7) --")
+        lines.append(f"{'model':<24} {'quant':<5} "
+                     f"{'per-hw spread (min..max C_eff)':<44} "
+                     f"{'compression':>11}")
+        for row in compression:
+            per_hw = "  ".join(
+                f"{h['hw']}:{h['spread']:.1f}x" for h in row["per_hw"])
+            lines.append(f"{row['model']:<24} {row['quant']:<5} "
+                         f"{per_hw:<44} {row['compression']:>10.2f}x "
+                         f"(widest {row['widest_hw']})")
+        for row in crosshw_ordering(records):
+            tag = ("survives every hw" if row["survives_all_hw"] else
+                   f"holds on {', '.join(row['holds_on']) or 'none'} "
+                   f"of {', '.join(row['hws'])}")
+            lines.append(f"active-params ordering [{row['quant']}]: {tag}")
 
     lines.append("")
     lines.append("-- API crossover (list prices, no SLA: §6.4 gate "
@@ -188,6 +317,10 @@ def main(argv=None):
     ap.add_argument("--plan", required=True)
     ap.add_argument("--root", default=None,
                     help="store root (default results/experiments)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write the cross-hardware tables "
+                         "(spread compression, fp8 inversion, ordering "
+                         "survival) as JSON")
     args = ap.parse_args(argv)
     records = load_store_records(args.plan, args.root)
     if not records:
@@ -195,6 +328,9 @@ def main(argv=None):
                          f"run: python -m repro.experiments.run "
                          f"--plan {args.plan}")
     print(report(records, title=args.plan))
+    if args.json:
+        write_tables(records, args.json)
+        print(f"\ncross-hardware tables written to {args.json}")
 
 
 if __name__ == "__main__":

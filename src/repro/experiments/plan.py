@@ -179,7 +179,14 @@ def iter_grid(**axes: Sequence) -> Iterator[Dict]:
 
 @dataclasses.dataclass(frozen=True)
 class GridSpec:
-    """Declarative arch x hw x quant x n_chips x lambda x io_shape grid."""
+    """Declarative arch x hw x quant x n_chips x lambda x io_shape grid.
+
+    Hardware is a first-class axis (ISSUE 3): one spec can span several
+    generations (`hws=("tpu-v5e", "tpu-v5p", "tpu-v6e")`) with
+    per-hardware TP degrees — the same model needs more of the small-HBM
+    part — via `n_chips_by_arch_hw`, and per-hardware quant restrictions
+    via `quants_by_hw` (e.g. probe fp8 only on the native-fp8 part).
+    """
     name: str
     archs: Tuple[str, ...]
     hws: Tuple[str, ...] = ("tpu-v5e",)
@@ -189,6 +196,13 @@ class GridSpec:
     n_chips: int = 1
     # per-arch TP override as (arch, n_chips) pairs (frozen-friendly map)
     n_chips_by_arch: Tuple[Tuple[str, int], ...] = ()
+    # per-(arch, hw) TP override; wins over n_chips_by_arch. This is what
+    # lets a cross-hardware plan deploy the same model at hardware-fitting
+    # footprints (bf16 weights must fit the part's HBM).
+    n_chips_by_arch_hw: Tuple[Tuple[str, str, int], ...] = ()
+    # per-hw quant allow-list as (hw, (quant, ...)) pairs; an hw absent
+    # from the map runs every quant in `quants`.
+    quants_by_hw: Tuple[Tuple[str, Tuple[str, ...]], ...] = ()
     seed: int = 0
     protocol: str = "paper"
     process: str = "poisson"
@@ -201,8 +215,18 @@ class GridSpec:
     max_pages_per_seq: int = 64
     fast_forward: bool = True
 
-    def chips_for(self, arch: str) -> int:
+    def chips_for(self, arch: str, hw: Optional[str] = None) -> int:
+        if hw is not None:
+            for a, h, n in self.n_chips_by_arch_hw:
+                if (a, h) == (arch, hw):
+                    return n
         return dict(self.n_chips_by_arch).get(arch, self.n_chips)
+
+    def quants_for(self, hw: str) -> Tuple[str, ...]:
+        allowed = dict(self.quants_by_hw).get(hw)
+        if allowed is None:
+            return self.quants
+        return tuple(q for q in self.quants if q in allowed)
 
     def expand(self) -> ExperimentPlan:
         """Pure expansion: same spec -> same cells, same seeds."""
@@ -210,7 +234,9 @@ class GridSpec:
         cells: List[Cell] = []
         for ax in iter_grid(arch=self.archs, hw=self.hws, quant=self.quants,
                             io_shape=self.io_shapes, lam=self.ladder):
-            chips = self.chips_for(ax["arch"])
+            if ax["quant"] not in self.quants_for(ax["hw"]):
+                continue
+            chips = self.chips_for(ax["arch"], ax["hw"])
             cell = Cell(
                 plan=self.name, config=ax["arch"], model=ax["arch"],
                 arch=ax["arch"], hw=ax["hw"], quant=ax["quant"],

@@ -9,6 +9,11 @@ MXU path), reproducing the paper's hardware-conditional quantization
 caveat: the HBM win survives, the compute path pays a dequant penalty, so
 compute-bound dense models can invert while memory-bound MoEs still gain.
 
+`paper_crosshw` (ISSUE 3) replicates the paper's §5.9/§7 cross-hardware
+argument in one plan: the same trio across v5e + v5p + the native-fp8
+v6e, with per-(arch, hw) TP degrees, so the spread-compression and
+FP8-inversion tables derive from a single store.
+
 TP degrees are chosen so bf16 weights fit the part's HBM (the sim tier
 does not enforce fit, but cross-cell $/token comparisons are only
 meaningful for deployable footprints); price_per_hr scales with chips.
@@ -62,6 +67,61 @@ def paper_a100() -> ExperimentPlan:
     ).expand()
 
 
+def paper_crosshw() -> ExperimentPlan:
+    """126 cells: 3 models x 3 hardware generations x {bf16, fp8} x
+    7-lambda ladder — the paper's §5.9/§7 cross-hardware replication as
+    ONE plan over ONE store.
+
+    TP degrees fit bf16 weights to each part's HBM (v5p 95 GB, v6e 32 GB,
+    v5e 16 GB), so the cross-hardware $/token comparison stays deployable.
+    v6e is the native-fp8 entry: the fp8 uplift must NOT invert there,
+    while the fp8-emulating v5e/v5p parts reproduce the paper's dense
+    inversion — `analyze.fp8_inversion` conditions on exactly this."""
+    return GridSpec(
+        name="paper_crosshw",
+        description="cross-hardware matrix (paper §5.9/§7): 3 models x "
+                    "{tpu-v5e, tpu-v5p, tpu-v6e} x {bf16, fp8} x "
+                    "7-point ladder, per-hardware TP",
+        archs=PAPER_TRIO,
+        hws=("tpu-v5e", "tpu-v5p", "tpu-v6e"),
+        quants=("bf16", "fp8"),
+        ladder=LAMBDA_LADDER,
+        n_chips_by_arch_hw=(
+            ("llama31-8b", "tpu-v5e", 2),
+            ("qwen3-30b-a3b", "tpu-v5e", 8),
+            ("mixtral-8x7b", "tpu-v5e", 8),
+            ("llama31-8b", "tpu-v5p", 1),
+            ("qwen3-30b-a3b", "tpu-v5p", 1),
+            ("mixtral-8x7b", "tpu-v5p", 2),
+            ("llama31-8b", "tpu-v6e", 1),
+            ("qwen3-30b-a3b", "tpu-v6e", 2),
+            ("mixtral-8x7b", "tpu-v6e", 4),
+        ),
+        seed=0,
+        protocol="paper",
+    ).expand()
+
+
+def mini_crosshw() -> ExperimentPlan:
+    """CI smoke for the cross-hardware axis: 2 models x {v5e, v6e} x
+    {bf16, fp8} x 2 lambdas, smoke-tier traffic (16 cells). Exercises the
+    per-(arch, hw) TP override and both native-fp8 regimes."""
+    return GridSpec(
+        name="mini_crosshw",
+        description="cross-hardware CI smoke: 2 models x 2 hw x "
+                    "{bf16, fp8} x 2 lambdas (sim tier)",
+        archs=("llama31-8b", "qwen3-30b-a3b"),
+        hws=("tpu-v5e", "tpu-v6e"),
+        quants=("bf16", "fp8"),
+        ladder=(5, 50),
+        n_chips_by_arch_hw=(("qwen3-30b-a3b", "tpu-v5e", 2),),
+        seed=0,
+        protocol="smoke",
+        max_batch=64,
+        num_pages=8192,
+    ).expand()
+
+
 def mini_2x2() -> ExperimentPlan:
     """CI smoke: 2 archs x 2 lambdas, smoke-tier traffic (4 cells)."""
     return GridSpec(
@@ -112,6 +172,8 @@ def crossover_trio() -> ExperimentPlan:
 PLANS: Dict[str, Callable[[], ExperimentPlan]] = {
     "paper_h100": paper_h100,
     "paper_a100": paper_a100,
+    "paper_crosshw": paper_crosshw,
+    "mini_crosshw": mini_crosshw,
     "mini_2x2": mini_2x2,
     "quickstart": quickstart,
     "crossover_trio": crossover_trio,

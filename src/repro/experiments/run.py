@@ -2,17 +2,21 @@
 
     PYTHONPATH=src python -m repro.experiments.run --plan paper_a100 --resume
     PYTHONPATH=src python -m repro.experiments.run --plan mini_2x2 --analyze
+    PYTHONPATH=src python -m repro.experiments.run --plan paper_crosshw \
+        --resume --analyze --analyze-json
 
 Resume is the default: re-invoking after a kill finishes only the
 remaining cells and re-derives an identical consolidated CSV. `--fresh`
-ignores (and overwrites) stored cells instead.
+ignores (and overwrites) stored cells instead. `--analyze-json` persists
+the cross-hardware tables (spread compression, fp8 inversion, ordering
+survival) as `analysis.json` beside the store.
 """
 from __future__ import annotations
 
 import argparse
 import time
 
-from repro.experiments.analyze import report
+from repro.experiments.analyze import report, write_tables
 from repro.experiments.plans import PLANS, get_plan
 from repro.experiments.runner import PlanRunner
 from repro.experiments.store import ExperimentStore
@@ -35,6 +39,9 @@ def main(argv=None):
                     help="store root (default results/experiments)")
     ap.add_argument("--analyze", action="store_true",
                     help="print the paper-figure report after the run")
+    ap.add_argument("--analyze-json", action="store_true",
+                    help="write the cross-hardware tables to "
+                         "<store>/analysis.json after the run")
     args = ap.parse_args(argv)
 
     plan = get_plan(args.plan)
@@ -58,6 +65,10 @@ def main(argv=None):
     if args.analyze:
         print()
         print(report(records, title=plan.name))
+    if args.analyze_json:
+        path = store.dir / "analysis.json"
+        write_tables(records, path)
+        print(f"cross-hardware tables written to {path}")
 
 
 if __name__ == "__main__":

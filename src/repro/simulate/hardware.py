@@ -5,7 +5,10 @@ v5p-class (pricier, faster, higher-bandwidth) vs v5e (cheaper, slower) —
 same structure: the load-driven cost spread must reproduce with compressed
 magnitude on the cheaper part. fp8 is native on the v6e-class entry only;
 v5e runs fp8 through a dequant-emulation path (int8 is native everywhere),
-reproducing the paper's hardware-conditional quantization caveat.
+reproducing the paper's hardware-conditional quantization caveat. The
+`paper_crosshw` experiment plan (ISSUE 3) spans all three generations in
+one store, and `experiments.analyze.fp8_inversion` conditions the uplift
+table on `native_fp8` — the dense inversion must vanish on v6e.
 
 Prices are public on-demand list prices (us-central, mid-2026 era); the
 framework treats them as a replaceable price book, exactly as the paper

@@ -1,0 +1,156 @@
+"""Cross-hardware experiment plans + spread-compression analysis (ISSUE 3).
+
+Three layers: structural conformance of the multi-hardware plans (per-
+(arch, hw) TP overrides, per-hw quant filters, price book), the paper's
+§5.9/§7 claims asserted against the committed `paper_crosshw` store
+(126 cells, three hardware generations, one store — fast, no engines
+run), and a live quick-protocol replication marked `slow` for the
+non-blocking CI job.
+"""
+import json
+
+import pytest
+
+from repro.core.pricing import chip_hour_price
+from repro.experiments import ExperimentStore, GridSpec, PlanRunner, get_plan
+from repro.experiments.analyze import (crosshw_tables, fp8_inversion,
+                                       load_store_records, penalty_curves,
+                                       report, spread_compression)
+from repro.experiments.store import DEFAULT_ROOT
+
+
+# ---- plan structure ---------------------------------------------------
+
+
+def test_paper_crosshw_plan_structure():
+    plan = get_plan("paper_crosshw")
+    assert len(plan) == 126          # 3 models x 3 hw x 2 quants x 7-ladder
+    assert {c.hw for c in plan.cells} == {"tpu-v5e", "tpu-v5p", "tpu-v6e"}
+    assert {c.quant for c in plan.cells} == {"bf16", "fp8"}
+    assert len({c.cell_id for c in plan.cells}) == 126
+    # the per-(arch, hw) TP override deploys the same model at
+    # hardware-fitting footprints
+    chips = {(c.arch, c.hw): c.n_chips for c in plan.cells}
+    assert chips[("mixtral-8x7b", "tpu-v5e")] == 8
+    assert chips[("mixtral-8x7b", "tpu-v5p")] == 2
+    assert chips[("mixtral-8x7b", "tpu-v6e")] == 4
+    assert chips[("llama31-8b", "tpu-v5e")] == 2
+    assert chips[("llama31-8b", "tpu-v5p")] == 1
+    # price book follows the per-hw chip counts
+    for c in plan.cells:
+        assert c.price_per_hr == chip_hour_price(c.hw, c.n_chips)
+
+
+def test_mini_crosshw_plan_structure():
+    plan = get_plan("mini_crosshw")
+    assert len(plan) == 16           # 2 models x 2 hw x 2 quants x 2 lams
+    assert {c.hw for c in plan.cells} == {"tpu-v5e", "tpu-v6e"}
+    chips = {(c.arch, c.hw): c.n_chips for c in plan.cells}
+    assert chips[("qwen3-30b-a3b", "tpu-v5e")] == 2
+    assert chips[("qwen3-30b-a3b", "tpu-v6e")] == 1     # default
+
+
+def test_chips_for_resolution_order():
+    spec = GridSpec(name="g", archs=("a",), hws=("h1", "h2"), n_chips=3,
+                    n_chips_by_arch=(("a", 5),),
+                    n_chips_by_arch_hw=(("a", "h1", 7),))
+    assert spec.chips_for("a", "h1") == 7      # (arch, hw) wins
+    assert spec.chips_for("a", "h2") == 5      # falls back to per-arch
+    assert spec.chips_for("b", "h1") == 3      # then the grid default
+    assert spec.chips_for("a") == 5            # hw-less legacy lookup
+
+
+def test_quants_by_hw_filters_cells():
+    plan = GridSpec(
+        name="g", archs=("llama31-8b",), hws=("tpu-v5e", "tpu-v6e"),
+        quants=("bf16", "fp8"), ladder=(5,), protocol="smoke",
+        quants_by_hw=(("tpu-v5e", ("bf16",)),)).expand()
+    assert {(c.hw, c.quant) for c in plan.cells} == {
+        ("tpu-v5e", "bf16"), ("tpu-v6e", "bf16"), ("tpu-v6e", "fp8")}
+
+
+# ---- the committed paper_crosshw store --------------------------------
+
+
+def _store_records():
+    recs = load_store_records("paper_crosshw")
+    if len(recs) < 126:
+        pytest.skip("paper_crosshw store not populated")
+    return recs
+
+
+def test_committed_store_spread_band_and_fp8_inversion():
+    """Acceptance (ISSUE 3): the sim-tier load-driven spread lands in the
+    paper's plausible band (>5x) on EVERY hardware generation, and the
+    dense-FP8 inversion reproduces on the non-native-fp8 parts only."""
+    recs = _store_records()
+    for row in penalty_curves(recs):
+        assert 5.0 < row["spread"] < 100.0, \
+            (row["model"], row["hw"], row["quant"], row["spread"])
+    inv = {(r["hw"], r["model"]): r for r in fp8_inversion(recs)}
+    # compute-bound dense model: fp8 pays the dequant penalty on the
+    # emulating parts (paper's hardware-conditional caveat) ...
+    assert inv[("tpu-v5e", "llama31-8b")]["inverted"]
+    assert inv[("tpu-v5p", "llama31-8b")]["inverted"]
+    # ... and gains on the native-fp8 part
+    assert not inv[("tpu-v6e", "llama31-8b")]["inverted"]
+    assert inv[("tpu-v6e", "llama31-8b")]["tps_uplift"] > 1.0
+    # the memory-bound ultra-sparse MoE keeps its HBM win everywhere
+    for hw in ("tpu-v5e", "tpu-v5p", "tpu-v6e"):
+        assert not inv[(hw, "qwen3-30b-a3b")]["inverted"]
+    # no row may break the native-fp8 conditioning
+    assert all(r["consistent"] for r in inv.values())
+
+
+def test_committed_store_spread_compression_table():
+    recs = _store_records()
+    table = spread_compression(recs)
+    assert len(table) == 6                      # 3 models x 2 quants
+    for row in table:
+        hws = [h["hw"] for h in row["per_hw"]]
+        assert hws == sorted(hws) and len(hws) == 3
+        assert row["compression"] >= 1.0
+        assert row["widest_hw"] in hws and row["narrowest_hw"] in hws
+        for h in row["per_hw"]:
+            assert 0 < h["c_min"] < h["c_max"]
+    # the report renders the cross-hardware sections for a multi-hw store
+    text = report(recs, title="paper_crosshw")
+    assert "spread compression" in text
+    assert "conditioned on native fp8" in text
+
+
+def test_committed_analysis_json_matches_fresh_derivation():
+    """`--analyze-json` artifact is a pure function of the store."""
+    recs = _store_records()
+    path = DEFAULT_ROOT / "paper_crosshw" / "analysis.json"
+    if not path.exists():
+        pytest.skip("analysis.json not committed")
+    blob = json.loads(path.read_text())
+    fresh = json.loads(json.dumps(crosshw_tables(recs)))
+    assert blob == fresh
+
+
+# ---- live replication (non-blocking CI job) ---------------------------
+
+
+@pytest.mark.slow
+def test_live_crosshw_matrix_reproduces_spread_band(tmp_path):
+    """The full cross-hardware analysis on a live quick-protocol run —
+    no committed artifacts involved: idle-to-saturation spread >5x on
+    both generations and the fp8 inversion conditioned on native fp8."""
+    plan = GridSpec(
+        name="live_crosshw",
+        archs=("llama31-8b", "qwen3-30b-a3b"),
+        hws=("tpu-v5e", "tpu-v6e"),
+        quants=("bf16", "fp8"),
+        ladder=(1, 25, 200),
+        n_chips_by_arch_hw=(("qwen3-30b-a3b", "tpu-v5e", 2),),
+        protocol="quick").expand()
+    recs = PlanRunner(plan, store=ExperimentStore(plan.name, tmp_path)).run()
+    assert len(recs) == len(plan.cells)
+    for row in penalty_curves(recs):
+        assert row["spread"] > 5.0, (row["model"], row["hw"], row["quant"])
+    inv = {(r["hw"], r["model"]): r for r in fp8_inversion(recs)}
+    assert inv[("tpu-v5e", "llama31-8b")]["inverted"]
+    assert not inv[("tpu-v6e", "llama31-8b")]["inverted"]
+    assert all(r["consistent"] for r in inv.values())

@@ -89,6 +89,82 @@ def test_fast_forward_matches_reference(case, runkw, ekw):
     _assert_equivalent(ref, fast)
 
 
+# ---- idle-regime edges (ISSUE 3) -------------------------------------
+
+
+def _mk_reqs(arrivals, prompt_len=64, max_new=24):
+    from repro.serving.request import Request
+    return [Request(rid=i, arrival_time=float(t), prompt_len=prompt_len,
+                    max_new_tokens=max_new)
+            for i, t in enumerate(arrivals)]
+
+
+def _run_pair_reqs(arrivals, **ekw):
+    out = []
+    for ff in (False, True):
+        eng = _engine(ff, **ekw)
+        reqs = _mk_reqs(arrivals)
+        eng.run(reqs)
+        out.append((eng, reqs))
+    return out
+
+
+def test_idle_co_arrivals_admitted_in_one_wakeup():
+    """Batch and queue both empty, several requests arriving at the same
+    instant: the idle jump must land once and admit the whole co-arrival
+    group in that wakeup — and still match the reference exactly."""
+    ref, fast = _run_pair_reqs([1.0, 1.0, 1.0, 9.0, 9.0])
+    _assert_equivalent(ref, fast)
+    efast, rfast = fast
+    # all co-arrivals share one admission instant (same prefill batch)
+    assert len({r.first_token_time for r in rfast[:3]}) == 1
+    assert len({r.first_token_time for r in rfast[3:]}) == 1
+    # two idle gaps + per-group events only: far below one iteration per
+    # token, and below even one iteration per request-arrival pair
+    assert efast.n_iterations < ref[0].n_iterations / 4
+    assert efast.n_ff_jumps >= 2
+
+
+def test_arrival_exactly_at_completion_event():
+    """An arrival whose timestamp exactly equals a completion event must
+    take the same scheduler path on both engines (the fast path treats
+    arrivals as non-events while a batch runs; the tie must not let the
+    jump overshoot the admission)."""
+    probe = _engine(True)
+    lone = _mk_reqs([0.0])
+    probe.run(lone)
+    t_done = lone[0].finish_time
+    assert t_done is not None and t_done > 0
+    ref, fast = _run_pair_reqs([0.0, t_done])
+    _assert_equivalent(ref, fast)
+    # the second request was admitted at (not after) the completion time
+    assert fast[1][1].first_token_time >= t_done
+
+
+def test_arrival_during_final_decode_burst():
+    """Arrival strictly inside the last decode burst of an otherwise
+    idle engine: the burst must stop at the arrival so admission happens
+    at the same clock on both paths."""
+    probe = _engine(True)
+    lone = _mk_reqs([0.0])
+    probe.run(lone)
+    mid = lone[0].finish_time * 0.61803
+    ref, fast = _run_pair_reqs([0.0, mid])
+    _assert_equivalent(ref, fast)
+
+
+@pytest.mark.parametrize("lam", [0.5, 2.0, 5.0])
+def test_idle_regime_equivalence_and_speedup(lam):
+    """lambda <= 5 (the idle regime the PR 2 follow-up targeted): the
+    fast path must stay exactly equivalent to the per-token reference
+    while doing a fraction of the scheduler iterations."""
+    spec = ArrivalSpec(lam=lam, n_requests=60, seed=11)
+    ref, fast = _run_pair(spec)
+    _assert_equivalent(ref, fast)
+    assert fast[0].n_ff_jumps > 0
+    assert fast[0].n_iterations < ref[0].n_iterations / 2
+
+
 def test_fast_forward_reentrant_horizon_loop():
     """Meter-tick style: repeated run() calls under a growing horizon must
     resume identically on both paths."""

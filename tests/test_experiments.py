@@ -1,13 +1,16 @@
 """Experiment-matrix subsystem (ISSUE 2): plan expansion determinism,
 shard-vs-serial record identity, and resume-after-partial-run artifact
-identity."""
+identity. ISSUE 3 adds property-style seed-derivation determinism
+(axis reordering, re-expansion, spawn-vs-fork pools) and the mid-plan
+interruption/resume byte-identity test."""
 import dataclasses
 import json
+import multiprocessing
 
 import pytest
 
-from repro.experiments import (Cell, ExperimentStore, GridSpec, PlanRunner,
-                               get_plan)
+from repro.experiments import (Cell, ExperimentStore, GridSpec, PLANS,
+                               PlanRunner, get_plan)
 from repro.experiments.plan import cell_seed, ladder_plan
 from repro.experiments.store import backfill_theta
 
@@ -72,6 +75,60 @@ def test_ladder_plan_uses_raw_sweep_seeds():
     assert [c.seed for c in plan.cells] == [7 + 1000, 7 + 10000, 7 + 50000]
 
 
+# ---- seed-derivation determinism properties (ISSUE 3) ----------------
+
+
+def _cell_identity(cell: Cell):
+    """The derived identity a worker must agree on with its parent."""
+    return cell.cell_id, cell.seed, cell.fingerprint()
+
+
+@pytest.mark.parametrize("plan_name", sorted(PLANS))
+def test_plan_reexpansion_stable(plan_name):
+    """Property: re-expanding any registered plan yields identical cells,
+    seeds and fingerprints — the resume contract rests on this."""
+    a, b = get_plan(plan_name), get_plan(plan_name)
+    assert a == b
+    assert [_cell_identity(c) for c in a.cells] == \
+        [_cell_identity(c) for c in b.cells]
+
+
+def test_seeds_invariant_under_axis_reordering():
+    """Property: a cell's seed/fingerprint depend on its coordinates, not
+    on where the grid walker encounters it — reversing every axis (and
+    the override maps) permutes the cell list but changes no cell."""
+    spec = _mini_spec(hws=("tpu-v5e", "tpu-v6e"), quants=("bf16", "fp8"),
+                      n_chips_by_arch_hw=(("qwen3-30b-a3b", "tpu-v5e", 2),))
+    fwd = spec.expand()
+    rev = dataclasses.replace(
+        spec, archs=spec.archs[::-1], hws=spec.hws[::-1],
+        quants=spec.quants[::-1], ladder=spec.ladder[::-1],
+        io_shapes=spec.io_shapes[::-1],
+        n_chips_by_arch_hw=spec.n_chips_by_arch_hw[::-1]).expand()
+    by_id_f = {c.cell_id: c for c in fwd.cells}
+    by_id_r = {c.cell_id: c for c in rev.cells}
+    assert set(by_id_f) == set(by_id_r) and len(by_id_f) == len(fwd.cells)
+    assert [c.cell_id for c in fwd.cells] != [c.cell_id for c in rev.cells]
+    for cid, c in by_id_f.items():
+        assert by_id_r[cid] == c
+        assert _cell_identity(by_id_r[cid]) == _cell_identity(c)
+
+
+@pytest.mark.parametrize("method", ["fork", "spawn"])
+def test_cell_identity_stable_across_pool_start_methods(method):
+    """Property: seeds and fingerprints derived inside spawn/fork workers
+    match the parent's (CRC32 + sha256, never hash()) — a sharded run can
+    never disagree with the plan about which cell it just finished."""
+    if method not in multiprocessing.get_all_start_methods():
+        pytest.skip(f"{method} unavailable on this platform")
+    plan = get_plan("mini_crosshw")
+    want = [_cell_identity(c) for c in plan.cells]
+    ctx = multiprocessing.get_context(method)
+    with ctx.Pool(2) as pool:
+        got = pool.map(_cell_identity, plan.cells)
+    assert got == want
+
+
 # ---- shard-vs-serial identity ----------------------------------------
 
 
@@ -116,6 +173,44 @@ def test_resume_after_partial_run_identical_csv(tmp_path):
     assert sorted(ran) == sorted(c.cell_id for c in plan.cells[1:3])
     assert store.csv_path.read_bytes() == full_csv
     assert store.manifest_path.read_bytes() == full_manifest
+
+
+class _Interrupted(Exception):
+    pass
+
+
+def test_midplan_interrupt_then_resume_byte_identical(tmp_path):
+    """ISSUE 3: kill a mini_crosshw run after K cells (mid-plan, not at a
+    tidy boundary), resume, and the consolidated CSV + manifest must be
+    byte-identical to an uninterrupted run."""
+    plan = get_plan("mini_crosshw")
+    ref_store = ExperimentStore(plan.name, tmp_path / "uninterrupted")
+    PlanRunner(plan, store=ref_store).run(parallel=False)
+    want_csv = ref_store.csv_path.read_bytes()
+    want_manifest = ref_store.manifest_path.read_bytes()
+    assert json.loads(want_manifest)["n_completed"] == len(plan.cells)
+
+    k = 5
+    store = ExperimentStore(plan.name, tmp_path / "interrupted")
+
+    def _kill_after_k(cell, rec, n_done, n_total):
+        if n_done >= k:
+            raise _Interrupted(cell.cell_id)
+
+    with pytest.raises(_Interrupted):
+        PlanRunner(plan, store=store).run(parallel=False,
+                                          progress=_kill_after_k)
+    # the kill landed after the store write, before consolidation
+    assert len(store.completed_ids(plan)) == k
+    assert not store.csv_path.exists()
+
+    resumed = []
+    records = PlanRunner(plan, store=store).run(
+        parallel=False, progress=lambda c, r, i, n: resumed.append(c.cell_id))
+    assert len(records) == len(plan.cells)
+    assert len(resumed) == len(plan.cells) - k      # only the remainder ran
+    assert store.csv_path.read_bytes() == want_csv
+    assert store.manifest_path.read_bytes() == want_manifest
 
 
 def test_stale_fingerprint_forces_rerun(tmp_path):

@@ -8,7 +8,8 @@ from repro.configs import get_config
 from repro.core import (CostMeter, LAMBDA_LADDER, lambda_sweep,
                         slo_operating_point, stability_table)
 from repro.core.sweep import run_point
-from repro.serving import ArrivalSpec, Engine, EngineConfig, SimExecutor
+from repro.serving import (ArrivalSpec, Engine, EngineConfig, SimExecutor,
+                           synth_requests)
 from repro.simulate import StepTimeModel, V5E, V5P
 
 
@@ -112,6 +113,40 @@ def test_meter_agrees_with_engine_ground_truth():
     truth = 1.20 * 1e6 / (3600.0 * total_tok / eng.t)
     assert math.isclose(summ["time_weighted_avg"], truth, rel_tol=1e-6)
     assert summ["worst_minute"] >= summ["best_minute"]
+
+
+def test_meter_conformance_with_run_record():
+    """ISSUE 3 meter conformance: a CostMeter ticking against a sim-tier
+    engine's Prometheus text (the virtual-clock path the meter docstring
+    promises) must converge to the C_eff the sweep protocol records for
+    the same (factory, arrival stream) point."""
+    price = 1.20
+    spec = ArrivalSpec(lam=10, n_requests=200, seed=3)
+    rec = run_point(_factory(), spec, price_per_hr=price,
+                    model="llama31-8b", hw="tpu-v5e")
+
+    eng = _factory()()
+    meter = CostMeter(price, scrape=lambda: eng.metrics.render(),
+                      minute_s=5.0)
+    reqs = synth_requests(spec)
+    meter.tick()                        # baseline sample at t=0
+    horizon = 0.0
+    while any(r.finish_time is None for r in reqs):
+        horizon += 2.0
+        eng.run(reqs, horizon=horizon)
+        meter.tick()
+        assert horizon < 3600
+    meter.tick()                        # drain the final window
+
+    summ = meter.summary()
+    # windowed meter vs protocol record: two readings of one ground truth
+    assert math.isclose(summ["time_weighted_avg"], rec.c_eff, rel_tol=1e-6)
+    # the meter's windows bracket the whole-run average
+    assert summ["best_minute"] <= summ["time_weighted_avg"] * (1 + 1e-9)
+    assert summ["worst_minute"] >= summ["time_weighted_avg"] * (1 - 1e-9)
+    # and the metered token total equals the record's completed tokens
+    metered = sum(s.tokens for s in meter.samples)
+    assert metered == pytest.approx(rec.tps * rec.window_s, rel=1e-9)
 
 
 def test_stability_cv_small_for_repeats():
