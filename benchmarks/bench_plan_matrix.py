@@ -1,61 +1,118 @@
-"""Experiment-matrix runner benchmark: cell-sharded vs serial plan
-execution wall time (ISSUE 2).
+"""Experiment-runner backend benchmark: per-cell (serial + pool) vs the
+vectorized fleet backend, with `cells_per_sec` as the tracked metric
+(ISSUE 4).
 
-PR 1's pool parallelized ladder points inside one config; the PlanRunner
-shards whole cells, so a multi-(model, quant) matrix scales with cores
-instead of with the slowest ladder. This bench runs the same mini matrix
-both ways and reports the speedup plus per-cell stats; `--quick` shrinks
-to the CI-smoke plan.
+PR 1's pool parallelized ladder points inside one config; PR 2's
+PlanRunner sharded whole cells; ISSUE 4's fleet backend runs many cells
+as lanes of one struct-of-arrays event loop, so a plan's throughput is
+no longer one-engine-per-core. This bench runs the same plan through
+every backend, asserts the records are identical (the equivalence
+contract), reports cells/s per backend, and writes the perf-trajectory
+file `BENCH_plan_matrix.json` at the repo root:
+
+* full mode — a paper_h100-sized plan (42 paper-protocol cells): the
+  acceptance surface for the ">=5x cells/s single-process" criterion
+  (`vector` vs `serial` below).
+* --quick — the CI smoke: mini_2x2 + mini_crosshw (20 smoke cells);
+  `benchmarks/check_plan_matrix.py` gates on >20% regression of the
+  vector-vs-serial cells/s ratio against the committed baseline (the
+  ratio, not the absolute number, so CI hardware speed cancels out).
 """
 from __future__ import annotations
 
 import dataclasses
 import time
 
-from benchmarks.common import emit
-from repro.core.sweep import LAMBDA_LADDER
-from repro.experiments.plan import GridSpec
+from benchmarks.common import emit, merge_trajectory
+from repro.experiments.plans import get_plan, paper_h100
 from repro.experiments.runner import PlanRunner
 
+# acceptance floor: fleet backend cells/s over the per-cell serial path,
+# single process (ISSUE 4)
+VECTOR_SPEEDUP_TARGET = 5.0
 
-def _plan(quick: bool):
-    return GridSpec(
-        name="bench_matrix",
-        archs=("llama31-8b", "qwen3-30b-a3b"),
-        hws=("tpu-v5e",),
-        quants=("bf16",) if quick else ("bf16", "int8"),
-        ladder=(5, 50) if quick else LAMBDA_LADDER[:5],
-        seed=0,
-        protocol="smoke" if quick else "quick",
-        max_batch=128,
-        num_pages=16384,
-    ).expand()
+
+def _plans(quick: bool):
+    if quick:
+        return [get_plan("mini_2x2"), get_plan("mini_crosshw")]
+    return [paper_h100()]
 
 
 def run(quick: bool = False):
-    plan = _plan(quick)
+    plans = _plans(quick)
+    cells = [c for p in plans for c in p.cells]
     timings = {}
     results = {}
-    for mode, parallel in (("serial", False), ("sharded", True)):
-        t0 = time.time()
-        results[mode] = PlanRunner(plan).run(parallel=parallel)
-        timings[mode] = time.time() - t0
-    assert ([dataclasses.asdict(r) for r in results["serial"]] ==
-            [dataclasses.asdict(r) for r in results["sharded"]]), \
-        "sharded records diverge from serial"
+    # (mode label, backend, parallel)
+    modes = (("serial", "process", False),    # the PR-3 per-cell path
+             ("sharded", "process", True),    # per-cell pool
+             ("vector", "vector", False),     # fleet, single process
+             ("vector_pool", "vector", True))  # fleet chunks x cores
+    # Interleaved rounds with medians (the repo's noisy-wall-clock
+    # discipline, see .claude/skills/verify): every round times each
+    # mode once back-to-back, so machine-load drift hits serial and
+    # vector alike and the per-round serial/vector ratio — whose median
+    # is the CI-gated metric — stays stable even when absolute cells/s
+    # swings 2-3x. Reported seconds are each mode's best round.
+    rounds = 8 if quick else 4
+    samples = {mode: [] for mode, _, _ in modes}
+    for _ in range(rounds):
+        for mode, backend, parallel in modes:
+            t0 = time.time()
+            recs = []
+            for plan in plans:
+                recs.extend(PlanRunner(plan).run(parallel=parallel,
+                                                 backend=backend))
+            samples[mode].append(time.time() - t0)
+            results[mode] = recs
+    for mode, _, _ in modes:
+        timings[mode] = min(samples[mode])
+    base = [repr(dataclasses.asdict(r)) for r in results["serial"]]
+    for mode in ("sharded", "vector", "vector_pool"):
+        assert [repr(dataclasses.asdict(r)) for r in results[mode]] == base, \
+            f"{mode} records diverge from serial"
 
+    n = len(cells)
     rows = [{
-        "plan": plan.name, "n_cells": len(plan.cells),
-        "serial_s": timings["serial"], "sharded_s": timings["sharded"],
-        "speedup": timings["serial"] / max(timings["sharded"], 1e-9),
+        "mode": mode,
+        "backend": backend,
+        "parallel": parallel,
+        "seconds": timings[mode],
+        "cells_per_sec": n / max(timings[mode], 1e-9),
+        "speedup_vs_serial": timings["serial"] / max(timings[mode], 1e-9),
         "records_identical": True,
-    }]
-    emit("plan_matrix", rows)
+    } for mode, backend, parallel in modes]
+    emit("plan_matrix", [{"plan": "+".join(p.name for p in plans),
+                          "n_cells": n, **row} for row in rows])
     cell_rows = [{
         "cell": c.cell_id, "lam": r.lam, "tps": r.tps, "c_eff": r.c_eff,
         "penalty": r.penalty,
-    } for c, r in zip(plan.cells, results["sharded"])]
+    } for c, r in zip(cells, results["vector"])]
     emit("plan_matrix_cells", cell_rows)
+
+    # the gated ratio: median of per-round serial/vector ratios
+    per_round = sorted(s / max(v, 1e-9) for s, v in
+                       zip(samples["serial"], samples["vector"]))
+    vec_vs_serial = per_round[len(per_round) // 2]
+    section = {
+        "plans": [p.name for p in plans],
+        "n_cells": n,
+        "modes": {row["mode"]: {
+            "seconds": row["seconds"],
+            "cells_per_sec": row["cells_per_sec"],
+        } for row in rows},
+        "vector_vs_serial_speedup": vec_vs_serial,
+        "records_identical": True,
+    }
+    if not quick:
+        section["target_vector_vs_serial"] = VECTOR_SPEEDUP_TARGET
+        section["meets_target"] = vec_vs_serial >= VECTOR_SPEEDUP_TARGET
+    path = merge_trajectory("plan_matrix", "quick" if quick else "paper",
+                            section)
+    print(f"\n# vector vs serial: {vec_vs_serial:.2f}x cells/s "
+          f"({section['modes']['vector']['cells_per_sec']:.2f} vs "
+          f"{section['modes']['serial']['cells_per_sec']:.2f}); "
+          f"trajectory written to {path.name}")
 
 
 if __name__ == "__main__":

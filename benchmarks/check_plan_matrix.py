@@ -1,0 +1,64 @@
+"""CI gate: fail on cells/s regression of the fleet backend (ISSUE 4).
+
+Compares a fresh `BENCH_plan_matrix.json` (written by
+`python -m benchmarks.run --quick --only plan_matrix`) against the
+committed baseline. The gated metric is the *vector-vs-serial cells/s
+ratio*, not the absolute cells/s: both backends run on the same runner,
+so machine speed cancels and only a real change to the fleet's
+amortization (or to the per-cell path) can move the ratio.
+
+    python -m benchmarks.check_plan_matrix \
+        --baseline BENCH_plan_matrix.baseline.json \
+        --current BENCH_plan_matrix.json --section quick
+
+Exits non-zero when the current ratio falls below (1 - tolerance) of the
+baseline ratio (default tolerance 0.20, the ISSUE 4 gate).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", required=True)
+    ap.add_argument("--current", required=True)
+    ap.add_argument("--section", default="quick",
+                    choices=("quick", "paper"))
+    ap.add_argument("--tolerance", type=float, default=0.20,
+                    help="allowed fractional regression of the "
+                         "vector-vs-serial cells/s ratio")
+    args = ap.parse_args(argv)
+
+    def load(path):
+        blob = json.loads(Path(path).read_text())
+        if args.section not in blob:
+            raise SystemExit(f"{path} has no {args.section!r} section; "
+                             "run the plan_matrix bench first")
+        return blob[args.section]
+
+    base = load(args.baseline)
+    cur = load(args.current)
+    base_ratio = base["vector_vs_serial_speedup"]
+    cur_ratio = cur["vector_vs_serial_speedup"]
+    floor = (1.0 - args.tolerance) * base_ratio
+    print(f"vector-vs-serial cells/s ratio: baseline {base_ratio:.2f}x, "
+          f"current {cur_ratio:.2f}x, floor {floor:.2f}x "
+          f"(tolerance {args.tolerance:.0%})")
+    if not cur.get("records_identical", False):
+        print("FAIL: backend records diverged", file=sys.stderr)
+        return 1
+    if cur_ratio < floor:
+        print(f"FAIL: fleet backend regressed >"
+              f"{args.tolerance:.0%} vs the committed baseline",
+              file=sys.stderr)
+        return 1
+    print("OK")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

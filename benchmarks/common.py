@@ -72,6 +72,24 @@ def sweep_config(bc: BenchConfig, *, hw_name: str = "tpu-v5p",
         price_per_hr=hw.price_per_chip_hr * bc.n_chips)
 
 
+def merge_trajectory(name: str, key: str, section: dict) -> Path:
+    """Merge one section into the repo-root perf-trajectory file
+    `BENCH_<name>.json` (read-merge-write, tolerating a missing or
+    corrupt file) — the one place that policy lives for gated benches."""
+    import json
+    path = RESULTS.parent.parent / f"BENCH_{name}.json"
+    blob = {}
+    if path.exists():
+        try:
+            blob = json.loads(path.read_text())
+        except json.JSONDecodeError:
+            blob = {}
+    blob["bench"] = name
+    blob[key] = section
+    path.write_text(json.dumps(blob, indent=2, sort_keys=True) + "\n")
+    return path
+
+
 def emit(name: str, rows: List[dict]):
     """Print benchmark rows as CSV to stdout and persist under results/."""
     RESULTS.mkdir(parents=True, exist_ok=True)

@@ -127,7 +127,7 @@ def run_point(engine_factory: Callable[[], Engine], spec: ArrivalSpec, *,
 def _ladder_sweep(engine_factory, *, parallel, ladder, io_shape, scale,
                   requests_per_point, warmup_per_point, horizon, seed,
                   process, cv, max_workers=None, mp_context=None,
-                  **record_kw) -> List[RunRecord]:
+                  backend="process", **record_kw) -> List[RunRecord]:
     """Both drivers: build the single-group ladder plan (seeds
     `seed + int(lam * 1000)`, unchanged since PR 1) and hand it to the
     experiment runner. Imported lazily — `repro.experiments` depends on
@@ -139,7 +139,8 @@ def _ladder_sweep(engine_factory, *, parallel, ladder, io_shape, scale,
                        warmup_per_point=warmup_per_point, horizon=horizon,
                        seed=seed, process=process, cv=cv, **record_kw)
     return PlanRunner(plan, factory=engine_factory).run(
-        parallel=parallel, max_workers=max_workers, mp_context=mp_context)
+        parallel=parallel, max_workers=max_workers, mp_context=mp_context,
+        backend=backend)
 
 
 def lambda_sweep(engine_factory, *, ladder: Sequence[float] = LAMBDA_LADDER,
@@ -166,10 +167,13 @@ def parallel_sweep(engine_factory, *,
                    process: str = "poisson", cv: float = 1.0,
                    max_workers: Optional[int] = None,
                    mp_context: Optional[str] = None,
+                   backend: str = "process",
                    **record_kw) -> List[RunRecord]:
     """`lambda_sweep` with independent ladder points fanned across a
     process pool; records come back in ladder order with identical values
     (same deterministic per-point seeds, same per-point protocol).
+    `backend="vector"` runs SimEngineSpec ladders through the fleet
+    simulator instead (ISSUE 4) — same records, lanes x cores.
 
     Start method (`mp_context=None`): `fork` when JAX has not been
     imported into this process (sim-tier parents stay JAX-free because
@@ -189,4 +193,4 @@ def parallel_sweep(engine_factory, *,
                          warmup_per_point=warmup_per_point, horizon=horizon,
                          seed=seed, process=process, cv=cv,
                          max_workers=max_workers, mp_context=mp_context,
-                         **record_kw)
+                         backend=backend, **record_kw)

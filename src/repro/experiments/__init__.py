@@ -12,14 +12,17 @@ matrices into first-class, resumable objects:
                results/experiments/<plan>/cell_<id>.json per finished cell
                plus a consolidated CSV + manifest; completed cells are
                skipped on restart.
-  runner.py  — PlanRunner: shards *whole cells* across the spawn process
-               pool (the ladder-point pool generalized), falls back to
-               serial with an explicit warning, streams finished records
-               into the store.
+  runner.py  — PlanRunner + execute_cells with two backends: per-cell
+               over the persistent process pool, or backend="vector" —
+               cells chunked into lanes of the struct-of-arrays fleet
+               simulator (ISSUE 4; bit-identical records, ~6x cells/s
+               per core); serial fallback warns instead of hiding.
   plans.py   — the first-class plans: paper_h100 (42 cells on tpu-v5p),
                paper_a100 (56 cells on tpu-v5e), paper_crosshw (126 cells
-               across v5e + v5p + v6e, ISSUE 3), mini_2x2 / mini_crosshw
-               (CI smokes), quickstart.
+               across v5e + v5p + v6e, ISSUE 3), paper_atlas (450-cell
+               lambda-continuum penalty atlas, ISSUE 4),
+               probe_int8_nonnative (126-cell per-hw quant probe),
+               mini_2x2 / mini_crosshw (CI smokes), quickstart.
   analyze.py — derives the paper's figures from a store: penalty-vs-lambda
                spread, active-params saturation ordering, per-hardware FP8
                uplift, API crossover; cross-hardware tables (spread

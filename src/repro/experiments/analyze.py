@@ -57,6 +57,7 @@ def penalty_curves(records: Sequence[RunRecord]) -> List[dict]:
             "c_eff": ceffs,
             "penalty": [underutilization_penalty(r.tps, r.theta_max)
                         for r in group],
+            "util": [r.util for r in group],
             "c_naive": naive,
             "idle_penalty": underutilization_penalty(group[0].tps,
                                                      group[0].theta_max),
@@ -183,6 +184,41 @@ def fp8_inversion(records: Sequence[RunRecord],
     return out
 
 
+def penalty_atlas(records: Sequence[RunRecord],
+                  min_points: int = 10) -> List[dict]:
+    """ISSUE 4: the dense penalty-curve table from a lambda-*continuum*
+    store (`paper_atlas`: 25 log-spaced offered rates instead of the
+    7-point ladder). Per (model, hw, quant) group the full lambda ->
+    (C_eff, penalty, utilization) curve plus the summary scalars the
+    sparse ladders can only bracket:
+
+    * `knee_lambda` — the first offered rate whose C_eff is within 25%
+      of the saturation cost floor: where the paper's "substantial
+      sustained load" condition (§7) actually begins on this hardware.
+    * `half_cost_lambda` — the first rate at >=50% utilization (penalty
+      <= 2x): the cheapest half of the curve starts here.
+    * `idle_penalty` / `spread` — the curve's endpoints, directly
+      comparable with the PR-3 spread-compression table.
+
+    Groups with fewer than `min_points` distinct rates are skipped — the
+    atlas is meaningful only for dense stores, so 7-point plans fall
+    through to the classic tables untouched. Rows are `penalty_curves`
+    rows (one source of truth for the shared scalars) extended with the
+    continuum-only fields."""
+    out = []
+    for row in penalty_curves(records):
+        if len(set(row["lams"])) < min_points:
+            continue
+        floor = min(row["c_eff"])
+        knee = next((lam for lam, c in zip(row["lams"], row["c_eff"])
+                     if c <= 1.25 * floor), float("nan"))
+        half = next((lam for lam, u in zip(row["lams"], row["util"])
+                     if u >= 0.5), float("nan"))
+        out.append({**row, "c_floor": floor, "knee_lambda": knee,
+                    "half_cost_lambda": half})
+    return out
+
+
 def crosshw_ordering(records: Sequence[RunRecord]) -> List[dict]:
     """§5.2 across the hardware axis: per quant, does the per-chip
     active-params saturation ordering survive on every generation?"""
@@ -205,11 +241,14 @@ def crosshw_ordering(records: Sequence[RunRecord]) -> List[dict]:
 
 
 def crosshw_tables(records: Sequence[RunRecord]) -> Dict[str, List[dict]]:
-    """The three cross-hardware artifacts as one JSON-ready payload."""
+    """The cross-hardware artifacts as one JSON-ready payload. The
+    penalty atlas joins when the store is dense enough (lambda-continuum
+    plans); sparse-ladder stores carry an empty list there."""
     return {
         "spread_compression": spread_compression(records),
         "fp8_inversion": fp8_inversion(records),
         "active_params_ordering": crosshw_ordering(records),
+        "penalty_atlas": penalty_atlas(records),
     }
 
 
@@ -256,6 +295,19 @@ def report(records: Sequence[RunRecord], title: str = "") -> str:
         lines.append(f"{row['hw']} {row['quant']}: {order}  "
                      f"[{ok} active-params order]")
 
+    int8 = fp8_uplift(records, variant="int8")
+    if int8:
+        lines.append("")
+        lines.append("-- INT8 uplift vs bf16 at saturation (native MXU "
+                     "path on every part) --")
+        lines.append(f"{'hw':<9} {'model':<24} {'TPS uplift':>10} "
+                     f"{'cost ratio':>10}  note")
+        for row in int8:
+            note = "INVERTED (int8 slower)" if row["inverted"] else "gain"
+            lines.append(f"{row['hw']:<9} {row['model']:<24} "
+                         f"{row['tps_uplift']:>9.2f}x "
+                         f"{row['cost_ratio']:>9.2f}x  {note}")
+
     uplift = fp8_inversion(records)
     if uplift:
         lines.append("")
@@ -290,6 +342,20 @@ def report(records: Sequence[RunRecord], title: str = "") -> str:
                    f"holds on {', '.join(row['holds_on']) or 'none'} "
                    f"of {', '.join(row['hws'])}")
             lines.append(f"active-params ordering [{row['quant']}]: {tag}")
+
+    atlas = penalty_atlas(records)
+    if atlas:
+        lines.append("")
+        lines.append("-- dense penalty atlas (lambda continuum, "
+                     f"{len(atlas[0]['lams'])} points per curve) --")
+        lines.append(f"{'model':<24} {'hw':<9} {'quant':<5} "
+                     f"{'idle pen':>9} {'spread':>7} {'knee lam':>9} "
+                     f"{'half-cost lam':>13}")
+        for row in atlas:
+            lines.append(
+                f"{row['model']:<24} {row['hw']:<9} {row['quant']:<5} "
+                f"{row['idle_penalty']:>8.1f}x {row['spread']:>6.1f}x "
+                f"{row['knee_lambda']:>9.4g} {row['half_cost_lambda']:>13.4g}")
 
     lines.append("")
     lines.append("-- API crossover (list prices, no SLA: §6.4 gate "

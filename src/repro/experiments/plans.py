@@ -28,6 +28,31 @@ from repro.experiments.plan import ExperimentPlan, GridSpec
 # paper benchmark trio: dense 8B / ultra-sparse 30B-A3B MoE / 47B-A13B MoE
 PAPER_TRIO = ("llama31-8b", "qwen3-30b-a3b", "mixtral-8x7b")
 
+# the cross-hardware TP footprints (bf16 weights fit each part's HBM),
+# shared by paper_crosshw / paper_atlas / probe_int8_nonnative
+CROSSHW_CHIPS = (
+    ("llama31-8b", "tpu-v5e", 2),
+    ("qwen3-30b-a3b", "tpu-v5e", 8),
+    ("mixtral-8x7b", "tpu-v5e", 8),
+    ("llama31-8b", "tpu-v5p", 1),
+    ("qwen3-30b-a3b", "tpu-v5p", 1),
+    ("mixtral-8x7b", "tpu-v5p", 2),
+    ("llama31-8b", "tpu-v6e", 1),
+    ("qwen3-30b-a3b", "tpu-v6e", 2),
+    ("mixtral-8x7b", "tpu-v6e", 4),
+)
+
+# 25-point log-spaced lambda continuum, 1..200 req/s (the 7-point paper
+# ladder's idle->saturation span, densified so the penalty curve is a
+# curve instead of seven samples). Frozen literal: ladder values feed the
+# per-cell seed derivation (int(lam*1000)), so they must never drift
+# with numpy versions.
+ATLAS_LADDER = (
+    1.0, 1.25, 1.56, 1.94, 2.42, 3.02, 3.76, 4.69, 5.85, 7.29, 9.09,
+    11.34, 14.14, 17.64, 21.99, 27.42, 34.2, 42.65, 53.18, 66.32, 82.7,
+    103.13, 128.61, 160.38, 200.0,
+)
+
 
 def paper_h100() -> ExperimentPlan:
     """42 cells: 3 models x 2 quants x 7-lambda ladder on tpu-v5p."""
@@ -86,16 +111,68 @@ def paper_crosshw() -> ExperimentPlan:
         hws=("tpu-v5e", "tpu-v5p", "tpu-v6e"),
         quants=("bf16", "fp8"),
         ladder=LAMBDA_LADDER,
-        n_chips_by_arch_hw=(
-            ("llama31-8b", "tpu-v5e", 2),
-            ("qwen3-30b-a3b", "tpu-v5e", 8),
-            ("mixtral-8x7b", "tpu-v5e", 8),
-            ("llama31-8b", "tpu-v5p", 1),
-            ("qwen3-30b-a3b", "tpu-v5p", 1),
-            ("mixtral-8x7b", "tpu-v5p", 2),
-            ("llama31-8b", "tpu-v6e", 1),
-            ("qwen3-30b-a3b", "tpu-v6e", 2),
-            ("mixtral-8x7b", "tpu-v6e", 4),
+        n_chips_by_arch_hw=CROSSHW_CHIPS,
+        seed=0,
+        protocol="paper",
+    ).expand()
+
+
+def paper_atlas() -> ExperimentPlan:
+    """450 cells: 3 models x 3 hardware generations x {bf16, fp8} x the
+    25-point log-spaced lambda *continuum* — the dense "penalty atlas"
+    (ISSUE 4).
+
+    The paper's core claim is a curve (C_eff spans 2.5-36x driven by
+    lambda), but the 7-point ladder only samples it; related work prices
+    over ever-larger scenario products (Melange's hw x model x load
+    search, WiNGPT's swept economics), so the atlas densifies the load
+    axis 3.6x at the same per-cell protocol. Feasible as one command
+    because the fleet backend makes a 450-cell plan cost a few dozen
+    cell-equivalents of wall time:
+
+        python -m repro.experiments.run --plan paper_atlas \\
+            --backend vector --resume --analyze
+
+    `analyze.penalty_atlas` consumes the store: per (model, hw, quant)
+    the dense lambda -> penalty curve, its knee (first lambda within 25%
+    of the cost floor) and the idle/saturation spread that the PR-3
+    spread-compression table only samples at 7 points."""
+    return GridSpec(
+        name="paper_atlas",
+        description="dense penalty atlas: 3 models x {v5e, v5p, v6e} x "
+                    "{bf16, fp8} x 25-point log-spaced lambda continuum",
+        archs=PAPER_TRIO,
+        hws=("tpu-v5e", "tpu-v5p", "tpu-v6e"),
+        quants=("bf16", "fp8"),
+        ladder=ATLAS_LADDER,
+        n_chips_by_arch_hw=CROSSHW_CHIPS,
+        seed=0,
+        protocol="paper",
+    ).expand()
+
+
+def probe_int8_nonnative() -> ExperimentPlan:
+    """126 cells exercising `quants_by_hw` at paper scale (ROADMAP PR-3
+    follow-up): int8 — the natively-accelerated low-precision format on
+    every TPU part — is probed on the fp8-*emulating* generations (v5e,
+    v5p), while the native-fp8 v6e keeps its fp8 path; bf16 is the
+    baseline everywhere. Per-hardware quant allow-lists carve 126 cells
+    out of the full 189-cell product, reproducing the paper's §5.9
+    guidance that the Q axis should follow each part's native formats."""
+    return GridSpec(
+        name="probe_int8_nonnative",
+        description="int8-on-non-native-fp8 probe: per-hw quant "
+                    "allow-lists (v5e/v5p: bf16+int8, v6e: bf16+fp8), "
+                    "3 models x 7-ladder",
+        archs=PAPER_TRIO,
+        hws=("tpu-v5e", "tpu-v5p", "tpu-v6e"),
+        quants=("bf16", "int8", "fp8"),
+        ladder=LAMBDA_LADDER,
+        n_chips_by_arch_hw=CROSSHW_CHIPS,
+        quants_by_hw=(
+            ("tpu-v5e", ("bf16", "int8")),
+            ("tpu-v5p", ("bf16", "int8")),
+            ("tpu-v6e", ("bf16", "fp8")),
         ),
         seed=0,
         protocol="paper",
@@ -173,6 +250,8 @@ PLANS: Dict[str, Callable[[], ExperimentPlan]] = {
     "paper_h100": paper_h100,
     "paper_a100": paper_a100,
     "paper_crosshw": paper_crosshw,
+    "paper_atlas": paper_atlas,
+    "probe_int8_nonnative": probe_int8_nonnative,
     "mini_crosshw": mini_crosshw,
     "mini_2x2": mini_2x2,
     "quickstart": quickstart,

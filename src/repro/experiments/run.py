@@ -32,6 +32,13 @@ def main(argv=None):
                     help="re-run every cell, overwriting stored results")
     ap.add_argument("--serial", action="store_true",
                     help="disable the process pool")
+    ap.add_argument("--backend", default="process",
+                    choices=("process", "vector"),
+                    help="cell execution backend: per-cell process pool "
+                         "or the vectorized fleet simulator (lanes x "
+                         "cores; identical records, ~6x cells/s/core)")
+    ap.add_argument("--lane-width", type=int, default=None,
+                    help="max cells per fleet chunk (vector backend)")
     ap.add_argument("--workers", type=int, default=None)
     ap.add_argument("--mp-context", default=None,
                     choices=(None, "fork", "spawn", "forkserver"))
@@ -59,7 +66,8 @@ def main(argv=None):
     runner = PlanRunner(plan, store=store)
     records = runner.run(resume=args.resume, parallel=not args.serial,
                          max_workers=args.workers,
-                         mp_context=args.mp_context, progress=progress)
+                         mp_context=args.mp_context, backend=args.backend,
+                         lane_width=args.lane_width, progress=progress)
     print(f"\n{len(records)}/{len(plan.cells)} cells consolidated to "
           f"{store.csv_path} in {time.time() - t0:.1f}s")
     if args.analyze:

@@ -5,10 +5,17 @@ One engine, two execution tiers (DESIGN §3 "CPU container strategy"):
   * SimExecutor  — calibrated TPU step-time model; virtual-clock timing.
 Both tiers share the scheduler, paging, arrival processes and the
 Prometheus-style metrics registry the cost meter scrapes.
+
+`fleet` (ISSUE 4) is the third scheduler path: a struct-of-arrays
+simulator that runs B independent sim-tier cells as lanes of one
+vectorized event loop, bit-identical to the scalar fast-forward engine.
 """
 from repro.serving.arrivals import (  # noqa: F401
-    ArrivalSpec, gamma_arrivals, poisson_arrivals, synth_requests)
+    ArrivalSpec, gamma_arrivals, poisson_arrivals, synth_arrays,
+    synth_requests)
 from repro.serving.engine import Engine, EngineConfig  # noqa: F401
 from repro.serving.executors import RealExecutor, SimExecutor  # noqa: F401
+from repro.serving.fleet import (  # noqa: F401
+    FleetEngine, FleetPoint, FleetStepModel, fleet_run_points)
 from repro.serving.metrics import MetricsRegistry  # noqa: F401
 from repro.serving.request import Request, RequestState  # noqa: F401

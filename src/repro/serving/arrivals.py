@@ -56,7 +56,14 @@ class ArrivalSpec:
     shared_prefix_groups: int = 0   # >0 -> prefix-sharing workload (§5.7)
 
 
-def synth_requests(spec: ArrivalSpec, start: float = 0.0) -> List[Request]:
+def synth_arrays(spec: ArrivalSpec, start: float = 0.0
+                 ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """The request stream as struct-of-arrays: (arrival_times, prompt_lens,
+    max_new_tokens), each of length `spec.n_requests` in rid order.
+
+    This is the one place the stream's random draws happen (times first,
+    then lengths, off a single generator), so `synth_requests` and the
+    fleet simulator's array-native lanes consume bit-identical streams."""
     rng = np.random.default_rng(spec.seed)
     if spec.process == "gamma":
         times = gamma_arrivals(rng, spec.lam, spec.cv, spec.n_requests, start)
@@ -80,6 +87,11 @@ def synth_requests(spec: ArrivalSpec, start: float = 0.0) -> List[Request]:
         p_outs = np.full(n, p_out, np.int64)
     p_ins = np.maximum(4, (p_ins * spec.scale).astype(np.int64))
     p_outs = np.maximum(2, (p_outs * spec.scale).astype(np.int64))
+    return times, p_ins, p_outs
+
+
+def synth_requests(spec: ArrivalSpec, start: float = 0.0) -> List[Request]:
+    times, p_ins, p_outs = synth_arrays(spec, start)
     return [Request(rid=i, arrival_time=float(times[i]),
                     prompt_len=int(p_ins[i]), max_new_tokens=int(p_outs[i]))
-            for i in range(n)]
+            for i in range(spec.n_requests)]

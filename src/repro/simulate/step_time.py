@@ -101,7 +101,11 @@ class StepTimeModel:
         const``. Single source of truth for decode_time AND
         decode_time_multi — the fast-forward clock jump must never drift
         from the per-step reference, so any new roofline term belongs
-        here, not in either caller."""
+        here, not in either caller. A third consumer mirrors this method
+        op-for-op in vectorized numpy: `serving.fleet.FleetStepModel`
+        (the multi-cell fleet backend, ISSUE 4) must stay bit-identical,
+        and `tests/test_fleet.py` asserts exact equality — edit both
+        together."""
         flops = 2.0 * self._active_params * batch
         compute = flops / (self.n_chips * self._peak_decode *
                            self.mfu_decode)

@@ -14,8 +14,10 @@ import pytest
 from repro.core.pricing import chip_hour_price
 from repro.experiments import ExperimentStore, GridSpec, PlanRunner, get_plan
 from repro.experiments.analyze import (crosshw_tables, fp8_inversion,
-                                       load_store_records, penalty_curves,
+                                       fp8_uplift, load_store_records,
+                                       penalty_atlas, penalty_curves,
                                        report, spread_compression)
+from repro.experiments.plans import ATLAS_LADDER
 from repro.experiments.store import DEFAULT_ROOT
 
 
@@ -67,6 +69,93 @@ def test_quants_by_hw_filters_cells():
         quants_by_hw=(("tpu-v5e", ("bf16",)),)).expand()
     assert {(c.hw, c.quant) for c in plan.cells} == {
         ("tpu-v5e", "bf16"), ("tpu-v6e", "bf16"), ("tpu-v6e", "fp8")}
+
+
+# ---- ISSUE 4 plans: dense atlas + int8 probe --------------------------
+
+
+def test_paper_atlas_plan_structure():
+    plan = get_plan("paper_atlas")
+    assert len(plan) == 450      # 3 models x 3 hw x 2 quants x 25 lams
+    assert len({c.cell_id for c in plan.cells}) == 450
+    assert {c.lam for c in plan.cells} == set(ATLAS_LADDER)
+    assert len(ATLAS_LADDER) == 25
+    # log-spaced continuum: strictly increasing, ~1.25x steps, 1..200
+    ratios = [b / a for a, b in zip(ATLAS_LADDER, ATLAS_LADDER[1:])]
+    assert all(1.15 < r < 1.35 for r in ratios)
+    assert ATLAS_LADDER[0] == 1.0 and ATLAS_LADDER[-1] == 200.0
+    # same footprints + price book as the crosshw plan
+    crosshw = {(c.arch, c.hw): c.n_chips
+               for c in get_plan("paper_crosshw").cells}
+    for c in plan.cells:
+        assert c.n_chips == crosshw[(c.arch, c.hw)]
+        assert c.price_per_hr == chip_hour_price(c.hw, c.n_chips)
+
+
+def test_probe_int8_nonnative_plan_structure():
+    """ROADMAP PR-3 follow-up: quants_by_hw exercised at paper scale —
+    int8 on the fp8-emulating parts, fp8 kept on the native-fp8 part."""
+    plan = get_plan("probe_int8_nonnative")
+    assert len(plan) == 126      # 3 models x 3 hw x 2-of-3 quants x 7
+    by_hw = {}
+    for c in plan.cells:
+        by_hw.setdefault(c.hw, set()).add(c.quant)
+    assert by_hw == {"tpu-v5e": {"bf16", "int8"},
+                     "tpu-v5p": {"bf16", "int8"},
+                     "tpu-v6e": {"bf16", "fp8"}}
+
+
+def test_committed_atlas_store_dense_curves():
+    recs = load_store_records("paper_atlas")
+    if len(recs) < 450:
+        pytest.skip("paper_atlas store not populated")
+    atlas = penalty_atlas(recs)
+    assert len(atlas) == 18      # 3 models x 3 hw x 2 quants
+    for row in atlas:
+        assert len(row["lams"]) == 25
+        assert row["lams"] == sorted(row["lams"])
+        # the load-driven spread lands in the paper's band on every curve
+        assert 5.0 < row["spread"] < 100.0, (row["model"], row["hw"])
+        # the knee exists inside the swept range and is past the idle edge
+        assert row["lams"][0] < row["knee_lambda"] <= row["lams"][-1]
+        # half-cost load is at or before the knee (util rises monotonically
+        # in lambda on the sim tier)
+        assert row["half_cost_lambda"] <= row["knee_lambda"]
+        # the curve's penalty floor is ~1 at saturation
+        assert min(row["penalty"]) == pytest.approx(1.0, abs=1e-6)
+    # the atlas is part of the committed analysis payload
+    import json as _json
+    path = DEFAULT_ROOT / "paper_atlas" / "analysis.json"
+    if path.exists():
+        blob = _json.loads(path.read_text())
+        fresh = _json.loads(_json.dumps(crosshw_tables(recs)))
+        assert blob == fresh
+
+
+def test_committed_int8_probe_store():
+    recs = load_store_records("probe_int8_nonnative")
+    if len(recs) < 126:
+        pytest.skip("probe_int8_nonnative store not populated")
+    rows = {(r["hw"], r["model"]): r
+            for r in fp8_uplift(recs, variant="int8")}
+    # int8 rides the native MXU path on the emulating parts: the
+    # memory-bound MoEs must gain; rows exist only where int8 ran
+    assert {hw for hw, _ in rows} == {"tpu-v5e", "tpu-v5p"}
+    for hw in ("tpu-v5e", "tpu-v5p"):
+        assert rows[(hw, "qwen3-30b-a3b")]["tps_uplift"] > 1.0
+        assert rows[(hw, "mixtral-8x7b")]["tps_uplift"] > 1.0
+    # fp8 rows exist only on the native part
+    fp8 = {(r["hw"], r["model"]) for r in fp8_uplift(recs)}
+    assert {hw for hw, _ in fp8} == {"tpu-v6e"}
+    # report renders the int8 section for this store
+    assert "INT8 uplift" in report(recs, title="probe_int8_nonnative")
+
+
+def test_penalty_atlas_skips_sparse_stores():
+    recs = load_store_records("paper_crosshw")
+    if len(recs) < 126:
+        pytest.skip("paper_crosshw store not populated")
+    assert penalty_atlas(recs) == []     # 7-point ladders are not dense
 
 
 # ---- the committed paper_crosshw store --------------------------------

@@ -1,0 +1,312 @@
+"""Fleet backend (ISSUE 4): lane-identity property tests.
+
+Three layers, mirroring the PR-1 equivalence discipline:
+
+* `FleetStepModel` must answer *bitwise* what per-lane `StepTimeModel`s
+  answer (`==`, not approx) — the vectorized mirror and the scalar
+  roofline must never drift.
+* `fleet_run_points` RunRecords must equal the scalar `run_point`
+  field-for-field across every mini plan, failure injection, co-arrival
+  wakeups, horizon truncation and ragged lane completion (lanes
+  finishing at very different sim times must not perturb survivors).
+* The `backend="vector"` execution path must produce byte-identical
+  store artifacts and reuse one persistent process pool across calls.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.sweep import SimEngineSpec, run_point
+from repro.experiments import ExperimentStore, PlanRunner, get_plan
+from repro.experiments.plan import ladder_plan
+from repro.experiments.runner import (execute_cells, run_cell,
+                                      shutdown_pool)
+from repro.serving.fleet import (FleetEngine, FleetPoint, FleetStepModel,
+                                 fleet_run_points)
+from repro.simulate import HW_BY_NAME, StepTimeModel
+
+
+def _points(cells, factory=None):
+    return [FleetPoint(engine=factory or c.engine_spec(),
+                       arrivals=c.arrival_spec(), warmup=c.warmup,
+                       horizon=c.horizon, failure_times=c.failure_times,
+                       **c.record_kw())
+            for c in cells]
+
+
+def _assert_records_equal(xs, ys, ctx=""):
+    assert len(xs) == len(ys)
+    for a, b in zip(xs, ys):
+        da, db = dataclasses.asdict(a), dataclasses.asdict(b)
+        for key in da:
+            # repr-compare: NaN == NaN must pass, 1e-9 drift must not
+            assert repr(da[key]) == repr(db[key]), \
+                (ctx, a.model, a.hw, a.quant, a.lam, key, da[key], db[key])
+
+
+# ---- bitwise step-time mirror -----------------------------------------
+
+
+MODEL_GRID = (("llama31-8b", "tpu-v5e", "bf16", 1),
+              ("llama31-8b", "tpu-v5p", "fp8", 2),
+              ("qwen3-30b-a3b", "tpu-v6e", "fp8", 2),
+              ("qwen3-30b-a3b", "tpu-v5e", "int8", 8),
+              ("mixtral-8x7b", "tpu-v5p", "bf16", 2),
+              ("xlstm-350m", "tpu-v5e", "bf16", 1))   # kv-free: slope == 0
+
+
+def test_fleet_step_model_bitwise_vs_scalar():
+    """Every lane of the vectorized model must be IEEE-identical to its
+    scalar StepTimeModel — exact ==, the tripwire against formula
+    drift between `_decode_terms` and its numpy mirror."""
+    models = [StepTimeModel(get_config(a), HW_BY_NAME[h], n_chips=n,
+                            quant=q) for a, h, q, n in MODEL_GRID]
+    fm = FleetStepModel(models)
+    rng = np.random.default_rng(42)
+    for _ in range(200):
+        b = rng.integers(0, 257, len(models))
+        ctx = rng.choice([0.0, 37.5, 512.0, 4096.0], len(models))
+        k = rng.integers(0, 1200, len(models))
+        dt = fm.decode_time(b.astype(float), ctx)
+        dtm = fm.decode_time_multi(b.astype(float), ctx, k.astype(float))
+        ntok = rng.integers(0, 8193, len(models))
+        nreq = rng.integers(0, 9, len(models))
+        pf = fm.prefill_time(ntok.astype(float), nreq.astype(float))
+        for i, m in enumerate(models):
+            assert dt[i] == m.decode_time(int(b[i]), float(ctx[i])), \
+                ("decode_time", MODEL_GRID[i], b[i], ctx[i])
+            assert dtm[i] == m.decode_time_multi(int(b[i]), float(ctx[i]),
+                                                 int(k[i])), \
+                ("decode_time_multi", MODEL_GRID[i], b[i], ctx[i], k[i])
+            assert pf[i] == m.prefill_time(int(ntok[i]), int(nreq[i])), \
+                ("prefill_time", MODEL_GRID[i], ntok[i], nreq[i])
+
+
+# ---- lane identity vs the scalar engine -------------------------------
+
+
+@pytest.mark.parametrize("plan_name", ["mini_2x2", "mini_crosshw"])
+def test_fleet_records_match_scalar_on_mini_plans(plan_name):
+    cells = list(get_plan(plan_name).cells)
+    scalar = [run_cell(c) for c in cells]
+    fleet = fleet_run_points(_points(cells))
+    _assert_records_equal(scalar, fleet, plan_name)
+
+
+def test_fleet_failure_injection_identity():
+    """Failure-tracked lanes walk the same rng.choice stream as the
+    scalar fail_running (slot ids evolve identically), so re-queues,
+    retries and dropped requests match exactly."""
+    plan = ladder_plan(ladder=(5, 20), failure_times=[0.5, 1.5, 3.0],
+                       arch="llama31-8b", config="C1", model="llama31-8b",
+                       hw="tpu-v5e")
+    cells = list(plan.cells)
+    scalar = [run_cell(c) for c in cells]
+    fleet = fleet_run_points(_points(cells))
+    _assert_records_equal(scalar, fleet, "failures")
+
+
+def test_fleet_stacked_failures_requeue_order():
+    """A failure landing while an earlier failure's re-queued requests
+    are still draining: the scalar loop front-merges each event's
+    victims AHEAD of older leftovers (queue.extendleft), and the fleet
+    must prepend identically — with variable shapes the admission order
+    is observable in every timing field."""
+    big = dict(max_pages_per_seq=512, num_pages=131072, max_prefill_reqs=1)
+    cells = []
+    for ft in [(0.5, 0.502, 0.504, 0.506), (0.2, 0.21, 0.22),
+               (1.0, 1.001)]:
+        plan = ladder_plan(ladder=(80,), io_shape="variable",
+                           process="gamma", cv=2.0, failure_times=ft,
+                           arch="qwen3-30b-a3b", model="qwen3-30b-a3b",
+                           hw="tpu-v5p")
+        cells += [dataclasses.replace(c, **big) for c in plan.cells]
+    scalar = [run_cell(c) for c in cells]
+    fleet = fleet_run_points(_points(cells))
+    _assert_records_equal(scalar, fleet, "stacked-failures")
+
+
+def test_fleet_ragged_lanes_identity():
+    """One fleet mixing wildly different lanes — idle lambda, saturated
+    lambda, horizon-truncated, variable-shape gamma arrivals, failure
+    injection, smoke cells — every record must equal its independent
+    scalar run: lanes completing early must not perturb survivors."""
+    big = dict(max_pages_per_seq=512, num_pages=131072)
+    cells = []
+    cells += list(ladder_plan(ladder=(1, 80), arch="llama31-8b",
+                              model="llama31-8b", hw="tpu-v5e",
+                              requests_per_point=lambda lam: 120,
+                              warmup_per_point=lambda lam: 15).cells)
+    cells += [dataclasses.replace(c, **big) for c in ladder_plan(
+        ladder=(10,), io_shape="variable", process="gamma", cv=2.0,
+        arch="qwen3-30b-a3b", model="qwen3-30b-a3b", hw="tpu-v5p").cells]
+    cells += list(ladder_plan(ladder=(10, 50), horizon=4.0,
+                              arch="mixtral-8x7b", model="mixtral-8x7b",
+                              hw="tpu-v5e", n_chips=2).cells)
+    cells += list(ladder_plan(ladder=(15,), failure_times=[0.3, 2.0],
+                              arch="llama31-8b", model="llama31-8b",
+                              hw="tpu-v5e").cells)
+    cells += list(get_plan("mini_2x2").cells)
+    scalar = [run_cell(c) for c in cells]
+    fleet = fleet_run_points(_points(cells))
+    _assert_records_equal(scalar, fleet, "ragged")
+
+
+def test_fleet_co_arrival_single_wakeup():
+    """Same-instant arrivals into an idle fleet lane must be admitted in
+    one wakeup, exactly as the scalar idle-regime path (ISSUE 2)."""
+    from repro.serving import Engine, EngineConfig, SimExecutor
+    from repro.serving.request import Request
+
+    arrivals = [1.0, 1.0, 1.0, 9.0, 9.0]
+    cfg = get_config("llama31-8b")
+    stm = StepTimeModel(cfg, HW_BY_NAME["tpu-v5e"])
+    eng = Engine(EngineConfig(max_batch=32, page_size=16, num_pages=8192,
+                              max_pages_per_seq=64, fast_forward=True),
+                 SimExecutor(cfg, stm))
+    reqs = [Request(rid=i, arrival_time=float(t), prompt_len=64,
+                    max_new_tokens=24) for i, t in enumerate(arrivals)]
+    eng.run(reqs)
+
+    spec = SimEngineSpec("llama31-8b", hw="tpu-v5e", max_batch=32,
+                         num_pages=8192, max_pages_per_seq=64)
+    fe = FleetEngine([spec])
+    times = np.asarray(arrivals)
+    plens = np.full(len(arrivals), 64, np.int64)
+    mnews = np.full(len(arrivals), 24, np.int64)
+    fe.load_phase([(times, plens, mnews)], [None], [()])
+    fe.run_phase()
+    for i, r in enumerate(reqs):
+        assert fe.r_first[0, i] == r.first_token_time, (i, r)
+        assert fe.r_finish[0, i] == r.finish_time, (i, r)
+    # all co-arrivals share one admission instant (one wakeup each)
+    assert len(set(fe.r_first[0, :3])) == 1
+    assert len(set(fe.r_first[0, 3:])) == 1
+    # far fewer rounds than the per-token iteration count
+    assert fe.n_rounds < eng.n_decode_steps
+
+
+def test_fleet_warmup_protocol_identity():
+    """Warmup lanes replay run_point's exact protocol (seed + 7777
+    stream, reset_measurement at the boundary) while zero-warmup lanes
+    sit the phase out."""
+    fac = SimEngineSpec("llama31-8b", max_batch=64, num_pages=8192)
+    spec_w = dict(ladder=(5, 25), arch="llama31-8b", model="llama31-8b",
+                  hw="tpu-v5e",
+                  requests_per_point=lambda lam: 150,
+                  warmup_per_point=lambda lam: 25)
+    plan = ladder_plan(**spec_w)
+    cells = list(plan.cells)
+    scalar = [run_point(fac, c.arrival_spec(), warmup=c.warmup,
+                        **c.record_kw()) for c in cells]
+    fleet = fleet_run_points(_points(cells, factory=fac))
+    _assert_records_equal(scalar, fleet, "warmup")
+
+
+# ---- execution backend ------------------------------------------------
+
+
+def test_vector_backend_store_byte_identity(tmp_path):
+    plan = get_plan("mini_crosshw")
+    s1 = ExperimentStore(plan.name, tmp_path / "process")
+    s2 = ExperimentStore(plan.name, tmp_path / "vector")
+    PlanRunner(plan, store=s1).run(parallel=False, backend="process")
+    PlanRunner(plan, store=s2).run(parallel=False, backend="vector")
+    assert s1.csv_path.read_bytes() == s2.csv_path.read_bytes()
+    assert s1.manifest_path.read_bytes() == s2.manifest_path.read_bytes()
+
+
+class _Killed(Exception):
+    pass
+
+
+def test_vector_backend_midchunk_kill_resume(tmp_path):
+    """In-process fleet chunks stream per-cell: a run killed mid-chunk
+    keeps every already-finished lane in the store, and resume completes
+    the rest to byte-identical artifacts."""
+    plan = get_plan("mini_crosshw")
+    ref = ExperimentStore(plan.name, tmp_path / "ref")
+    PlanRunner(plan, store=ref).run(parallel=False, backend="vector")
+    want_csv = ref.csv_path.read_bytes()
+
+    store = ExperimentStore(plan.name, tmp_path / "killed")
+    k = 5
+
+    def _kill(cell, rec, n_done, n_total):
+        if n_done >= k:
+            raise _Killed(cell.cell_id)
+
+    with pytest.raises(_Killed):
+        PlanRunner(plan, store=store).run(parallel=False, backend="vector",
+                                          progress=_kill)
+    # the kill landed mid-chunk, after k per-cell store writes
+    assert len(store.completed_ids(plan)) == k
+    resumed = []
+    PlanRunner(plan, store=store).run(
+        parallel=False, backend="vector",
+        progress=lambda c, r, i, n: resumed.append(c.cell_id))
+    assert len(resumed) == len(plan.cells) - k
+    assert store.csv_path.read_bytes() == want_csv
+
+
+def test_vector_backend_handles_reference_cells():
+    """fast_forward=False cells cannot ride a fleet lane; the vector
+    backend must route them through the per-cell path transparently."""
+    plan = get_plan("mini_2x2")
+    mixed = [dataclasses.replace(c, fast_forward=(i % 2 == 0))
+             for i, c in enumerate(plan.cells)]
+    process = execute_cells(mixed, parallel=False, backend="process")
+    vector = execute_cells(mixed, parallel=False, backend="vector")
+    _assert_records_equal(process, vector, "mixed-ff")
+
+
+def test_vector_backend_rejects_unknown():
+    with pytest.raises(ValueError, match="unknown backend"):
+        execute_cells(list(get_plan("mini_2x2").cells), backend="nope")
+    with pytest.raises(ValueError, match="lane_width"):
+        execute_cells(list(get_plan("mini_2x2").cells), backend="vector",
+                      lane_width=0)
+
+
+def test_parallel_vector_backend_matches_serial():
+    plan = get_plan("mini_crosshw")
+    serial = PlanRunner(plan).run(parallel=False, backend="vector")
+    pooled = PlanRunner(plan).run(parallel=True, backend="vector",
+                                  max_workers=2, lane_width=5)
+    _assert_records_equal(serial, pooled, "vector-pool")
+
+
+def test_persistent_pool_reused_across_calls():
+    import repro.experiments.runner as runner_mod
+    shutdown_pool()
+    cells = list(get_plan("mini_2x2").cells)
+    execute_cells(cells, parallel=True, max_workers=2)
+    p1 = runner_mod._POOL.get("pool")
+    assert p1 is not None
+    execute_cells(cells, parallel=True, max_workers=2)
+    assert runner_mod._POOL.get("pool") is p1      # same warm pool
+    # a different factory keys a fresh pool
+    fac = SimEngineSpec("llama31-8b", max_batch=64, num_pages=8192)
+    plan = ladder_plan(ladder=(1, 5, 10), arch="llama31-8b",
+                       requests_per_point=lambda lam: 40,
+                       warmup_per_point=lambda lam: 0)
+    execute_cells(list(plan.cells), factory=fac, parallel=True,
+                  max_workers=2, backend="process")
+    p2 = runner_mod._POOL.get("pool")
+    assert p2 is not p1
+    shutdown_pool()
+    assert runner_mod._POOL.get("pool") is None
+
+
+def test_lambda_sweep_vector_backend_identity():
+    fac = SimEngineSpec("llama31-8b", max_batch=64, num_pages=8192)
+    from repro.core import lambda_sweep, parallel_sweep
+    kw = dict(ladder=(1, 10, 50),
+              requests_per_point=lambda lam: 80,
+              warmup_per_point=lambda lam: 0,
+              config="C1", model="llama31-8b", hw="tpu-v5e")
+    serial = lambda_sweep(fac, **kw)
+    vector = parallel_sweep(fac, backend="vector", **kw)
+    _assert_records_equal(serial, vector, "sweep-vector")
