@@ -1,0 +1,85 @@
+"""Capacity-planner throughput (ISSUE 5): time the full-store
+fit + optimize path — the interactive surface an operator hits, so it
+must stay interactive-fast even over the 450-cell dense atlas.
+
+Measures, best-of-N over the committed `paper_atlas` store (no engines
+are re-run):
+
+* `fit`       — fitting every DeploymentCurve from consolidated records
+* `optimize`  — plan_capacity across footprints x replica counts + the
+                greedy heterogeneous mix, per reference load
+* `slo`       — the same optimization under a TTFT p90 target (adds the
+                per-curve bisection caps)
+* `tables`    — the full `planner_tables` payload (what analyze embeds)
+
+Informational only (no CI gate): the quick section rides the
+quick-benches job so a pathological regression is at least *visible* in
+the logs. Falls back to the sparse `paper_crosshw` store when the atlas
+is absent; fails loudly with the command to build one when neither
+store exists."""
+import time
+
+from benchmarks.common import emit
+from repro.core.slo import SLOTarget
+from repro.experiments.analyze import load_store_records
+from repro.planner import fit_curves, plan_capacity, planner_tables
+
+LOADS = (1.0, 5.0, 42.0, 200.0)
+SLO = SLOTarget(ttft_p90_ms=2000.0)
+
+
+def _records():
+    for plan in ("paper_atlas", "paper_crosshw"):
+        try:
+            records = load_store_records(plan)
+        except OSError:
+            records = []
+        if records:
+            return plan, records
+    raise SystemExit(
+        "no committed store found (paper_atlas / paper_crosshw); run: "
+        "python -m repro.experiments.run --plan paper_atlas "
+        "--backend vector")
+
+
+def _best_of(fn, n):
+    best, out = float("inf"), None
+    for _ in range(n):
+        t0 = time.perf_counter()
+        out = fn()
+        best = min(best, time.perf_counter() - t0)
+    return best, out
+
+
+def run(quick: bool = False):
+    n = 3 if quick else 5
+    plan, records = _records()
+    print(f"# store: {plan} ({len(records)} records)")
+
+    t_fit, curves = _best_of(lambda: fit_curves(records), n)
+    t_opt, plans = _best_of(
+        lambda: [plan_capacity(curves, lam) for lam in LOADS], n)
+    t_slo, _ = _best_of(
+        lambda: [plan_capacity(curves, lam, SLO) for lam in LOADS], n)
+    t_tab, _ = _best_of(lambda: planner_tables(records), n)
+
+    n_options = sum(len(p.ranked) + len(p.rejected)
+                    for per_lam in plans for p in per_lam)
+    rows = [{
+        "store": plan, "n_records": len(records), "n_curves": len(curves),
+        "n_loads": len(LOADS), "n_options": n_options,
+        "fit_ms": t_fit * 1e3,
+        "optimize_ms": t_opt * 1e3,
+        "optimize_slo_ms": t_slo * 1e3,
+        "planner_tables_ms": t_tab * 1e3,
+        # planner_tables refits internally: it IS the end-to-end path
+        "end_to_end_ms": t_tab * 1e3,
+    }]
+    emit("planner", rows)
+    print(f"# fit {t_fit * 1e3:.1f}ms + optimize {t_opt * 1e3:.1f}ms "
+          f"({n_options} options over {len(LOADS)} loads); "
+          f"full planner_tables {t_tab * 1e3:.1f}ms")
+
+
+if __name__ == "__main__":
+    run()

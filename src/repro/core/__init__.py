@@ -15,11 +15,13 @@ from repro.core.cost import (  # noqa: F401
     c_eff, c_naive, littles_law_inflight, tokens_per_dollar,
     underutilization_penalty, utilization)
 from repro.core.crossover import (  # noqa: F401
-    crossover_lambda, crossover_table, interp_c_eff)
+    aggregate_points, crossover_lambda, crossover_table, interp_aggregated,
+    interp_c_eff, interp_loglog)
 from repro.core.meter import CostMeter, MeterSample  # noqa: F401
 from repro.core.pricing import API_TIERS, APITier, chip_hour_price  # noqa: F401
 from repro.core.records import RunRecord, read_csv, write_csv  # noqa: F401
-from repro.core.slo import SLOResult, slo_operating_point  # noqa: F401
+from repro.core.slo import (  # noqa: F401
+    SLOResult, SLOTarget, slo_operating_point)
 from repro.core.stability import cv, stability_table  # noqa: F401
 from repro.core.sweep import (  # noqa: F401
     LAMBDA_LADDER, SimEngineSpec, lambda_sweep, parallel_sweep, run_point)

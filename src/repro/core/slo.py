@@ -18,6 +18,40 @@ DEFAULT_TTFT_P99_MS = 300.0
 DEFAULT_TPOT_P99_MS = 50.0
 
 
+@dataclasses.dataclass(frozen=True)
+class SLOTarget:
+    """A latency target as upper bounds on RunRecord percentile fields
+    (ms); unset bounds are unconstrained. `slo_operating_point` keeps its
+    historical p99-pair signature; the capacity planner (`repro.planner`)
+    checks interpolated operating points against any subset of bounds."""
+    ttft_p50_ms: Optional[float] = None
+    ttft_p90_ms: Optional[float] = None
+    ttft_p99_ms: Optional[float] = None
+    tpot_p50_ms: Optional[float] = None
+    tpot_p99_ms: Optional[float] = None
+
+    def bounds(self) -> List[tuple]:
+        """The set (metric_name, bound_ms) pairs actually constrained."""
+        return [(f.name, getattr(self, f.name))
+                for f in dataclasses.fields(self)
+                if getattr(self, f.name) is not None]
+
+    def ok(self, metrics) -> bool:
+        """True iff every constrained metric is present, finite and within
+        its bound. `metrics` maps RunRecord field names to values; a
+        missing or non-finite value fails the bound (a load we cannot
+        price against the SLA is not demonstrably feasible)."""
+        for name, bound in self.bounds():
+            v = metrics.get(name)
+            if v is None or not math.isfinite(v) or v > bound:
+                return False
+        return True
+
+    def describe(self) -> str:
+        return ", ".join(f"{n} <= {b:g}ms" for n, b in self.bounds()) \
+            or "unconstrained"
+
+
 @dataclasses.dataclass
 class SLOResult:
     config: str

@@ -240,15 +240,20 @@ def crosshw_ordering(records: Sequence[RunRecord]) -> List[dict]:
     return out
 
 
-def crosshw_tables(records: Sequence[RunRecord]) -> Dict[str, List[dict]]:
+def crosshw_tables(records: Sequence[RunRecord]) -> Dict[str, object]:
     """The cross-hardware artifacts as one JSON-ready payload. The
     penalty atlas joins when the store is dense enough (lambda-continuum
-    plans); sparse-ladder stores carry an empty list there."""
+    plans); sparse-ladder stores carry an empty list there. The planner
+    payload (ISSUE 5) serializes the fitted per-hardware curves — the
+    knots a penalty-curve figure needs — plus the recommended deployment
+    at the paper's reference loads."""
+    from repro.planner.tables import planner_tables
     return {
         "spread_compression": spread_compression(records),
         "fp8_inversion": fp8_inversion(records),
         "active_params_ordering": crosshw_ordering(records),
         "penalty_atlas": penalty_atlas(records),
+        "planner_tables": planner_tables(records),
     }
 
 

@@ -7,9 +7,10 @@
 
 Resume is the default: re-invoking after a kill finishes only the
 remaining cells and re-derives an identical consolidated CSV. `--fresh`
-ignores (and overwrites) stored cells instead. `--analyze-json` persists
+prunes cell files orphaned by plan edits (`store.prune`) and re-runs
+(overwriting) every current cell instead. `--analyze-json` persists
 the cross-hardware tables (spread compression, fp8 inversion, ordering
-survival) as `analysis.json` beside the store.
+survival, planner payload) as `analysis.json` beside the store.
 """
 from __future__ import annotations
 
@@ -29,7 +30,8 @@ def main(argv=None):
     ap.add_argument("--resume", action="store_true", default=True,
                     help="skip cells already in the store (default)")
     ap.add_argument("--fresh", dest="resume", action="store_false",
-                    help="re-run every cell, overwriting stored results")
+                    help="prune orphaned cell files, then re-run every "
+                         "cell, overwriting stored results")
     ap.add_argument("--serial", action="store_true",
                     help="disable the process pool")
     ap.add_argument("--backend", default="process",
@@ -53,6 +55,13 @@ def main(argv=None):
 
     plan = get_plan(args.plan)
     store = ExperimentStore(plan.name, args.root)
+    if not args.resume and store.dir.exists():
+        # --fresh also clears orphaned cell files (a plan edit renames
+        # cell ids; superseded files would otherwise accumulate forever)
+        pruned = store.prune(plan)
+        if pruned:
+            print(f"pruned {len(pruned)} stale cell file(s) from "
+                  f"{store.dir}")
     already = len(store.completed_ids(plan)) if args.resume else 0
     print(f"plan {plan.name}: {len(plan.cells)} cells "
           f"({already} already in store at {store.dir})")

@@ -106,6 +106,27 @@ class ExperimentStore:
                       json.dumps(manifest, indent=1, sort_keys=True))
         return done
 
+    def prune(self, plan: ExperimentPlan) -> List[Path]:
+        """Delete orphaned cell files: any `cell_*.json` that no current
+        plan cell claims with a matching fingerprint (a plan edit renames
+        cell ids, so superseded files would otherwise accumulate forever
+        and survive `--fresh`). Consolidated artifacts are untouched —
+        the next `consolidate` re-derives them from the surviving cells.
+        Returns the removed paths."""
+        want = {self.cell_path(c).name: c.fingerprint() for c in plan.cells}
+        removed = []
+        for path in sorted(self.dir.glob("cell_*.json")):
+            try:
+                blob = json.loads(path.read_text())
+                fingerprint = blob.get("fingerprint") \
+                    if isinstance(blob, dict) else None
+            except (OSError, json.JSONDecodeError):
+                fingerprint = None            # torn write: prune with rest
+            if path.name not in want or want[path.name] != fingerprint:
+                path.unlink()
+                removed.append(path)
+        return removed
+
     # ---- reads --------------------------------------------------------
     def load_cell_records(self, plan: ExperimentPlan) -> Dict[str, RunRecord]:
         """cell_id -> RunRecord for every stored cell whose fingerprint
@@ -119,9 +140,18 @@ class ExperimentStore:
                 blob = json.loads(path.read_text())
             except (OSError, json.JSONDecodeError):
                 continue                      # torn write: treat as missing
-            if blob.get("fingerprint") != cell.fingerprint():
+            if not isinstance(blob, dict) or \
+                    blob.get("fingerprint") != cell.fingerprint():
                 continue
-            out[cell.cell_id] = RunRecord(**blob["record"])
+            record = blob.get("record")
+            if not isinstance(record, dict):
+                continue                      # payload missing: stale
+            try:
+                out[cell.cell_id] = RunRecord(**record)
+            except TypeError:
+                # schema drift (e.g. a cell written by an older RunRecord
+                # missing fields, or carrying unknown ones): stale, re-run
+                continue
         return out
 
     def completed_ids(self, plan: ExperimentPlan) -> Set[str]:

@@ -1,0 +1,37 @@
+"""Concurrency-aware capacity planner (ISSUE 5 tentpole).
+
+Everything upstream of this package *reports* the paper's cost surface
+C_eff = f(H, M, Q, lambda, L); this package *inverts* it into the
+operator's actual decision: given my offered rate lambda and my SLO,
+what should I deploy, and at what $/M-tokens?
+
+  curves.py   — fit per-(model, hw, quant, n_chips) lambda -> (C_eff,
+                util, TTFT/TPOT percentiles, concurrency) interpolators
+                from any consolidated store (the dense `paper_atlas`
+                continuum preferred; sparse 7-point ladders accepted
+                with extrapolation flags), all through the hardened
+                `core.crossover.interp_loglog` primitive.
+  optimize.py — enumerate (hw, quant, n_chips) x replica-count
+                deployments (each replica serves lambda/R: concurrency
+                falls, penalty rises — priced, not hidden), a
+                Mélange-style greedy heterogeneous mix across hardware
+                generations, SLO feasibility, and the per-API-tier
+                crossover verdict via the §6.4-gated `crossover_table`.
+  tables.py   — the `planner_tables` JSON payload (embedded in
+                `analysis.json` by `experiments.analyze`) + the text
+                rendering shared by the CLI and the example.
+  __main__.py — the CLI:
+
+    python -m repro.planner --plan paper_atlas --lam 5 --slo-ttft-p90 2000
+
+runs from the committed store alone (no engines re-run).
+"""
+from repro.planner.curves import (  # noqa: F401
+    DENSE_MIN_POINTS, DeploymentCurve, curves_by_model, fit_curves,
+    penalty_from_util)
+from repro.planner.optimize import (  # noqa: F401
+    DEFAULT_MAX_REPLICAS, CapacityPlan, DeploymentOption, HeterogeneousMix,
+    MixAllocation, enumerate_options, greedy_mix, plan_capacity,
+    rank_options, slo_feasible_cap)
+from repro.planner.tables import (  # noqa: F401
+    REFERENCE_LAMS, planner_tables, render_plan, render_plans)

@@ -1,0 +1,82 @@
+"""CLI: invert a committed experiment store into deployment decisions.
+
+    PYTHONPATH=src python -m repro.planner --plan paper_atlas --lam 5
+    PYTHONPATH=src python -m repro.planner --plan paper_atlas --lam 5 \
+        --slo-ttft-p90 2000 --slo-tpot-p99 100
+    PYTHONPATH=src python -m repro.planner --plan paper_crosshw --lam 40 \
+        --model mixtral-8x7b --json plan.json
+
+Runs from the store alone — no engines are re-run. Exit status 3 when no
+model has any feasible deployment at the requested load (the planner
+refuses to silently price an SLO-infeasible load, paper §6.4).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro.core.slo import SLOTarget
+from repro.experiments.analyze import load_store_records
+from repro.planner.curves import fit_curves
+from repro.planner.optimize import DEFAULT_MAX_REPLICAS, plan_capacity
+from repro.planner.tables import plan_row, render_plans
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--plan", required=True,
+                    help="experiment plan whose store to invert "
+                         "(e.g. paper_atlas)")
+    ap.add_argument("--lam", type=float, required=True,
+                    help="offered rate, req/s")
+    ap.add_argument("--model", default=None,
+                    help="restrict to one model (default: every model "
+                         "in the store)")
+    ap.add_argument("--io-shape", default="chat")
+    ap.add_argument("--max-replicas", type=int,
+                    default=DEFAULT_MAX_REPLICAS)
+    ap.add_argument("--slo-ttft-p90", type=float, default=None,
+                    metavar="MS")
+    ap.add_argument("--slo-ttft-p99", type=float, default=None,
+                    metavar="MS")
+    ap.add_argument("--slo-tpot-p99", type=float, default=None,
+                    metavar="MS")
+    ap.add_argument("--root", default=None,
+                    help="store root (default results/experiments)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write the per-model plans as JSON")
+    args = ap.parse_args(argv)
+
+    records = load_store_records(args.plan, args.root)
+    if not records:
+        raise SystemExit(
+            f"no completed cells in store for {args.plan!r}; run: "
+            f"python -m repro.experiments.run --plan {args.plan}")
+    curves = fit_curves(records, io_shape=args.io_shape, model=args.model)
+    if not curves:
+        raise SystemExit(
+            f"store for {args.plan!r} has no curves for "
+            f"model={args.model!r} io_shape={args.io_shape!r}")
+
+    slo = None
+    if (args.slo_ttft_p90 is not None or args.slo_ttft_p99 is not None
+            or args.slo_tpot_p99 is not None):
+        slo = SLOTarget(ttft_p90_ms=args.slo_ttft_p90,
+                        ttft_p99_ms=args.slo_ttft_p99,
+                        tpot_p99_ms=args.slo_tpot_p99)
+
+    plans = plan_capacity(curves, args.lam, slo,
+                          max_replicas=args.max_replicas)
+    print(render_plans(
+        plans, title=f"{args.plan} @ lambda={args.lam:g} rps"))
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump([plan_row(p) for p in plans], f, indent=1,
+                      sort_keys=True)
+        print(f"\nplans written to {args.json}")
+    if not any(p.feasible for p in plans):
+        raise SystemExit(3)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,305 @@
+"""Invert the cost atlas into deployment decisions (ISSUE 5 tentpole).
+
+The paper's thesis is that the operator's offered rate lambda — not a
+utilization preset — drives the self-host decision (C_eff = f(H, M, Q,
+lambda, L)). The analysis layer *reports* that surface; this module
+*inverts* it: given lambda, an io shape and an optional SLO, enumerate
+every deployment the store has measured and rank what the operator
+should actually buy.
+
+Three decision axes:
+
+* **Footprint** — every (hw, quant, n_chips) the store has curves for.
+* **Replica count R** — each replica serves lambda/R. By Little's law the
+  per-replica concurrency falls with R, so utilization falls and the
+  underutilization penalty rises: a replica split is never cheaper per
+  token on a monotone curve (the fleet's $/M-tok at lambda equals one
+  replica's C_eff at lambda/R >= C_eff(lambda)), but it is how an
+  SLO-infeasible load becomes feasible — the planner prices that
+  tradeoff instead of hiding it.
+* **Heterogeneous mix** — a Mélange-style (Griggs et al.) greedy pass
+  across hardware generations: repeatedly hand the largest
+  SLO-feasible slice of the remaining load to the footprint that serves
+  it at the lowest $/M-token, so a premium part carries the bulk while a
+  cheap part mops up the remainder.
+
+Loads nothing here can demonstrably serve (lambda/R beyond every
+measured curve, or no operating point within the SLO) are **rejected
+with a reason, never silently priced** — the paper's §6.4 discipline.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.crossover import crossover_table
+from repro.core.slo import SLOTarget
+from repro.planner.curves import DeploymentCurve, penalty_from_util
+
+DEFAULT_MAX_REPLICAS = 8
+# bisection iterations for the SLO-feasible rate cap (log-space; 60
+# halvings pin the cap far below any meaningful resolution)
+_CAP_ITERS = 60
+
+
+@dataclasses.dataclass(frozen=True)
+class DeploymentOption:
+    """One priced deployment: R replicas of a footprint at offered lambda."""
+    model: str
+    hw: str
+    quant: str
+    n_chips: int
+    replicas: int
+    lam: float                  # total offered rate
+    lam_per_replica: float
+    c_eff: float                # $/M output tokens for the whole fleet
+    fleet_price_per_hr: float   # R x the footprint's hourly price
+    util: float
+    penalty: float
+    mean_inflight: float        # per-replica concurrency (Little's law)
+    ttft_p90_ms: float
+    ttft_p99_ms: float
+    tpot_p99_ms: float
+    slo_ok: bool
+    extrapolated: bool          # lam/R outside the measured span
+    dense: bool                 # fitted from a lambda-continuum store
+    feasible: bool
+    why_infeasible: str = ""
+
+    @property
+    def label(self) -> str:
+        tag = f"{self.model}/{self.hw}/{self.quant} x{self.n_chips}"
+        return tag if self.replicas == 1 else f"{tag} R={self.replicas}"
+
+
+@dataclasses.dataclass(frozen=True)
+class MixAllocation:
+    hw: str
+    quant: str
+    n_chips: int
+    lam: float                  # slice of the offered load on this replica
+    c_eff: float
+    util: float
+    price_per_hr: float
+    extrapolated: bool
+
+
+@dataclasses.dataclass(frozen=True)
+class HeterogeneousMix:
+    """A Mélange-style multi-generation fleet serving one model."""
+    model: str
+    lam: float
+    allocations: Tuple[MixAllocation, ...]
+    c_eff: float                # blended $/M output tokens
+    fleet_price_per_hr: float
+    slo_ok: bool
+
+    @property
+    def label(self) -> str:
+        groups: List[List[MixAllocation]] = []
+        for a in self.allocations:
+            tag = (a.hw, a.quant, a.n_chips, f"{a.lam:.3g}")
+            if groups and groups[-1][0] == tag:
+                groups[-1][1].append(a)
+            else:
+                groups.append([tag, [a]])
+        return " + ".join(
+            f"{len(allocs)}x {hw}/{quant} x{chips}@{lam}rps"
+            if len(allocs) > 1 else f"{hw}/{quant} x{chips}@{lam}rps"
+            for (hw, quant, chips, lam), allocs in groups)
+
+
+@dataclasses.dataclass
+class CapacityPlan:
+    """The planner's answer for one model at one offered rate."""
+    model: str
+    lam: float
+    io_shape: str
+    slo: Optional[SLOTarget]
+    ranked: List[DeploymentOption]      # feasible, cheapest first
+    rejected: List[DeploymentOption]    # priced-but-refused, with reasons
+    mix: Optional[HeterogeneousMix]
+    crossover: List[dict]               # per-API-tier verdict (best curve)
+
+    @property
+    def best(self) -> Optional[DeploymentOption]:
+        return self.ranked[0] if self.ranked else None
+
+    @property
+    def feasible(self) -> bool:
+        return bool(self.ranked)
+
+
+def _option(curve: DeploymentCurve, lam: float, replicas: int,
+            slo: Optional[SLOTarget]) -> DeploymentOption:
+    lam_per = lam / replicas
+    op = curve.operating_point(lam_per)
+    # the fleet's $/M-token equals one replica's C_eff at lambda/R:
+    # R x price over R x tps(lambda/R) cancels
+    cost = op["c_eff"]
+    util = op["util"]
+    beyond = lam_per > curve.lam_max
+    priceable = math.isfinite(cost)
+    slo_ok = slo.ok(op) if slo is not None else True
+    feasible = not beyond and priceable and slo_ok
+    why = ""
+    if beyond:
+        why = (f"lambda/R = {lam_per:g} beyond the measured range "
+               f"(<= {curve.lam_max:g} rps demonstrated)")
+    elif not priceable:
+        why = "no finite-cost operating point measured on this curve"
+    elif not slo_ok:
+        why = f"violates SLO ({slo.describe()})"
+    return DeploymentOption(
+        model=curve.model, hw=curve.hw, quant=curve.quant,
+        n_chips=curve.n_chips, replicas=replicas, lam=lam,
+        lam_per_replica=lam_per, c_eff=cost,
+        fleet_price_per_hr=replicas * curve.price_per_hr,
+        util=util, penalty=penalty_from_util(util),
+        mean_inflight=op["mean_inflight"],
+        ttft_p90_ms=op["ttft_p90_ms"], ttft_p99_ms=op["ttft_p99_ms"],
+        tpot_p99_ms=op["tpot_p99_ms"],
+        slo_ok=slo_ok, extrapolated=curve.extrapolated(lam_per),
+        dense=curve.dense, feasible=feasible, why_infeasible=why)
+
+
+def enumerate_options(curves: Sequence[DeploymentCurve], lam: float,
+                      slo: Optional[SLOTarget] = None,
+                      max_replicas: int = DEFAULT_MAX_REPLICAS
+                      ) -> List[DeploymentOption]:
+    """Every (footprint, R) candidate for one model at offered rate lam,
+    priced; feasibility and reasons attached, no ranking applied."""
+    out = []
+    for curve in curves:
+        for replicas in range(1, max_replicas + 1):
+            out.append(_option(curve, lam, replicas, slo))
+            if lam / replicas <= curve.lam_min:
+                # further splits only push deeper into the idle edge:
+                # same clamped metrics, strictly more hardware
+                break
+    return out
+
+
+def rank_options(options: Sequence[DeploymentOption]
+                 ) -> Tuple[List[DeploymentOption], List[DeploymentOption]]:
+    """(feasible cheapest-first, rejected). Ties break toward fewer
+    replicas, then lower fleet price, then the stable label order."""
+    feasible = sorted(
+        (o for o in options if o.feasible),
+        key=lambda o: (o.c_eff, o.replicas, o.fleet_price_per_hr, o.label))
+    rejected = [o for o in options if not o.feasible]
+    return feasible, rejected
+
+
+def _slo_ok_at(curve: DeploymentCurve, slo: SLOTarget, lam: float) -> bool:
+    """SLO check interpolating only the constrained metrics (the bisection
+    hot path probes this ~60x per curve)."""
+    return slo.ok({name: curve.interp(name, lam)
+                   for name, _ in slo.bounds()})
+
+
+def slo_feasible_cap(curve: DeploymentCurve,
+                     slo: Optional[SLOTarget]) -> float:
+    """The highest offered rate one replica of `curve` demonstrably serves
+    within the SLO: lam_max when unconstrained, else a log-space bisection
+    over the fitted operating points; 0.0 when even the idle edge violates
+    the target (this footprint cannot serve this SLA at any load)."""
+    if slo is None or _slo_ok_at(curve, slo, curve.lam_max):
+        return curve.lam_max
+    if not _slo_ok_at(curve, slo, curve.lam_min):
+        return 0.0
+    lo, hi = math.log(curve.lam_min), math.log(curve.lam_max)
+    for _ in range(_CAP_ITERS):
+        mid = (lo + hi) / 2
+        if _slo_ok_at(curve, slo, math.exp(mid)):
+            lo = mid
+        else:
+            hi = mid
+    return math.exp(lo)
+
+
+def greedy_mix(curves: Sequence[DeploymentCurve], lam: float,
+               slo: Optional[SLOTarget] = None,
+               max_allocations: int = 16) -> Optional[HeterogeneousMix]:
+    """Mélange-style greedy heterogeneous allocation for one model.
+
+    Repeatedly assign the remaining load's largest SLO-feasible slice to
+    a fresh replica of whichever footprint serves *that slice* at the
+    lowest $/M-token. With a full load remaining that picks the cheapest
+    saturated part (the bulk carrier); for the tail remainder it picks
+    whichever part prices the scraps cheapest — heterogeneity emerges
+    exactly when the tail is cheaper on a smaller generation. Returns
+    None when no footprint can take any load within the SLO, or when the
+    load cannot be exhausted within `max_allocations` replicas.
+    """
+    caps = {c.key: slo_feasible_cap(c, slo) for c in curves}
+    usable = [c for c in curves if caps[c.key] > 0]
+    if not usable:
+        return None
+    assigned: List[Tuple[DeploymentCurve, float]] = []
+    remaining = lam
+    for _ in range(max_allocations):
+        if remaining <= 0:
+            break
+        best_curve, best_serve, best_cost = None, 0.0, math.inf
+        for c in usable:
+            serve = min(remaining, caps[c.key])
+            cost = c.c_eff(serve)
+            if cost < best_cost:
+                best_curve, best_serve, best_cost = c, serve, cost
+        if best_curve is None:
+            return None                 # nothing prices finitely
+        assigned.append((best_curve, best_serve))
+        remaining -= best_serve
+    if remaining > 1e-9 * lam:
+        return None                     # could not exhaust the load
+    allocations = tuple(MixAllocation(
+        hw=c.hw, quant=c.quant, n_chips=c.n_chips, lam=serve,
+        c_eff=c.c_eff(serve), util=c.util(serve),
+        price_per_hr=c.price_per_hr, extrapolated=c.extrapolated(serve))
+        for c, serve in assigned)
+    total_price = sum(c.price_per_hr for c, _ in assigned)
+    total_tps = sum(c.tps(serve) for c, serve in assigned)
+    blended = math.inf if total_tps <= 0 else \
+        total_price * 1e6 / (3600.0 * total_tps)
+    return HeterogeneousMix(
+        model=curves[0].model, lam=lam, allocations=allocations,
+        c_eff=blended, fleet_price_per_hr=total_price, slo_ok=True)
+
+
+def _finite_or_inf(v: float) -> float:
+    return v if math.isfinite(v) else math.inf
+
+
+def plan_capacity(curves: Sequence[DeploymentCurve], lam: float,
+                  slo: Optional[SLOTarget] = None,
+                  max_replicas: int = DEFAULT_MAX_REPLICAS
+                  ) -> List[CapacityPlan]:
+    """One CapacityPlan per (model, io_shape) present in `curves`, in
+    that order — operating points measured under different workload
+    shapes never compete inside one ranking."""
+    by_group: Dict[Tuple[str, str], List[DeploymentCurve]] = {}
+    for c in curves:
+        by_group.setdefault((c.model, c.io_shape), []).append(c)
+    plans = []
+    for (model, io_shape), group in sorted(by_group.items()):
+        options = enumerate_options(group, lam, slo,
+                                    max_replicas=max_replicas)
+        ranked, rejected = rank_options(options)
+        mix = greedy_mix(group, lam, slo) if len(group) > 1 else None
+        # the API verdict belongs to the curve the operator would deploy
+        if ranked:
+            key = (model, ranked[0].hw, ranked[0].quant,
+                   ranked[0].n_chips, io_shape)
+            best_curve = next(c for c in group if c.key == key)
+        else:
+            best_curve = min(
+                group, key=lambda c: _finite_or_inf(c.c_eff(c.lam_max)))
+        crossover = crossover_table(best_curve.records,
+                                    accept_slo_mismatch=True)
+        plans.append(CapacityPlan(
+            model=model, lam=lam, io_shape=io_shape, slo=slo,
+            ranked=ranked, rejected=rejected, mix=mix,
+            crossover=crossover))
+    return plans

@@ -1,0 +1,176 @@
+"""Serializable planner artifacts + the text rendering the CLI prints.
+
+`planner_tables(records)` is a pure function of consolidated store
+records (same discipline as `analyze.crosshw_tables`, which embeds it in
+`analysis.json`): the fitted per-(model, hw, quant, n_chips) curves — the
+per-hardware penalty/cost knots a figure would plot — plus the planner's
+recommendation at the paper's reference loads. Non-finite floats are
+serialized as None so the artifact stays strict-JSON round-trippable.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Optional, Sequence
+
+from repro.core.records import RunRecord
+from repro.core.slo import SLOTarget
+from repro.planner.curves import DeploymentCurve, fit_curves
+from repro.planner.optimize import (DEFAULT_MAX_REPLICAS, CapacityPlan,
+                                    plan_capacity)
+
+# the paper's idle / knee-region / saturation reference loads (§5)
+REFERENCE_LAMS = (1.0, 10.0, 200.0)
+
+
+def _clean(obj):
+    """Recursively replace non-finite floats with None (strict JSON)."""
+    if isinstance(obj, float):
+        return obj if math.isfinite(obj) else None
+    if isinstance(obj, dict):
+        return {k: _clean(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_clean(v) for v in obj]
+    return obj
+
+
+def curve_rows(curves: Sequence[DeploymentCurve]) -> List[dict]:
+    """The fitted curves as plottable knot tables (per-hw figure input)."""
+    rows = []
+    for c in curves:
+        rows.append(_clean({
+            "model": c.model, "hw": c.hw, "quant": c.quant,
+            "n_chips": c.n_chips, "io_shape": c.io_shape,
+            "price_per_hr": c.price_per_hr, "theta_max": c.theta_max,
+            "dense": c.dense, "monotone_c_eff": c.monotone_c_eff,
+            "lam_min": c.lam_min, "lam_max": c.lam_max,
+            "lams": [r.lam for r in c.records],
+            "c_eff": [r.c_eff for r in c.records],
+            "util": [r.util for r in c.records],
+            "ttft_p90_ms": [r.ttft_p90_ms for r in c.records],
+            "tpot_p99_ms": [r.tpot_p99_ms for r in c.records],
+        }))
+    return rows
+
+
+def plan_row(plan: CapacityPlan) -> dict:
+    best = plan.best
+    return _clean({
+        "model": plan.model, "lam": plan.lam, "io_shape": plan.io_shape,
+        "slo": plan.slo.describe() if plan.slo else None,
+        "feasible": plan.feasible,
+        "n_feasible": len(plan.ranked),
+        "n_rejected": len(plan.rejected),
+        "best": dataclasses.asdict(best) if best else None,
+        "ranked": [dataclasses.asdict(o) for o in plan.ranked],
+        "mix": dataclasses.asdict(plan.mix) if plan.mix else None,
+        "crossover": plan.crossover,
+    })
+
+
+def planner_tables(records: Sequence[RunRecord],
+                   lams: Sequence[float] = REFERENCE_LAMS,
+                   slo: Optional[SLOTarget] = None,
+                   max_replicas: int = DEFAULT_MAX_REPLICAS) -> dict:
+    """The planner payload `analyze.crosshw_tables` embeds in
+    analysis.json: fitted curves + recommendations at reference loads."""
+    curves = fit_curves(records)
+    recommendations = []
+    for lam in lams:
+        for plan in plan_capacity(curves, lam, slo,
+                                  max_replicas=max_replicas):
+            recommendations.append(plan_row(plan))
+    return {
+        "reference_lams": list(lams),
+        "curves": curve_rows(curves),
+        "recommendations": recommendations,
+    }
+
+
+# ---------------------------------------------------------------------------
+# text rendering (CLI + example)
+# ---------------------------------------------------------------------------
+
+
+def _ms(v: float) -> str:
+    return "-" if not math.isfinite(v) else f"{v:.0f}ms"
+
+
+def _flags(o) -> str:
+    out = []
+    if o.extrapolated:
+        out.append("extrapolated")
+    if not o.dense:
+        out.append("sparse-ladder")
+    return ",".join(out)
+
+
+def render_plan(plan: CapacityPlan, top: int = 6) -> str:
+    lines = [f"-- {plan.model} @ lambda={plan.lam:g} rps "
+             f"({plan.io_shape}) --"]
+    if not plan.feasible:
+        lines.append("  INFEASIBLE: no measured deployment serves this "
+                     "load" + (f" within the SLO ({plan.slo.describe()})"
+                               if plan.slo else ""))
+        reasons = sorted({o.why_infeasible for o in plan.rejected})
+        for why in reasons[:4]:
+            lines.append(f"    - {why}")
+    else:
+        lines.append(
+            f"  {'rank':<4} {'deployment':<34} {'R':>2} {'lam/R':>7} "
+            f"{'util':>5} {'pen':>6} {'$/hr':>7} {'$/M-tok':>8} "
+            f"{'TTFT p90':>9}  flags")
+        for i, o in enumerate(plan.ranked[:top], 1):
+            dep = f"{o.hw}/{o.quant} x{o.n_chips}"
+            lines.append(
+                f"  {i:<4} {dep:<34} {o.replicas:>2} "
+                f"{o.lam_per_replica:>7.3g} {o.util:>5.2f} "
+                f"{o.penalty:>5.1f}x {o.fleet_price_per_hr:>7.2f} "
+                f"{o.c_eff:>8.3f} {_ms(o.ttft_p90_ms):>9}  {_flags(o)}")
+        if len(plan.ranked) > top:
+            lines.append(f"  ... {len(plan.ranked) - top} more feasible "
+                         f"option(s)")
+        if plan.rejected:
+            lines.append(f"  rejected {len(plan.rejected)} option(s): "
+                         + "; ".join(sorted(
+                             {o.why_infeasible for o in plan.rejected}))[:160])
+    if plan.mix is not None and len(plan.mix.allocations) > 1:
+        best = plan.best
+        verdict = ("beats the best homogeneous fleet"
+                   if best and plan.mix.c_eff < best.c_eff else
+                   "no cheaper than the best homogeneous fleet")
+        lines.append(f"  mix ({verdict}): {plan.mix.label} -> "
+                     f"${plan.mix.c_eff:.3f}/M-tok at "
+                     f"${plan.mix.fleet_price_per_hr:.2f}/hr")
+    lines.append("  vs API tiers (list price, no SLA — §6.4 gate "
+                 "acknowledged):")
+    best = plan.best
+    for tier in plan.crossover:
+        lam_star = tier["lambda_star"]
+        if best is not None:
+            cheaper = best.c_eff <= tier["api_output_per_mtok"]
+            now = "self-host CHEAPER" if cheaper else "API cheaper"
+        else:
+            now = "no feasible self-host point"
+        if tier["self_host_always_cheaper"]:
+            star = "always cheaper on the measured curve"
+        elif math.isinf(lam_star):
+            star = "never crosses on the measured curve"
+        else:
+            star = f"crossover at lam*={lam_star:.2f} rps"
+        lines.append(f"    {tier['tier']:<18} "
+                     f"(${tier['api_output_per_mtok']:>5.2f}/M-tok): "
+                     f"{now} at lam={plan.lam:g}; {star}")
+    return "\n".join(lines)
+
+
+def render_plans(plans: Sequence[CapacityPlan], title: str = "") -> str:
+    lines = []
+    if title:
+        lines.append(f"=== capacity plan: {title} ===")
+    if plans and plans[0].slo is not None:
+        lines.append(f"SLO target: {plans[0].slo.describe()}")
+    for plan in plans:
+        lines.append("")
+        lines.append(render_plan(plan))
+    return "\n".join(lines)

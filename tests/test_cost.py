@@ -9,9 +9,9 @@ try:
 except ImportError:                                       # pragma: no cover
     HAVE_HYP = False
 
-from repro.core import (c_eff, c_naive, underutilization_penalty,
-                        utilization, interp_c_eff, crossover_lambda,
-                        crossover_table)
+from repro.core import (aggregate_points, c_eff, c_naive, crossover_lambda,
+                        crossover_table, interp_c_eff, interp_loglog,
+                        underutilization_penalty, utilization)
 from repro.core.pricing import API_TIERS, APITier
 from repro.core.records import RunRecord
 
@@ -89,6 +89,77 @@ def test_crossover_monotone_curve():
     assert 1 < lam < 2 and not extrap
     # never crosses an impossibly cheap tier
     assert crossover_lambda(recs, 1e-9) is None
+
+
+def test_interp_flat_segment_is_exact():
+    """ISSUE 5 regression: an exactly-5.0 curve must interpolate to 5.0,
+    not exp(log(5.0)) = 4.999999999999999."""
+    recs = [_rec(1, 100, c_eff=5.0), _rec(10, 100, c_eff=5.0),
+            _rec(100, 100, c_eff=5.0)]
+    for lam in (1.0, 3.0, 10.0, 31.6, 100.0):
+        assert interp_c_eff(recs, lam) == 5.0
+    # knot hits return the knot value exactly even on sloped curves
+    recs = [_rec(1, 100, c_eff=7.3), _rec(10, 1000, c_eff=0.73)]
+    assert interp_c_eff(recs, 1.0) == 7.3
+    assert interp_c_eff(recs, 10.0) == 0.73
+
+
+def test_duplicate_lambda_records_aggregate():
+    """ISSUE 5 regression: merged/overlapping stores carry duplicate-lambda
+    records; the verdict must key off the aggregate, not whichever
+    duplicate sorts first, and equal-lambda pairs must not divide by
+    zero-width log segments."""
+    # identical duplicates collapse exactly (no log/exp round-trip)
+    recs = [_rec(1, 100, c_eff=8.0), _rec(1, 100, c_eff=8.0),
+            _rec(10, 1000, c_eff=0.5)]
+    assert interp_c_eff(recs, 1.0) == 8.0
+    assert interp_c_eff(recs, 5.0) == interp_c_eff(
+        [_rec(1, 100, c_eff=8.0), _rec(10, 1000, c_eff=0.5)], 5.0)
+
+    # disagreeing duplicates aggregate by geometric mean
+    (x, y), = aggregate_points([(1.0, 4.0), (1.0, 16.0)])
+    assert x == 1.0 and y == pytest.approx(8.0, rel=1e-12)
+
+    # pre-fix failure 1: sorted (lam, c_eff) tuples keyed "always cheaper"
+    # off the *lower* duplicate; the aggregate (gm(4, 16) = 8 > 5) says no
+    dup = [_rec(1, 100, c_eff=4.0), _rec(1, 100, c_eff=16.0),
+           _rec(10, 1000, c_eff=0.5)]
+    res = crossover_lambda(dup, 5.0)
+    assert res is not None
+    lam, extrap = res
+    assert not extrap and 1.0 < lam < 10.0
+
+    # pre-fix failure 2: an equal-lambda pair straddling the tier price
+    # made interp hit a zero-width log segment (ZeroDivisionError)
+    straddle = [_rec(1, 100, c_eff=9.0), _rec(1, 100, c_eff=2.0),
+                _rec(10, 1000, c_eff=0.1)]
+    assert interp_c_eff(straddle, 1.0) == pytest.approx(
+        math.sqrt(9.0 * 2.0), rel=1e-12)
+    res = crossover_lambda(straddle, 1.0)
+    assert res is not None and not res[1]
+
+
+def test_interp_loglog_empty_and_single():
+    assert math.isnan(interp_loglog([], 5.0))
+    assert interp_loglog([(2.0, 3.0)], 1.0) == 3.0
+    assert interp_loglog([(2.0, 3.0)], 9.0) == 3.0
+
+
+def test_disagreeing_duplicates_with_unloggable_values():
+    """Aggregation must not take logs of non-positive or infinite
+    duplicate values: a clamped edge query used to crash with a math
+    domain error the moment such a pair existed anywhere on the curve."""
+    assert interp_loglog([(1.0, 0.0), (1.0, 5.0), (10.0, 2.0)], 0.5) == 0.0
+    (_, y), _ = aggregate_points([(1.0, 0.0), (1.0, 5.0), (10.0, 2.0)])
+    assert y == 0.0                     # propagate the floor, no log
+    (_, y), = aggregate_points([(1.0, math.inf), (1.0, 2.0)])
+    assert y == math.inf                # no exp-overflow either
+    # interior queries across a segment with an unloggable endpoint clamp
+    # to the nearer knot instead of raising math-domain errors
+    pts = [(1.0, 0.0), (1.0, 5.0), (10.0, 2.0)]
+    assert interp_loglog(pts, 1.5) == 0.0       # nearer the zero knot
+    assert interp_loglog(pts, 9.0) == 2.0       # nearer the finite knot
+    assert interp_loglog([(1.0, math.inf), (10.0, 2.0)], 9.0) == 2.0
 
 
 def test_crossover_table_gated():

@@ -237,6 +237,101 @@ def test_store_survives_torn_cell_file(tmp_path):
     assert len(records) == 4
 
 
+def test_resume_survives_schema_drifted_cell_files(tmp_path):
+    """ISSUE 5 regression: a cell file whose JSON parses but whose
+    `record` payload is missing or schema-drifted (written by an older
+    RunRecord) crashed --resume with TypeError/KeyError. Such files are
+    stale: skipped, re-run, and the consolidated artifacts must come out
+    byte-identical to an undamaged run."""
+    plan = _mini_spec().expand()
+    store = ExperimentStore(plan.name, tmp_path)
+    PlanRunner(plan, store=store).run(parallel=False)
+    want_csv = store.csv_path.read_bytes()
+    want_manifest = store.manifest_path.read_bytes()
+
+    # hand-corrupt two cells, keeping their fingerprints valid: one loses
+    # the record payload entirely, one drifts to an older schema (fields
+    # missing + an unknown one present)
+    missing = json.loads(store.cell_path(plan.cells[0]).read_text())
+    del missing["record"]
+    store.cell_path(plan.cells[0]).write_text(json.dumps(missing))
+
+    drifted = json.loads(store.cell_path(plan.cells[1]).read_text())
+    del drifted["record"]["c_eff"]
+    del drifted["record"]["tps"]
+    drifted["record"]["legacy_field"] = 1.0
+    store.cell_path(plan.cells[1]).write_text(json.dumps(drifted))
+
+    assert store.completed_ids(plan) == {c.cell_id for c in plan.cells[2:]}
+
+    ran = []
+    PlanRunner(plan, store=store).run(
+        parallel=False, progress=lambda c, r, i, n: ran.append(c.cell_id))
+    assert sorted(ran) == sorted(c.cell_id for c in plan.cells[:2])
+    assert store.csv_path.read_bytes() == want_csv
+    assert store.manifest_path.read_bytes() == want_manifest
+
+
+def test_non_dict_record_payload_is_stale(tmp_path):
+    plan = _mini_spec().expand()
+    store = ExperimentStore(plan.name, tmp_path)
+    PlanRunner(plan, store=store).run(parallel=False)
+    blob = json.loads(store.cell_path(plan.cells[0]).read_text())
+    blob["record"] = [1, 2, 3]
+    store.cell_path(plan.cells[0]).write_text(json.dumps(blob))
+    assert plan.cells[0].cell_id not in store.completed_ids(plan)
+
+
+def test_prune_removes_orphaned_cell_files(tmp_path):
+    """ISSUE 5: a plan edit renames cell ids; the superseded files used to
+    accumulate forever and even survive --fresh. prune removes exactly the
+    files no current cell claims (or claims with a stale fingerprint)."""
+    plan = _mini_spec().expand()
+    store = ExperimentStore(plan.name, tmp_path)
+    PlanRunner(plan, store=store).run(parallel=False)
+    want_csv = store.csv_path.read_bytes()
+
+    # a plan edit that renames half the cell ids (50 -> 60 on the ladder;
+    # the lam=5 cells are untouched, so their files are shared)
+    edited = _mini_spec(ladder=(5, 60)).expand()
+    PlanRunner(edited, store=store).run(parallel=False)
+    assert len(list(store.dir.glob("cell_*.json"))) == 6   # 4 old + 2 new
+
+    removed = store.prune(edited)
+    assert len(removed) == 2            # one orphaned lam=50 file per arch
+    survivors = {p.name for p in store.dir.glob("cell_*.json")}
+    assert survivors == {store.cell_path(c).name for c in edited.cells}
+    # the current plan's cells are all still resumable after the prune
+    assert store.completed_ids(edited) == {c.cell_id for c in edited.cells}
+
+    # pruning against the original plan removes the edited-only files and
+    # keeps the shared lam=5 cells; a torn orphan goes too
+    (store.dir / "cell_bogus.json").write_text('{"fingerprint": tor')
+    removed = store.prune(plan)
+    assert {p.name for p in removed} == \
+        {store.cell_path(c).name for c in edited.cells if c.lam == 60} | \
+        {"cell_bogus.json"}
+    # consolidation over the survivors re-runs nothing it shouldn't
+    ran = []
+    PlanRunner(plan, store=store).run(
+        parallel=False, progress=lambda c, r, i, n: ran.append(c.cell_id))
+    assert sorted(ran) == sorted(c.cell_id for c in plan.cells
+                                 if c.lam == 50)
+    assert store.csv_path.read_bytes() == want_csv
+
+
+def test_prune_keeps_stale_fingerprint_files_only_if_current(tmp_path):
+    """A cell file whose name matches a current cell but whose fingerprint
+    is stale is superseded — prune removes it (the cell re-runs anyway)."""
+    plan = _mini_spec().expand()
+    store = ExperimentStore(plan.name, tmp_path)
+    PlanRunner(plan, store=store).run(parallel=False)
+    reseeded = _mini_spec(seed=99).expand()     # same ids, new fingerprints
+    removed = store.prune(reseeded)
+    assert len(removed) == len(plan.cells)
+    assert list(store.dir.glob("cell_*.json")) == []
+
+
 def test_backfill_theta_partial_groups():
     plan = _mini_spec().expand()
     recs = PlanRunner(plan).run(parallel=False)

@@ -1,0 +1,353 @@
+"""Capacity planner (ISSUE 5 tentpole): fitted deployment curves,
+replica/mix optimization, SLO rejection — unit tests on synthetic
+curves plus golden tests pinned to the committed `paper_atlas` /
+`paper_crosshw` stores (no engines run)."""
+import json
+import math
+
+import pytest
+
+from repro.core import c_eff as _c_eff
+from repro.core.crossover import interp_c_eff
+from repro.core.records import RunRecord
+from repro.core.slo import SLOTarget
+from repro.experiments.analyze import crossover_summary, load_store_records
+from repro.planner import (DeploymentCurve, enumerate_options, fit_curves,
+                           greedy_mix, plan_capacity, planner_tables,
+                           rank_options, render_plans, slo_feasible_cap)
+
+
+def _rec(lam, tps, price=1.2, theta_max=1000.0, ttft_p90=100.0, **kw):
+    base = dict(config="t", model="m", hw="hw-a", n_chips=1, quant="bf16",
+                engine="sim", io_shape="chat", n_requests=10, n_completed=10,
+                window_s=10.0, prompt_tps=0.0, ttft_p50_ms=ttft_p90 / 2,
+                ttft_p90_ms=ttft_p90, ttft_p99_ms=ttft_p90 * 2,
+                tpot_p50_ms=10.0, tpot_p99_ms=20.0, e2e_p50_ms=1000.0,
+                e2e_p99_ms=2000.0, mean_inflight=lam, price_per_hr=price,
+                c_eff=_c_eff(price, tps), theta_max=theta_max)
+    base.update(kw)
+    return RunRecord(lam=lam, tps=tps, **base)
+
+
+def _ladder(hw="hw-a", price=1.2, theta=1000.0, lams=(1, 5, 10, 50, 100),
+            halfsat=10.0, **kw):
+    """A monotone synthetic ladder: tps saturating in lam (half throughput
+    at lam=halfsat), TTFT rising with lam."""
+    out = []
+    for lam in lams:
+        tps = theta * lam / (lam + halfsat)
+        out.append(_rec(lam, tps, price=price, theta_max=theta, hw=hw,
+                        ttft_p90=20.0 * (1 + lam), **kw))
+    return out
+
+
+# ---- curve fitting ----------------------------------------------------
+
+
+def test_fit_curves_groups_and_flags():
+    recs = _ladder() + _ladder(hw="hw-b", price=0.6, theta=400.0)
+    curves = fit_curves(recs)
+    assert [c.hw for c in curves] == ["hw-a", "hw-b"]
+    a = curves[0]
+    assert a.lam_min == 1 and a.lam_max == 100 and not a.dense
+    assert a.monotone_c_eff
+    assert a.extrapolated(0.5) and a.extrapolated(101) \
+        and not a.extrapolated(50)
+    # knot hits are exact (the hardened primitive), including C_eff
+    for r in recs[:5]:
+        assert a.c_eff(r.lam) == r.c_eff
+        assert a.util(r.lam) == r.util
+    # between knots the curve is the store interpolation, bit for bit
+    for lam in (2.3, 7.7, 60.0):
+        assert a.c_eff(lam) == interp_c_eff(recs[:5], lam)
+
+
+def test_fit_curves_filters_by_model_and_io_shape():
+    recs = _ladder() + _ladder(model="m2") + _ladder(io_shape="rag")
+    assert len(fit_curves(recs)) == 3
+    assert len(fit_curves(recs, model="m2")) == 1
+    only = fit_curves(recs, io_shape="chat", model="m")
+    assert len(only) == 1 and only[0].io_shape == "chat"
+
+
+def test_nonfinite_knots_dropped():
+    recs = _ladder()
+    recs[0] = _rec(1, 0.0, theta_max=1000.0)        # tps=0 -> c_eff=inf
+    curve = fit_curves(recs)[0]
+    assert len(curve.knots["c_eff"]) == 4           # inf knot dropped
+    assert math.isfinite(curve.c_eff(1.0))
+
+
+# ---- optimization invariants -----------------------------------------
+
+
+def test_collapsed_top_knot_caps_demonstrated_span():
+    """A ladder whose top cell collapsed (c_eff = inf) has demonstrated
+    nothing at that load: the dropped knot must cap lam_max, so the load
+    is rejected as beyond-range instead of silently priced at the
+    clamped last-finite knot."""
+    recs = _ladder()
+    recs[-1] = _rec(100, 0.0, theta_max=1000.0)      # collapse at lam=100
+    curve = fit_curves(recs)[0]
+    assert curve.lam_max == 50 and curve.extrapolated(100)
+    # the dropped inf knot must not flip the monotonicity flag either
+    assert curve.monotone_c_eff
+    ranked, rejected = rank_options(
+        enumerate_options([curve], 100.0, max_replicas=1))
+    assert ranked == []
+    assert "beyond the measured range" in rejected[0].why_infeasible
+    # the SLO cap inherits the tightened ceiling too
+    assert slo_feasible_cap(curve, None) == 50
+
+
+def test_replica_split_never_cheaper_on_monotone_curve():
+    """R replicas at lambda cost one replica's C_eff at lambda/R, which a
+    concave-down (monotone-decreasing C_eff) curve prices >= the single
+    replica at lambda — splits buy latency headroom, not cheaper tokens."""
+    curves = fit_curves(_ladder())
+    options = enumerate_options(curves, 50.0, max_replicas=8)
+    ranked, _ = rank_options(options)
+    single = next(o for o in ranked if o.replicas == 1)
+    assert ranked[0] == single
+    for o in ranked:
+        if o.replicas > 1:
+            assert o.c_eff >= single.c_eff
+            assert o.fleet_price_per_hr > single.fleet_price_per_hr
+            # Little's law: per-replica concurrency falls with the split
+            assert o.mean_inflight <= single.mean_inflight
+
+
+def test_beyond_measured_range_rejected_not_priced():
+    curves = fit_curves(_ladder())                   # measured to lam=100
+    options = enumerate_options(curves, 900.0, max_replicas=4)
+    ranked, rejected = rank_options(options)
+    assert ranked == []                             # 900/4 = 225 > 100
+    assert all("beyond the measured range" in o.why_infeasible
+               for o in rejected)
+    # ... but a split that brings lambda/R inside the range is feasible
+    ranked, _ = rank_options(
+        enumerate_options(curves, 900.0, max_replicas=16))
+    assert ranked and all(o.lam_per_replica <= 100 for o in ranked)
+
+
+def test_slo_infeasible_rejected_not_priced():
+    curves = fit_curves(_ladder())                   # TTFT p90 >= 40ms
+    slo = SLOTarget(ttft_p90_ms=1.0)                 # impossible
+    plans = plan_capacity(curves, 10.0, slo)
+    assert len(plans) == 1 and not plans[0].feasible
+    assert plans[0].best is None
+    assert all("violates SLO" in o.why_infeasible
+               for o in plans[0].rejected)
+    # a split CAN rescue a merely-tight SLO: TTFT falls with lambda/R
+    slo = SLOTarget(ttft_p90_ms=500.0)               # needs lam/R <= 24
+    ranked, _ = rank_options(
+        enumerate_options(curves, 100.0, slo, max_replicas=8))
+    assert ranked and all(o.replicas >= 5 for o in ranked)
+    assert all(o.ttft_p90_ms <= 500.0 for o in ranked)
+
+
+def test_dead_footprint_rejected_not_ranked():
+    """A footprint whose every cell priced to inf (nothing completed) has
+    no finite-cost knots; it must be rejected with a reason — never
+    ranked as a nan-cost 'best' just because its group key sorts first."""
+    dead = [_rec(lam, 0.0, hw="hw-0dead", theta_max=1000.0)
+            for lam in (1, 5, 10, 50, 100)]
+    curves = fit_curves(_ladder() + dead)
+    assert curves[0].hw == "hw-0dead"               # sorts before hw-a
+    ranked, rejected = rank_options(enumerate_options(curves, 10.0))
+    assert ranked and all(o.hw == "hw-a" for o in ranked)
+    assert any("no finite-cost" in o.why_infeasible for o in rejected)
+    plans = plan_capacity(curves, 10.0)
+    assert plans[0].best.hw == "hw-a"
+
+
+def test_io_shapes_never_compete_in_one_ranking():
+    recs = _ladder() + _ladder(io_shape="rag", hw="hw-b")
+    plans = plan_capacity(fit_curves(recs), 10.0)
+    assert [(p.model, p.io_shape) for p in plans] == \
+        [("m", "chat"), ("m", "rag")]
+    assert all(o.hw == "hw-a" for o in plans[0].ranked)
+    assert all(o.hw == "hw-b" for o in plans[1].ranked)
+
+
+def test_slo_feasible_cap_bisection():
+    curve = fit_curves(_ladder())[0]                 # TTFT = 20*(1+lam)
+    assert slo_feasible_cap(curve, None) == curve.lam_max
+    cap = slo_feasible_cap(curve, SLOTarget(ttft_p90_ms=500.0))
+    assert curve.interp("ttft_p90_ms", cap) == pytest.approx(500.0, rel=1e-6)
+    assert slo_feasible_cap(curve, SLOTarget(ttft_p90_ms=1.0)) == 0.0
+
+
+def test_greedy_mix_prefers_bulk_carrier_plus_cheap_tail():
+    """Mélange shape: the premium part is cheaper per token at its cap, the
+    small part prices the remainder cheaper than a second premium replica
+    would at low utilization."""
+    # premium needs concurrency to shine (half throughput at lam=40);
+    # the small part saturates fast (half throughput at lam=2)
+    premium = _ladder(hw="hw-big", price=4.0, theta=4000.0, halfsat=40.0,
+                      lams=(1, 5, 10, 50, 100))
+    small = _ladder(hw="hw-small", price=0.5, theta=300.0, halfsat=2.0,
+                    lams=(1, 5, 10, 50, 100))
+    curves = fit_curves(premium + small)
+    assert curves[0].c_eff(100) < curves[1].c_eff(100)   # big wins the bulk
+    assert curves[1].c_eff(10) < curves[0].c_eff(10)     # small wins the tail
+    mix = greedy_mix(curves, 110.0)
+    assert mix is not None
+    assert [a.hw for a in mix.allocations] == ["hw-big", "hw-small"]
+    assert mix.allocations[0].lam == 100.0          # bulk at the big cap
+    assert mix.allocations[1].lam == pytest.approx(10.0)
+    assert mix.fleet_price_per_hr == 4.5
+    # the blend must beat forcing the tail onto a second premium replica
+    two_big = 2 * 4.0 * 1e6 / (3600.0 * (curves[0].tps(100) +
+                                         curves[0].tps(10)))
+    assert mix.c_eff < two_big
+    # nothing can serve an SLO nothing meets
+    assert greedy_mix(curves, 110.0, SLOTarget(ttft_p90_ms=1.0)) is None
+
+
+def test_planner_tables_payload_is_strict_json():
+    recs = _ladder() + _ladder(hw="hw-b", price=0.6, theta=400.0)
+    recs[0] = _rec(1, 0.0, theta_max=1000.0)        # force an inf somewhere
+    payload = planner_tables(recs, lams=(1.0, 50.0, 1e9))
+    text = json.dumps(payload, allow_nan=False)     # raises on inf/nan
+    assert json.loads(text) == payload
+    by_lam = {}
+    for row in payload["recommendations"]:
+        by_lam.setdefault(row["lam"], []).append(row)
+    assert by_lam[1e9][0]["feasible"] is False      # rejected, not priced
+    assert by_lam[50.0][0]["feasible"] is True
+
+
+# ---- golden tests against the committed stores ------------------------
+
+
+def _atlas_records():
+    recs = load_store_records("paper_atlas")
+    if len(recs) < 450:
+        pytest.skip("paper_atlas store not populated")
+    return recs
+
+
+GOLDEN_ATLAS = {
+    # lam -> model -> (hw, quant, n_chips, replicas): idle loads land on
+    # cheap/premium per-token winners, saturation on the native-fp8 v6e
+    1.0: {"llama31-8b": ("tpu-v5e", "fp8", 2, 1),
+          "mixtral-8x7b": ("tpu-v5p", "fp8", 2, 1),
+          "qwen3-30b-a3b": ("tpu-v5p", "bf16", 1, 1)},
+    10.0: {"llama31-8b": ("tpu-v5e", "bf16", 2, 1),
+           "mixtral-8x7b": ("tpu-v5p", "fp8", 2, 1),
+           "qwen3-30b-a3b": ("tpu-v5p", "fp8", 1, 1)},
+    200.0: {"llama31-8b": ("tpu-v6e", "fp8", 1, 1),
+            "mixtral-8x7b": ("tpu-v6e", "fp8", 4, 1),
+            "qwen3-30b-a3b": ("tpu-v6e", "fp8", 2, 1)},
+}
+
+
+def test_golden_recommendations_on_committed_atlas():
+    curves = fit_curves(_atlas_records())
+    assert len(curves) == 18 and all(c.dense for c in curves)
+    for lam, by_model in GOLDEN_ATLAS.items():
+        plans = plan_capacity(curves, lam)
+        assert [p.model for p in plans] == sorted(by_model)
+        for plan in plans:
+            best = plan.best
+            assert (best.hw, best.quant, best.n_chips, best.replicas) == \
+                by_model[plan.model], (lam, plan.model)
+            assert best.feasible and not best.extrapolated
+
+
+def test_top_row_c_eff_matches_store_interpolation_exactly():
+    """Acceptance (ISSUE 5): the ranked table's top single-replica row
+    reprices the store's interpolated curve within 1e-9."""
+    recs = _atlas_records()
+    by_group = {}
+    for r in recs:
+        by_group.setdefault((r.model, r.hw, r.quant, r.n_chips), []).append(r)
+    for lam in (1.0, 5.0, 42.0, 200.0):
+        for plan in plan_capacity(fit_curves(recs), lam):
+            top = next(o for o in plan.ranked if o.replicas == 1)
+            want = interp_c_eff(
+                by_group[(plan.model, top.hw, top.quant, top.n_chips)], lam)
+            assert abs(top.c_eff - want) <= 1e-9
+
+
+def test_crossover_verdicts_agree_with_analyze():
+    """Acceptance (ISSUE 5): the planner's per-tier verdicts are the same
+    rows `analyze.crossover_summary` derives from the same store."""
+    recs = _atlas_records()
+    summary = {(r["model"], r["hw"], r["quant"]): r["tiers"]
+               for r in crossover_summary(recs)}
+    for plan in plan_capacity(fit_curves(recs), 5.0):
+        best = plan.best
+        assert plan.crossover == \
+            summary[(plan.model, best.hw, best.quant)]
+
+
+def test_replica_monotonicity_on_committed_atlas():
+    """R*C_eff-at-lambda/R economics: no replica split beats the best
+    single-replica option anywhere on the committed concave-down curves."""
+    curves = fit_curves(_atlas_records())
+    assert all(c.monotone_c_eff for c in curves)
+    for lam in (10.0, 80.0, 200.0):
+        for plan in plan_capacity(curves, lam):
+            best_single = min(o.c_eff for o in plan.ranked
+                              if o.replicas == 1)
+            for o in plan.ranked:
+                if o.replicas > 1:
+                    assert o.c_eff >= best_single - 1e-12
+
+
+def test_slo_bound_plan_on_committed_atlas():
+    """A tight-but-achievable TTFT target at saturation load forces
+    replica splits; an impossible one is rejected, never priced."""
+    curves = fit_curves(_atlas_records(),  model="llama31-8b")
+    plans = plan_capacity(curves, 200.0, SLOTarget(ttft_p90_ms=2000.0))
+    assert len(plans) == 1 and plans[0].feasible
+    assert all(o.ttft_p90_ms <= 2000.0 for o in plans[0].ranked)
+    assert all(o.replicas > 1 for o in plans[0].ranked)
+
+    plans = plan_capacity(curves, 200.0, SLOTarget(ttft_p90_ms=0.001))
+    assert not plans[0].feasible and plans[0].best is None
+    text = render_plans(plans, title="t")
+    assert "INFEASIBLE" in text and "violates SLO" in text
+
+
+def test_committed_crosshw_sparse_ladders_accepted_with_flags():
+    recs = load_store_records("paper_crosshw")
+    if len(recs) < 126:
+        pytest.skip("paper_crosshw store not populated")
+    curves = fit_curves(recs)
+    assert len(curves) == 18 and not any(c.dense for c in curves)
+    plans = plan_capacity(curves, 5.0)
+    assert all(p.feasible for p in plans)
+    assert all(not o.dense for p in plans for o in p.ranked)
+    # below the measured ladder the planner flags, not invents
+    plans = plan_capacity(curves, 0.25)
+    for p in plans:
+        assert p.best.extrapolated
+
+
+# ---- CLI --------------------------------------------------------------
+
+
+def test_cli_plan_and_json(tmp_path, capsys):
+    from repro.planner.__main__ import main
+    _atlas_records()
+    out_json = tmp_path / "plan.json"
+    main(["--plan", "paper_atlas", "--lam", "5", "--model", "llama31-8b",
+          "--json", str(out_json)])
+    text = capsys.readouterr().out
+    assert "capacity plan: paper_atlas" in text
+    assert "§6.4 gate acknowledged" in text
+    blob = json.loads(out_json.read_text())
+    assert len(blob) == 1 and blob[0]["model"] == "llama31-8b"
+    assert blob[0]["feasible"] and blob[0]["best"]["replicas"] == 1
+
+
+def test_cli_infeasible_exits_3(capsys):
+    from repro.planner.__main__ import main
+    _atlas_records()
+    with pytest.raises(SystemExit) as exc:
+        main(["--plan", "paper_atlas", "--lam", "99999"])
+    assert exc.value.code == 3
+    assert "INFEASIBLE" in capsys.readouterr().out
