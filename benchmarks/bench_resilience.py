@@ -1,0 +1,96 @@
+"""Resilience layer cost (ISSUE 6). Informational only, no CI gate.
+
+Three questions an operator (and the acceptance bar) cares about:
+
+* `off-overhead` — the zero-cost-when-off claim, measured: the same
+  engine run with no resilience arguments vs with *disabled*
+  FailureSpec/RetryPolicy objects threaded through. The wall-clock
+  ratio should be ~1.0 and the records bit-identical.
+* `chaos-throughput` — simulated-seconds-per-wall-second with the full
+  failure/retry/shed/deadline machinery active, vs the failure-free
+  run: what injecting chaos costs the *simulator* (the paper's cost
+  numbers come from sim throughput, so this bounds grid runtimes).
+* `reliability-analysis` — `reliability_tables` + availability-priced
+  `plan_capacity` over the committed `paper_resilience` store: the
+  interactive planning surface under an availability target.
+"""
+import dataclasses
+import time
+
+from benchmarks.common import emit
+from repro.core.sweep import SimEngineSpec, run_point
+from repro.experiments.analyze import (load_store_records,
+                                       reliability_tables)
+from repro.planner import AvailabilityTarget, fit_curves, plan_capacity
+from repro.serving import ArrivalSpec
+from repro.serving.resilience import FailureSpec, RetryPolicy
+
+
+def _timed(fn, n):
+    best, out = float("inf"), None
+    for _ in range(n):
+        t0 = time.perf_counter()
+        out = fn()
+        best = min(best, time.perf_counter() - t0)
+    return best, out
+
+
+def run(quick: bool = False):
+    n = 2 if quick else 4
+    n_req = 300 if quick else 1000
+    fac = SimEngineSpec("llama31-8b", max_batch=64, num_pages=16384)
+    guarded_fac = dataclasses.replace(fac, max_queue_depth=512,
+                                      deadline_s=30.0)
+    spec = ArrivalSpec(lam=25, n_requests=n_req, seed=0)
+    kw = dict(config="C1", model="llama31-8b", hw="tpu-v5e")
+
+    rows = []
+    t_off, rec_off = _timed(lambda: run_point(fac, spec, **kw), n)
+    t_guard, rec_guard = _timed(
+        lambda: run_point(fac, spec,
+                          failure_spec=FailureSpec(mttf=0.0, seed=1),
+                          retry=RetryPolicy(max_attempts=0, seed=2), **kw),
+        n)
+    assert dataclasses.asdict(rec_off) == dataclasses.asdict(rec_guard), \
+        "disabled resilience objects perturbed the record"
+    rows.append({"case": "off-overhead", "wall_s": t_guard,
+                 "baseline_s": t_off, "ratio": t_guard / t_off,
+                 "sim_s_per_wall_s": rec_off.window_s / t_off,
+                 "n_retried": 0, "c_eff": rec_off.c_eff})
+
+    t_chaos, rec_chaos = _timed(
+        lambda: run_point(
+            guarded_fac, spec,
+            failure_spec=FailureSpec(mttf=8.0, mttr=1.0, seed=3),
+            retry=RetryPolicy(max_attempts=3, base_delay_s=0.25, seed=4),
+            **kw),
+        n)
+    rows.append({"case": "chaos-throughput", "wall_s": t_chaos,
+                 "baseline_s": t_off, "ratio": t_chaos / t_off,
+                 "sim_s_per_wall_s": rec_chaos.window_s / t_chaos,
+                 "n_retried": rec_chaos.n_retried,
+                 "c_eff": rec_chaos.c_eff})
+
+    try:
+        records = load_store_records("paper_resilience")
+    except OSError:
+        records = []
+    if records:
+        t_tab, tab = _timed(lambda: reliability_tables(records), n)
+        avail = AvailabilityTarget(0.999, 0.99)
+        curves = fit_curves(records)
+        t_plan, _ = _timed(
+            lambda: [plan_capacity(curves, lam, avail=avail)
+                     for lam in (5.0, 30.0, 100.0)], n)
+        rows.append({"case": "reliability-analysis", "wall_s": t_tab,
+                     "baseline_s": t_plan, "ratio": len(tab),
+                     "sim_s_per_wall_s": float("nan"),
+                     "n_retried": sum(r["n_retried"] for r in tab),
+                     "c_eff": max(r["c_eff_inflation"] for r in tab)})
+    else:
+        print("# paper_resilience store absent; analysis section skipped")
+    emit("resilience", rows)
+
+
+if __name__ == "__main__":
+    run(quick=True)

@@ -12,8 +12,9 @@ sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
 from benchmarks import (bench_engine_throughput, bench_fig1_cost_curves,
                         bench_fig2_quant, bench_fig3_penalty_heatmap,
                         bench_fig5_crossover, bench_kernels,
-                        bench_plan_matrix, bench_planner, bench_sensitivity,
-                        bench_table3_penalty, bench_table4_sla,
+                        bench_plan_matrix, bench_planner, bench_resilience,
+                        bench_sensitivity, bench_table3_penalty,
+                        bench_table4_sla,
                         bench_table5_stability, bench_table6_crosshw,
                         bench_table7_live)
 
@@ -21,6 +22,7 @@ SUITES = (
     ("engine_throughput", bench_engine_throughput),
     ("plan_matrix", bench_plan_matrix),
     ("planner", bench_planner),
+    ("resilience", bench_resilience),
     ("fig1_cost_curves", bench_fig1_cost_curves),
     ("table3_penalty", bench_table3_penalty),
     ("fig2_quant", bench_fig2_quant),

@@ -35,6 +35,15 @@ class RunRecord:
     c_eff: float                # $/M output tokens
     theta_max: float = 0.0      # filled by sweep post-pass (saturation)
     seed: int = 0
+    # resilience axis coordinates + outcome counters (ISSUE 6); all zero
+    # when FailureSpec/RetryPolicy are off, so failure-free records carry
+    # the same numbers as before the resilience layer existed.
+    mttf: float = 0.0           # 0 = no injected failures
+    retry_max: int = 0          # client retry budget (0 = no retries)
+    n_shed: int = 0             # arrivals rejected over max_queue_depth
+    n_timeout: int = 0          # queue-time deadline expiries
+    n_retried: int = 0          # client re-submissions (amplification)
+    n_abandoned: int = 0        # permanently given up (budget exhausted)
 
     @property
     def penalty(self) -> float:
@@ -47,6 +56,20 @@ class RunRecord:
         if self.theta_max <= 0:
             return math.nan
         return self.tps / self.theta_max
+
+    @property
+    def goodput_rps(self) -> float:
+        """Delivered request rate (completed / window)."""
+        if self.window_s <= 0:
+            return math.nan
+        return self.n_completed / self.window_s
+
+    @property
+    def retry_amplification(self) -> float:
+        """Submitted attempts per original request (>= 1.0)."""
+        if self.n_requests <= 0:
+            return math.nan
+        return 1.0 + self.n_retried / self.n_requests
 
 
 FIELDS = [f.name for f in dataclasses.fields(RunRecord)]

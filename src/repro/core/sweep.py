@@ -60,6 +60,8 @@ class SimEngineSpec:
     prefill_token_budget: int = 2048
     max_prefill_reqs: int = 8
     fast_forward: bool = True
+    max_queue_depth: int = 0            # >0: admission-control shedding
+    deadline_s: float = 0.0             # >0: queue-time deadline
 
     def __call__(self) -> Engine:
         from repro.configs import get_config
@@ -74,7 +76,9 @@ class SimEngineSpec:
             max_pages_per_seq=self.max_pages_per_seq,
             prefill_token_budget=self.prefill_token_budget,
             max_prefill_reqs=self.max_prefill_reqs,
-            fast_forward=self.fast_forward)
+            fast_forward=self.fast_forward,
+            max_queue_depth=self.max_queue_depth,
+            deadline_s=self.deadline_s)
         return Engine(ecfg, SimExecutor(cfg, stm))
 
 
@@ -88,7 +92,8 @@ def run_point(engine_factory: Callable[[], Engine], spec: ArrivalSpec, *,
               config: str = "", model: str = "", hw: str = "cpu-node",
               n_chips: int = 1, quant: str = "bf16", engine_kind: str = "sim",
               price_per_hr: float = 1.0,
-              failure_times: Sequence[float] = ()) -> RunRecord:
+              failure_times: Sequence[float] = (),
+              failure_spec=None, retry=None) -> RunRecord:
     """One (lambda, config) measurement."""
     eng = engine_factory()
     if warmup:
@@ -99,12 +104,14 @@ def run_point(engine_factory: Callable[[], Engine], spec: ArrivalSpec, *,
         eng.reset_measurement()
 
     reqs = synth_requests(spec)
-    eng.run(reqs, horizon=horizon, failure_times=failure_times)
+    eng.run(reqs, horizon=horizon, failure_times=failure_times,
+            failure_spec=failure_spec, retry=retry)
     done = [r for r in reqs if r.finish_time is not None]
     window = eng.t
     out_toks = sum(r.tokens_out for r in done)
     in_toks = sum(r.prompt_len for r in done)
     tps = out_toks / window if window > 0 else 0.0
+    m = eng.metrics
     rec = RunRecord(
         config=config, model=model, hw=hw, n_chips=n_chips, quant=quant,
         engine=engine_kind, lam=spec.lam, io_shape=spec.io_shape,
@@ -120,7 +127,13 @@ def run_point(engine_factory: Callable[[], Engine], spec: ArrivalSpec, *,
         mean_inflight=eng.mean_inflight(),
         price_per_hr=price_per_hr,
         c_eff=c_eff(price_per_hr, tps),
-        seed=spec.seed)
+        seed=spec.seed,
+        mttf=failure_spec.mttf if failure_spec is not None else 0.0,
+        retry_max=retry.max_attempts if retry is not None else 0,
+        n_shed=int(m.get("repro:request_shed_total")),
+        n_timeout=int(m.get("repro:request_timeout_total")),
+        n_retried=int(m.get("repro:request_retry_total")),
+        n_abandoned=int(m.get("repro:request_abandoned_total")))
     return rec
 
 

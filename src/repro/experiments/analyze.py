@@ -32,9 +32,16 @@ from repro.simulate.hardware import HW_BY_NAME
 
 def _groups(records: Sequence[RunRecord]
             ) -> Dict[Tuple, List[RunRecord]]:
-    """(model, hw, quant, n_chips, io_shape) -> ladder-ordered records."""
+    """(model, hw, quant, n_chips, io_shape) -> ladder-ordered records.
+
+    Resilient records (injected failures / client retries, ISSUE 6) are
+    excluded: they sit at the same coordinates as their failure-free
+    siblings and would pollute the classic cost curves with degraded
+    points. They are analyzed by `reliability_tables` instead."""
     out: Dict[Tuple, List[RunRecord]] = {}
     for r in records:
+        if r.mttf > 0.0 or r.retry_max > 0:
+            continue
         key = (r.model, r.hw, r.quant, r.n_chips, r.io_shape)
         out.setdefault(key, []).append(r)
     for group in out.values():
@@ -219,6 +226,50 @@ def penalty_atlas(records: Sequence[RunRecord],
     return out
 
 
+def reliability_tables(records: Sequence[RunRecord]) -> List[dict]:
+    """ISSUE 6: the cost of reliability. One row per resilient record
+    (mttf > 0 or retry_max > 0): goodput vs offered rate, the client
+    retry-amplification factor, and — the headline — the inflation of
+    C_eff per *delivered* token against the failure-free record at the
+    same (model, hw, quant, footprint, io_shape, lambda). `tps` counts
+    only completed requests' tokens, so C_eff is already per-delivered-
+    token; failures/shedding shrink the denominator while the meter keeps
+    running, which is exactly the inflation being priced."""
+    base: Dict[Tuple, RunRecord] = {}
+    for r in records:
+        if r.mttf == 0.0 and r.retry_max == 0:
+            base[(r.model, r.hw, r.quant, r.n_chips, r.io_shape, r.lam)] = r
+    out = []
+    for r in records:
+        if r.mttf == 0.0 and r.retry_max == 0:
+            continue
+        b = base.get((r.model, r.hw, r.quant, r.n_chips, r.io_shape, r.lam))
+        inflation = (r.c_eff / b.c_eff
+                     if b is not None and b.c_eff > 0 else float("nan"))
+        out.append({
+            "model": r.model, "hw": r.hw, "quant": r.quant,
+            "n_chips": r.n_chips, "io_shape": r.io_shape, "lam": r.lam,
+            "mttf": r.mttf, "retry_max": r.retry_max,
+            "offered_rps": r.lam, "goodput_rps": r.goodput_rps,
+            "delivered_frac": (r.n_completed / r.n_requests
+                               if r.n_requests else float("nan")),
+            "retry_amplification": r.retry_amplification,
+            "n_shed": r.n_shed, "n_timeout": r.n_timeout,
+            "n_retried": r.n_retried, "n_abandoned": r.n_abandoned,
+            "c_eff": r.c_eff,
+            "c_eff_baseline": b.c_eff if b is not None else float("nan"),
+            "c_eff_inflation": inflation,
+        })
+    # within a (coords, lam) block, rows ascend by failure *rate* (1/mttf,
+    # with mttf=0 = rate 0 first) then retry budget — so the monotone-
+    # inflation acceptance check reads straight down the table
+    out.sort(key=lambda d: (d["model"], d["hw"], d["quant"], d["n_chips"],
+                            d["io_shape"], d["lam"],
+                            1.0 / d["mttf"] if d["mttf"] > 0 else 0.0,
+                            d["retry_max"]))
+    return out
+
+
 def crosshw_ordering(records: Sequence[RunRecord]) -> List[dict]:
     """§5.2 across the hardware axis: per quant, does the per-chip
     active-params saturation ordering survive on every generation?"""
@@ -254,6 +305,7 @@ def crosshw_tables(records: Sequence[RunRecord]) -> Dict[str, object]:
         "active_params_ordering": crosshw_ordering(records),
         "penalty_atlas": penalty_atlas(records),
         "planner_tables": planner_tables(records),
+        "reliability": reliability_tables(records),
     }
 
 
@@ -361,6 +413,22 @@ def report(records: Sequence[RunRecord], title: str = "") -> str:
                 f"{row['model']:<24} {row['hw']:<9} {row['quant']:<5} "
                 f"{row['idle_penalty']:>8.1f}x {row['spread']:>6.1f}x "
                 f"{row['knee_lambda']:>9.4g} {row['half_cost_lambda']:>13.4g}")
+
+    reliability = reliability_tables(records)
+    if reliability:
+        lines.append("")
+        lines.append("-- pricing reliability (C_eff per *delivered* "
+                     "token vs failure-free baseline) --")
+        lines.append(f"{'model':<24} {'lam':>6} {'mttf':>6} {'retry':>5} "
+                     f"{'goodput':>8} {'ampl':>6} {'shed':>5} "
+                     f"{'c_eff':>8} {'inflation':>9}")
+        for row in reliability:
+            mttf = f"{row['mttf']:g}" if row["mttf"] > 0 else "-"
+            lines.append(
+                f"{row['model']:<24} {row['lam']:>6g} {mttf:>6} "
+                f"{row['retry_max']:>5d} {row['goodput_rps']:>8.2f} "
+                f"{row['retry_amplification']:>5.2f}x {row['n_shed']:>5d} "
+                f"{row['c_eff']:>8.3f} {row['c_eff_inflation']:>8.2f}x")
 
     lines.append("")
     lines.append("-- API crossover (list prices, no SLA: §6.4 gate "

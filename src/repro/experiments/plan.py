@@ -83,21 +83,63 @@ class Cell:
     prefill_token_budget: int = 2048
     max_prefill_reqs: int = 8
     fast_forward: bool = True
+    # resilience axes (ISSUE 6) — all-zero means off; they join cell_id /
+    # group_key only when on, so pre-existing plans keep their historical
+    # seed streams (and records) exactly.
+    mttf: float = 0.0           # mean time to replica failure (0 = none)
+    mttr: float = 0.0           # mean restart lag after a crash
+    fail_frac: float = 0.5      # fraction of running slots lost per crash
+    retry_max: int = 0          # client retry budget (0 = no retries)
+    retry_base_s: float = 0.5   # backoff base (doubles per attempt)
+    retry_jitter_s: float = 0.0
+    max_queue_depth: int = 0    # engine admission-control shed depth
+    deadline_s: float = 0.0     # engine queue-time deadline
+    # runner execution policy (not part of the measurement itself)
+    cell_retries: int = 2       # re-dispatch budget after worker loss
+
+    @property
+    def resilience_key(self) -> Tuple:
+        return (self.mttf, self.mttr, self.fail_frac, self.retry_max,
+                self.retry_base_s, self.retry_jitter_s,
+                self.max_queue_depth, self.deadline_s)
+
+    @property
+    def resilient(self) -> bool:
+        """True when any behavior-changing resilience knob is on.
+        fail_frac/mttr/retry_base_s/jitter are parameters OF those knobs
+        (nonzero defaults), so they don't gate by themselves."""
+        return (self.mttf > 0.0 or self.retry_max > 0
+                or self.max_queue_depth > 0 or self.deadline_s > 0.0)
 
     @property
     def cell_id(self) -> str:
         lam = f"{self.lam:g}".replace(".", "p")
         raw = (f"{self.arch}_{self.hw}_{self.quant}_x{self.n_chips}"
                f"_{self.io_shape}_lam{lam}")
+        if self.resilient:
+            mttf = f"{self.mttf:g}".replace(".", "p")
+            raw += f"_mttf{mttf}_r{self.retry_max}"
         return raw.replace("/", "-")
+
+    @property
+    def seed_key(self) -> Tuple:
+        """Arrival-seed group: the resilience axes are EXCLUDED, so every
+        resilient cell shares its failure-free sibling's arrival stream.
+        Reliability comparisons are therefore *paired* — same arrivals,
+        same request shapes — isolating the failure/retry effect from
+        arrival-realization noise."""
+        return (self.config, self.model, self.arch, self.hw, self.quant,
+                self.n_chips, self.io_shape, self.process, self.cv,
+                self.scale, self.engine_kind)
 
     @property
     def group_key(self) -> Tuple:
         """Ladder group: theta_max is back-filled across cells that share
         everything but the offered rate."""
-        return (self.config, self.model, self.arch, self.hw, self.quant,
-                self.n_chips, self.io_shape, self.process, self.cv,
-                self.scale, self.engine_kind)
+        base = self.seed_key
+        if self.resilient:
+            base = base + self.resilience_key
+        return base
 
     def fingerprint(self) -> str:
         """Spec hash stored beside each result; a stale on-disk cell (spec
@@ -113,7 +155,28 @@ class Cell:
             max_pages_per_seq=self.max_pages_per_seq,
             prefill_token_budget=self.prefill_token_budget,
             max_prefill_reqs=self.max_prefill_reqs,
-            fast_forward=self.fast_forward)
+            fast_forward=self.fast_forward,
+            max_queue_depth=self.max_queue_depth,
+            deadline_s=self.deadline_s)
+
+    def failure_spec(self):
+        """FailureSpec for this cell, or None. The stream seed is derived
+        from the cell seed at a fixed offset so every cell gets its own
+        deterministic crash schedule."""
+        if self.mttf <= 0.0:
+            return None
+        from repro.serving.resilience import FailureSpec
+        return FailureSpec(mttf=self.mttf, mttr=self.mttr,
+                           loss_frac=self.fail_frac, seed=self.seed + 911)
+
+    def retry_policy(self):
+        if self.retry_max <= 0:
+            return None
+        from repro.serving.resilience import RetryPolicy
+        return RetryPolicy(max_attempts=self.retry_max,
+                           base_delay_s=self.retry_base_s,
+                           jitter_s=self.retry_jitter_s,
+                           seed=self.seed + 977)
 
     def arrival_spec(self):
         from repro.serving.arrivals import ArrivalSpec
@@ -214,6 +277,18 @@ class GridSpec:
     num_pages: int = 65536
     max_pages_per_seq: int = 64
     fast_forward: bool = True
+    # resilience axes (ISSUE 6): the grid walks mttf x retry_max after
+    # lambda; the remaining knobs are scalars shared by every cell. The
+    # defaults keep every pre-existing spec expanding to bit-identical
+    # plans (all-zero == resilience off).
+    mttfs: Tuple[float, ...] = (0.0,)
+    retry_maxes: Tuple[int, ...] = (0,)
+    mttr: float = 0.0
+    fail_frac: float = 0.5
+    retry_base_s: float = 0.5
+    retry_jitter_s: float = 0.0
+    max_queue_depth: int = 0
+    deadline_s: float = 0.0
 
     def chips_for(self, arch: str, hw: Optional[str] = None) -> int:
         if hw is not None:
@@ -233,10 +308,12 @@ class GridSpec:
         req_fn, warm_fn = PROTOCOLS[self.protocol]
         cells: List[Cell] = []
         for ax in iter_grid(arch=self.archs, hw=self.hws, quant=self.quants,
-                            io_shape=self.io_shapes, lam=self.ladder):
+                            io_shape=self.io_shapes, lam=self.ladder,
+                            mttf=self.mttfs, retry_max=self.retry_maxes):
             if ax["quant"] not in self.quants_for(ax["hw"]):
                 continue
             chips = self.chips_for(ax["arch"], ax["hw"])
+            resil = ax["mttf"] > 0.0 or ax["retry_max"] > 0
             cell = Cell(
                 plan=self.name, config=ax["arch"], model=ax["arch"],
                 arch=ax["arch"], hw=ax["hw"], quant=ax["quant"],
@@ -247,9 +324,18 @@ class GridSpec:
                 process=self.process, cv=self.cv, scale=self.scale,
                 max_batch=self.max_batch, num_pages=self.num_pages,
                 max_pages_per_seq=self.max_pages_per_seq,
-                fast_forward=self.fast_forward)
+                fast_forward=self.fast_forward,
+                mttf=float(ax["mttf"]), retry_max=int(ax["retry_max"]),
+                # shared knobs only matter on resilient cells; keeping
+                # them zeroed elsewhere preserves historical cell specs.
+                mttr=self.mttr if ax["mttf"] > 0.0 else 0.0,
+                fail_frac=self.fail_frac if ax["mttf"] > 0.0 else 0.5,
+                retry_base_s=self.retry_base_s,
+                retry_jitter_s=self.retry_jitter_s,
+                max_queue_depth=self.max_queue_depth if resil else 0,
+                deadline_s=self.deadline_s if resil else 0.0)
             cells.append(dataclasses.replace(
-                cell, seed=cell_seed(self.seed, cell.group_key, cell.lam)))
+                cell, seed=cell_seed(self.seed, cell.seed_key, cell.lam)))
         return ExperimentPlan(name=self.name, cells=tuple(cells),
                               seed=self.seed, description=self.description)
 

@@ -179,6 +179,87 @@ def probe_int8_nonnative() -> ExperimentPlan:
     ).expand()
 
 
+def paper_resilience() -> ExperimentPlan:
+    """Pricing reliability (ISSUE 6): what failures, retries and shedding
+    do to $/M *delivered* tokens.
+
+    Grid A (48 cells): the core dense model on its cheap-part footprint
+    (llama31-8b @ tpu-v5e x2), 3-lambda ladder x MTTF ladder
+    {none, 40, 15, 6 s} x retry {off, 3 attempts with capped backoff}.
+    Every resilient cell runs with a queue-depth cap so shed arrivals and
+    crash-killed requests both feed the client retry loop; the
+    (mttf=0, retry=0) column is the failure-free baseline
+    `analyze.reliability_tables` normalizes inflation against.
+
+    Grid B (14 cells): the same model priced failure-free on both its
+    v5e and v5p footprints over the full 7-point ladder — the deployment
+    curves `planner --availability` reprices with N+1 spares, so the
+    cheapest failure-free footprint can flip under an availability target.
+    """
+    grid_a = GridSpec(
+        name="paper_resilience",
+        description="reliability pricing: llama31-8b @ tpu-v5e x2, "
+                    "3-lambda x MTTF {0,40,15,6} x retry {0,3} under "
+                    "admission control; + failure-free v5e/v5p ladders "
+                    "for availability-aware planning",
+        archs=("llama31-8b",),
+        hws=("tpu-v5e",),
+        quants=("bf16",),
+        ladder=(5.0, 10.0, 25.0),
+        n_chips=2,
+        mttfs=(0.0, 40.0, 15.0, 6.0),
+        retry_maxes=(0, 3),
+        mttr=2.0,
+        fail_frac=0.5,
+        retry_base_s=0.25,
+        max_queue_depth=512,
+        seed=0,
+        protocol="quick",
+    ).expand()
+    grid_b = GridSpec(
+        name="paper_resilience",
+        archs=("llama31-8b",),
+        hws=("tpu-v5e", "tpu-v5p"),
+        quants=("bf16",),
+        ladder=LAMBDA_LADDER,
+        n_chips_by_arch_hw=CROSSHW_CHIPS,
+        seed=0,
+        protocol="quick",
+    ).expand()
+    # grid A's failure-free baselines at lam {5,10,25} are the same cells
+    # as grid B's v5e ladder points — keep the first copy of each id.
+    seen = {c.cell_id for c in grid_a.cells}
+    extra = tuple(c for c in grid_b.cells if c.cell_id not in seen)
+    return ExperimentPlan(
+        name="paper_resilience",
+        cells=grid_a.cells + extra,
+        seed=0,
+        description=grid_a.description)
+
+
+def mini_resilience() -> ExperimentPlan:
+    """CI smoke for the resilience axes: 1 model x 1 lambda x
+    MTTF {0, 10} x retry {0, 2}, smoke-tier traffic (4 cells)."""
+    return GridSpec(
+        name="mini_resilience",
+        description="resilience CI smoke: llama31-8b, lam=10, "
+                    "mttf {0,4} x retry {0,2} (sim tier)",
+        archs=("llama31-8b",),
+        hws=("tpu-v5e",),
+        quants=("bf16",),
+        ladder=(10,),
+        mttfs=(0.0, 4.0),
+        retry_maxes=(0, 2),
+        mttr=1.0,
+        retry_base_s=0.25,
+        max_queue_depth=64,
+        seed=0,
+        protocol="smoke",
+        max_batch=64,
+        num_pages=8192,
+    ).expand()
+
+
 def mini_crosshw() -> ExperimentPlan:
     """CI smoke for the cross-hardware axis: 2 models x {v5e, v6e} x
     {bf16, fp8} x 2 lambdas, smoke-tier traffic (16 cells). Exercises the
@@ -252,6 +333,8 @@ PLANS: Dict[str, Callable[[], ExperimentPlan]] = {
     "paper_crosshw": paper_crosshw,
     "paper_atlas": paper_atlas,
     "probe_int8_nonnative": probe_int8_nonnative,
+    "paper_resilience": paper_resilience,
+    "mini_resilience": mini_resilience,
     "mini_crosshw": mini_crosshw,
     "mini_2x2": mini_2x2,
     "quickstart": quickstart,

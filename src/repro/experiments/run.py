@@ -51,10 +51,27 @@ def main(argv=None):
     ap.add_argument("--analyze-json", action="store_true",
                     help="write the cross-hardware tables to "
                          "<store>/analysis.json after the run")
+    ap.add_argument("--verify", action="store_true",
+                    help="integrity-check the store against the plan "
+                         "(torn/stale/orphaned cell files) and exit; "
+                         "nonzero exit status on any issue")
+    ap.add_argument("--worker-timeout", type=float, default=None,
+                    help="seconds without any finished unit before the "
+                         "pool is declared wedged, killed, and unfinished "
+                         "cells re-dispatched (per-cell retry budget)")
     args = ap.parse_args(argv)
 
     plan = get_plan(args.plan)
     store = ExperimentStore(plan.name, args.root)
+    if args.verify:
+        res = store.verify(plan)
+        for line in res["issues"]:
+            print(f"ISSUE   {line}")
+        for line in res["missing"]:
+            print(f"missing {line}")
+        print(f"store {store.dir}: {len(res['issues'])} issue(s), "
+              f"{len(res['missing'])} of {len(plan.cells)} cells missing")
+        return 1 if res["issues"] else 0
     if not args.resume and store.dir.exists():
         # --fresh also clears orphaned cell files (a plan edit renames
         # cell ids; superseded files would otherwise accumulate forever)
@@ -76,7 +93,9 @@ def main(argv=None):
     records = runner.run(resume=args.resume, parallel=not args.serial,
                          max_workers=args.workers,
                          mp_context=args.mp_context, backend=args.backend,
-                         lane_width=args.lane_width, progress=progress)
+                         lane_width=args.lane_width,
+                         worker_timeout=args.worker_timeout,
+                         progress=progress)
     print(f"\n{len(records)}/{len(plan.cells)} cells consolidated to "
           f"{store.csv_path} in {time.time() - t0:.1f}s")
     if args.analyze:
@@ -89,4 +108,4 @@ def main(argv=None):
 
 
 if __name__ == "__main__":
-    main()
+    raise SystemExit(main())

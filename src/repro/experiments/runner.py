@@ -78,7 +78,9 @@ def run_cell(cell: Cell, factory: Optional[Callable] = None) -> RunRecord:
     return run_point(factory if factory is not None else cell.engine_spec(),
                      cell.arrival_spec(), warmup=cell.warmup,
                      horizon=cell.horizon,
-                     failure_times=cell.failure_times, **cell.record_kw())
+                     failure_times=cell.failure_times,
+                     failure_spec=cell.failure_spec(),
+                     retry=cell.retry_policy(), **cell.record_kw())
 
 
 # ---------------------------------------------------------------------------
@@ -95,22 +97,55 @@ def _worker_init(factory_bytes: Optional[bytes]):
                        if factory_bytes is not None else None)
 
 
-def _pool_task(cell: Cell) -> RunRecord:
+def _checkpoint_store(checkpoint) -> Optional[ExperimentStore]:
+    """Rebuild the plan's store inside a worker from its (plan_name, root)
+    checkpoint handle (the store object itself never crosses the pool)."""
+    if checkpoint is None:
+        return None
+    plan_name, root = checkpoint
+    return ExperimentStore(plan_name, root=root)
+
+
+def _pool_task(cell: Cell, checkpoint=None) -> RunRecord:
     """Per-cell pool task; the factory arrived once via `_worker_init`."""
-    return run_cell(cell, _WORKER_FACTORY)
+    rec = run_cell(cell, _WORKER_FACTORY)
+    store = _checkpoint_store(checkpoint)
+    if store is not None:
+        store.write_cell(cell, rec)
+    return rec
 
 
-def _fleet_task(points) -> List[RunRecord]:
-    """Fleet-chunk pool task: run a lane chunk in one vectorized engine."""
+def _fleet_task(points, cells: Optional[List[Cell]] = None,
+                checkpoint=None) -> List[RunRecord]:
+    """Fleet-chunk pool task: run a lane chunk in one vectorized engine.
+
+    With a checkpoint handle, each lane's record is written to the store
+    *from the worker* the moment the lane finishes — a chunk killed
+    mid-flight (SIGKILL, OOM) loses only its in-flight lanes on resume
+    instead of the whole chunk (writes are atomic; the parent's own
+    `on_result` write at chunk completion is byte-identical)."""
     from repro.serving.fleet import fleet_run_points
-    return fleet_run_points(points)
+    store = _checkpoint_store(checkpoint)
+    if store is None or cells is None:
+        return fleet_run_points(points)
+
+    def _ckpt(j: int, rec: RunRecord):
+        store.write_cell(cells[j], rec)
+
+    return fleet_run_points(points, on_result=_ckpt)
 
 
-def shutdown_pool():
-    """Tear down the persistent pool (atexit, tests, broken-pool reset)."""
+def shutdown_pool(kill: bool = False):
+    """Tear down the persistent pool (atexit, tests, broken-pool reset).
+    `kill=True` also terminates the worker processes — required when a
+    worker is *wedged* (stuck in a task): plain shutdown(wait=False)
+    leaves the stuck process alive and the interpreter joins it at exit."""
     pool = _POOL.pop("pool", None)
     _POOL.pop("key", None)
     if pool is not None:
+        if kill:
+            for proc in getattr(pool, "_processes", {}).values():
+                proc.terminate()
         pool.shutdown(wait=False, cancel_futures=True)
 
 
@@ -165,7 +200,9 @@ def _fleet_point(cell: Cell, factory: Optional[Callable]):
         else cell.engine_spec()
     return FleetPoint(engine=spec, arrivals=cell.arrival_spec(),
                       warmup=cell.warmup, horizon=cell.horizon,
-                      failure_times=cell.failure_times, **cell.record_kw())
+                      failure_times=cell.failure_times,
+                      failure_spec=cell.failure_spec(),
+                      retry=cell.retry_policy(), **cell.record_kw())
 
 
 def _chunk(idxs: List[int], width: int) -> List[List[int]]:
@@ -180,7 +217,9 @@ def execute_cells(cells: Sequence[Cell], *,
                   backend: str = "process",
                   lane_width: Optional[int] = None,
                   on_result: Optional[Callable[[Cell, RunRecord],
-                                               None]] = None
+                                               None]] = None,
+                  checkpoint=None,
+                  worker_timeout: Optional[float] = None
                   ) -> List[RunRecord]:
     """Run `cells`; returns records in cell order. `on_result` fires per
     finished cell *in completion order* (the store hook). The shared
@@ -189,6 +228,15 @@ def execute_cells(cells: Sequence[Cell], *,
     backend="vector" chunks fleet-eligible cells into lanes of the
     vectorized fleet simulator and composes with the pool (lanes x
     cores); records are identical to backend="process" bit-for-bit.
+
+    `checkpoint=(plan_name, store_root)` lets pool *workers* write each
+    finished cell to the store themselves (atomic), so a worker killed
+    mid-chunk loses only in-flight lanes on `--resume`.
+
+    `worker_timeout` (seconds) bounds how long the dispatcher waits for
+    *any* unit to finish before declaring the pool wedged: the pool is
+    killed and unfinished cells are re-dispatched on a fresh pool,
+    bounded by each cell's `cell_retries` budget.
     """
     if backend not in ("process", "vector"):
         raise ValueError(f"unknown backend {backend!r}; "
@@ -249,46 +297,94 @@ def execute_cells(cells: Sequence[Cell], *,
     n_units = len(chunks) + len(solo_idx)
     if parallel and n_units > 1:
         ctx_name = mp_context or default_mp_context()
-        pool = None
-        try:
-            pool = _get_pool(ctx_name,
-                             max_workers or multiprocessing.cpu_count(),
-                             n_units, factory)
-        except (ValueError, OSError) as e:
-            fallback_warning(f"process pool failed to start: {e!r}")
-        if pool is not None:
+        attempts: Dict[int, int] = {}      # per-cell re-dispatch count
+        todo_chunks, todo_solo = list(chunks), list(solo_idx)
+        while todo_chunks or todo_solo:
+            try:
+                pool = _get_pool(ctx_name,
+                                 max_workers or multiprocessing.cpu_count(),
+                                 n_units, factory)
+            except (ValueError, OSError) as e:
+                fallback_warning(f"process pool failed to start: {e!r}")
+                break
             futs = {}
-            for chunk in chunks:
+            for chunk in todo_chunks:
                 fut = pool.submit(_fleet_task,
                                   [_fleet_point(cells[i], factory)
-                                   for i in chunk])
+                                   for i in chunk],
+                                  [cells[i] for i in chunk]
+                                  if checkpoint else None,
+                                  checkpoint)
                 futs[fut] = chunk
-            for i in solo_idx:
-                futs[pool.submit(_pool_task, cells[i])] = i
+            for i in todo_solo:
+                futs[pool.submit(_pool_task, cells[i], checkpoint)] = i
+            reason = None
+            pending = set(futs)
             try:
-                for fut in concurrent.futures.as_completed(futs):
-                    tag = futs[fut]
-                    if isinstance(tag, list):
-                        for i, rec in zip(tag, fut.result()):
-                            results[i] = rec
+                while pending:
+                    done, _ = concurrent.futures.wait(
+                        pending, timeout=worker_timeout,
+                        return_when=concurrent.futures.FIRST_COMPLETED)
+                    if not done:
+                        reason = (f"no unit finished within "
+                                  f"{worker_timeout:g}s (wedged worker)")
+                        break
+                    for fut in concurrent.futures.as_completed(done):
+                        tag = futs[fut]
+                        # a cell's *own* exception is not in the tuple
+                        # below — it propagates, failing fast instead of
+                        # silently re-running single-core
+                        res = fut.result()
+                        pending.discard(fut)
+                        if isinstance(tag, list):
+                            for i, rec in zip(tag, res):
+                                results[i] = rec
+                                if on_result:
+                                    on_result(cells[i], rec)
+                        else:
+                            results[tag] = res
                             if on_result:
-                                on_result(cells[i], rec)
-                    else:
-                        results[tag] = fut.result()
-                        if on_result:
-                            on_result(cells[tag], results[tag])
+                                on_result(cells[tag], res)
             except (concurrent.futures.process.BrokenProcessPool,
                     pickle.PicklingError, EOFError) as e:
-                # pool *infrastructure* died: drop the cached pool, keep
-                # whatever finished (already reported through on_result)
-                # and run only the missing cells serially. A cell's own
-                # exception is not in this tuple — it propagates, failing
-                # fast instead of silently re-running single-core.
-                shutdown_pool()
-                fallback_warning(f"process pool failed: {e!r}")
+                reason = repr(e)
             finally:
                 for fut in futs:
                     fut.cancel()
+            if reason is None:
+                break
+            # pool *infrastructure* died (or wedged): kill the cached
+            # pool, keep whatever finished (already reported through
+            # on_result) and re-dispatch only the unfinished cells on a
+            # fresh pool, each bounded by its `cell_retries` budget;
+            # over-budget cells fall through to the serial path below.
+            shutdown_pool(kill=True)
+            todo_chunks, todo_solo, spent = [], [], []
+            for tag in futs.values():
+                idx_list = tag if isinstance(tag, list) else [tag]
+                missing = [i for i in idx_list if i not in results]
+                if not missing:
+                    continue
+                retry_ok = []
+                for i in missing:
+                    attempts[i] = attempts.get(i, 0) + 1
+                    (retry_ok if attempts[i] <= cells[i].cell_retries
+                     else spent).append(i)
+                if isinstance(tag, list):
+                    if retry_ok:
+                        todo_chunks.append(retry_ok)
+                elif retry_ok:
+                    todo_solo.append(tag)
+            n_left = sum(len(c) for c in todo_chunks) + len(todo_solo)
+            if not (n_left or spent):
+                break                     # pool died after the last unit
+            warnings.warn(
+                f"process pool failed ({reason}); re-dispatching {n_left} "
+                f"unfinished cell(s) on a fresh pool"
+                + (f"; {len(spent)} cell(s) exhausted their re-dispatch "
+                   "budget and fall back to the serial path" if spent
+                   else ""),
+                RuntimeWarning, stacklevel=2)
     if len(results) < len(cells):
         _serial_missing()
     return [results[i] for i in range(len(cells))]
@@ -315,6 +411,7 @@ class PlanRunner:
             mp_context: Optional[str] = None,
             backend: str = "process",
             lane_width: Optional[int] = None,
+            worker_timeout: Optional[float] = None,
             progress: Optional[Callable[[Cell, RunRecord, int, int],
                                         None]] = None
             ) -> List[RunRecord]:
@@ -334,10 +431,14 @@ class PlanRunner:
             if progress is not None:
                 progress(cell, rec, n_done, len(self.plan.cells))
 
+        checkpoint = None
+        if self.store is not None:
+            checkpoint = (self.store.plan_name, str(self.store.root))
         fresh = execute_cells(todo, factory=self.factory, parallel=parallel,
                               max_workers=max_workers, mp_context=mp_context,
                               backend=backend, lane_width=lane_width,
-                              on_result=_on_result)
+                              on_result=_on_result, checkpoint=checkpoint,
+                              worker_timeout=worker_timeout)
         done.update({c.cell_id: r for c, r in zip(todo, fresh)})
         if self.store is not None:
             return self.store.consolidate(self.plan)

@@ -157,6 +157,55 @@ class ExperimentStore:
     def completed_ids(self, plan: ExperimentPlan) -> Set[str]:
         return set(self.load_cell_records(plan))
 
+    def verify(self, plan: ExperimentPlan) -> Dict[str, List[str]]:
+        """Integrity check of the on-disk store against `plan`.
+
+        Returns {"issues": [...], "missing": [...]} — `issues` are cell
+        files that exist but cannot be resumed (torn JSON, fingerprint
+        drift, missing/undecodable record payload) plus orphaned files no
+        current cell claims; `missing` lists cells never run (informative
+        only: an interrupted run is not corrupt). Every entry names the
+        file and the reason, so `run.py --verify` can print and exit
+        nonzero on `issues`."""
+        issues: List[str] = []
+        missing: List[str] = []
+        claimed: Set[str] = set()
+        for cell in plan.cells:
+            path = self.cell_path(cell)
+            claimed.add(path.name)
+            if not path.exists():
+                missing.append(f"{path.name}: cell never ran")
+                continue
+            try:
+                blob = json.loads(path.read_text())
+            except (OSError, json.JSONDecodeError) as e:
+                issues.append(f"{path.name}: torn/unreadable JSON ({e})")
+                continue
+            if not isinstance(blob, dict):
+                issues.append(f"{path.name}: not a cell blob "
+                              f"(top-level {type(blob).__name__})")
+                continue
+            if blob.get("fingerprint") != cell.fingerprint():
+                issues.append(
+                    f"{path.name}: fingerprint drift (stored "
+                    f"{blob.get('fingerprint')!r} != plan "
+                    f"{cell.fingerprint()!r}; spec changed since it ran)")
+                continue
+            record = blob.get("record")
+            if not isinstance(record, dict):
+                issues.append(f"{path.name}: record payload missing")
+                continue
+            try:
+                RunRecord(**record)
+            except TypeError as e:
+                issues.append(f"{path.name}: record schema drift ({e})")
+        if self.dir.exists():
+            for path in sorted(self.dir.glob("cell_*.json")):
+                if path.name not in claimed:
+                    issues.append(f"{path.name}: orphaned (no current "
+                                  "plan cell claims it)")
+        return {"issues": issues, "missing": missing}
+
     def load_records(self, plan: ExperimentPlan) -> List[RunRecord]:
         """Plan-ordered, theta-back-filled records (the analysis input)."""
         return backfill_theta(plan, self.load_cell_records(plan))

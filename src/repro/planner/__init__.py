@@ -30,8 +30,9 @@ from repro.planner.curves import (  # noqa: F401
     DENSE_MIN_POINTS, DeploymentCurve, curves_by_model, fit_curves,
     penalty_from_util)
 from repro.planner.optimize import (  # noqa: F401
-    DEFAULT_MAX_REPLICAS, CapacityPlan, DeploymentOption, HeterogeneousMix,
-    MixAllocation, enumerate_options, greedy_mix, plan_capacity,
-    rank_options, slo_feasible_cap)
+    DEFAULT_MAX_REPLICAS, AvailabilityTarget, CapacityPlan,
+    DeploymentOption, HeterogeneousMix, MixAllocation, enumerate_options,
+    greedy_mix, plan_capacity, rank_options, slo_feasible_cap,
+    spares_needed)
 from repro.planner.tables import (  # noqa: F401
     REFERENCE_LAMS, planner_tables, render_plan, render_plans)

@@ -18,7 +18,8 @@ import json
 from repro.core.slo import SLOTarget
 from repro.experiments.analyze import load_store_records
 from repro.planner.curves import fit_curves
-from repro.planner.optimize import DEFAULT_MAX_REPLICAS, plan_capacity
+from repro.planner.optimize import (DEFAULT_MAX_REPLICAS,
+                                    AvailabilityTarget, plan_capacity)
 from repro.planner.tables import plan_row, render_plans
 
 
@@ -41,6 +42,16 @@ def main(argv=None):
                     metavar="MS")
     ap.add_argument("--slo-tpot-p99", type=float, default=None,
                     metavar="MS")
+    ap.add_argument("--availability", type=float, default=None,
+                    metavar="P",
+                    help="fleet availability target (e.g. 0.999): buy "
+                         "N+1-style spares per option and price them as "
+                         "utilization loss on $/M-delivered-tok")
+    ap.add_argument("--replica-availability", type=float, default=0.99,
+                    metavar="P",
+                    help="per-replica steady-state availability "
+                         "MTTF/(MTTF+MTTR) used for the spare "
+                         "calculation (default 0.99)")
     ap.add_argument("--root", default=None,
                     help="store root (default results/experiments)")
     ap.add_argument("--json", default=None, metavar="PATH",
@@ -65,8 +76,14 @@ def main(argv=None):
                         ttft_p99_ms=args.slo_ttft_p99,
                         tpot_p99_ms=args.slo_tpot_p99)
 
+    avail = None
+    if args.availability is not None:
+        avail = AvailabilityTarget(
+            availability=args.availability,
+            replica_availability=args.replica_availability)
+
     plans = plan_capacity(curves, args.lam, slo,
-                          max_replicas=args.max_replicas)
+                          max_replicas=args.max_replicas, avail=avail)
     print(render_plans(
         plans, title=f"{args.plan} @ lambda={args.lam:g} rps"))
     if args.json:

@@ -152,6 +152,12 @@ def fit_curves(records: Sequence[RunRecord],
     carry no information in log space and are dropped per metric."""
     groups: Dict[Tuple, List[RunRecord]] = {}
     for r in records:
+        if r.mttf > 0.0 or r.retry_max > 0:
+            # resilient records (ISSUE 6) measure degraded operation at
+            # the same coordinates as their failure-free siblings; the
+            # planner's curves price healthy replicas (failure cost
+            # enters through the availability/spares model instead)
+            continue
         if io_shape is not None and r.io_shape != io_shape:
             continue
         if model is not None and r.model != model:

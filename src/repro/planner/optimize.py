@@ -41,6 +41,44 @@ DEFAULT_MAX_REPLICAS = 8
 # bisection iterations for the SLO-feasible rate cap (log-space; 60
 # halvings pin the cap far below any meaningful resolution)
 _CAP_ITERS = 60
+# give up past this many spares: a replica_availability low enough to
+# need more is not a deployable story, it is a broken fleet
+_MAX_SPARES = 64
+
+
+@dataclasses.dataclass(frozen=True)
+class AvailabilityTarget:
+    """Fleet availability requirement (ISSUE 6): with each replica
+    independently up with probability `replica_availability` (its
+    steady-state MTTF/(MTTF+MTTR)), the probability that at least the R
+    *active* replicas are up must reach `availability`. The planner buys
+    N+1-style spares until it does and prices them as pure utilization
+    loss: spares burn $/hr without adding delivered tokens."""
+    availability: float = 0.999
+    replica_availability: float = 0.99
+
+    def describe(self) -> str:
+        return (f"availability >= {self.availability:g} "
+                f"(replica availability {self.replica_availability:g})")
+
+
+def _p_at_least(total: int, k: int, p: float) -> float:
+    """P(Binomial(total, p) >= k), exact (totals here are tiny)."""
+    if k <= 0:
+        return 1.0
+    return sum(math.comb(total, j) * p ** j * (1.0 - p) ** (total - j)
+               for j in range(k, total + 1))
+
+
+def spares_needed(active: int, target: AvailabilityTarget) -> Optional[int]:
+    """Smallest spare count s such that a (active + s)-replica fleet has
+    >= active replicas up with probability >= the target; None when even
+    `_MAX_SPARES` spares cannot reach it."""
+    p = target.replica_availability
+    for s in range(_MAX_SPARES + 1):
+        if _p_at_least(active + s, active, p) >= target.availability:
+            return s
+    return None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -66,6 +104,10 @@ class DeploymentOption:
     dense: bool                 # fitted from a lambda-continuum store
     feasible: bool
     why_infeasible: str = ""
+    # availability-aware pricing (ISSUE 6): spares idle behind the R
+    # active replicas; c_eff above is already scaled by (R + spares) / R
+    spares: int = 0
+    availability: float = 1.0   # achieved P(>= R replicas up)
 
     @property
     def label(self) -> str:
@@ -121,6 +163,7 @@ class CapacityPlan:
     rejected: List[DeploymentOption]    # priced-but-refused, with reasons
     mix: Optional[HeterogeneousMix]
     crossover: List[dict]               # per-API-tier verdict (best curve)
+    avail: Optional[AvailabilityTarget] = None
 
     @property
     def best(self) -> Optional[DeploymentOption]:
@@ -132,7 +175,8 @@ class CapacityPlan:
 
 
 def _option(curve: DeploymentCurve, lam: float, replicas: int,
-            slo: Optional[SLOTarget]) -> DeploymentOption:
+            slo: Optional[SLOTarget],
+            avail: Optional[AvailabilityTarget] = None) -> DeploymentOption:
     lam_per = lam / replicas
     op = curve.operating_point(lam_per)
     # the fleet's $/M-token equals one replica's C_eff at lambda/R:
@@ -142,7 +186,21 @@ def _option(curve: DeploymentCurve, lam: float, replicas: int,
     beyond = lam_per > curve.lam_max
     priceable = math.isfinite(cost)
     slo_ok = slo.ok(op) if slo is not None else True
-    feasible = not beyond and priceable and slo_ok
+    spares, achieved, avail_ok = 0, 1.0, True
+    if avail is not None:
+        s = spares_needed(replicas, avail)
+        if s is None:
+            avail_ok = False
+            achieved = _p_at_least(replicas + _MAX_SPARES, replicas,
+                                   avail.replica_availability)
+        else:
+            spares = s
+            achieved = _p_at_least(replicas + s, replicas,
+                                   avail.replica_availability)
+            # spares are pure utilization loss: tokens still come from
+            # the R active replicas while (R + s) replicas burn $/hr
+            cost = cost * (replicas + s) / replicas
+    feasible = not beyond and priceable and slo_ok and avail_ok
     why = ""
     if beyond:
         why = (f"lambda/R = {lam_per:g} beyond the measured range "
@@ -151,29 +209,36 @@ def _option(curve: DeploymentCurve, lam: float, replicas: int,
         why = "no finite-cost operating point measured on this curve"
     elif not slo_ok:
         why = f"violates SLO ({slo.describe()})"
+    elif not avail_ok:
+        why = (f"cannot reach {avail.describe()} with <= {_MAX_SPARES} "
+               "spares")
     return DeploymentOption(
         model=curve.model, hw=curve.hw, quant=curve.quant,
         n_chips=curve.n_chips, replicas=replicas, lam=lam,
         lam_per_replica=lam_per, c_eff=cost,
-        fleet_price_per_hr=replicas * curve.price_per_hr,
+        fleet_price_per_hr=(replicas + spares) * curve.price_per_hr,
         util=util, penalty=penalty_from_util(util),
         mean_inflight=op["mean_inflight"],
         ttft_p90_ms=op["ttft_p90_ms"], ttft_p99_ms=op["ttft_p99_ms"],
         tpot_p99_ms=op["tpot_p99_ms"],
         slo_ok=slo_ok, extrapolated=curve.extrapolated(lam_per),
-        dense=curve.dense, feasible=feasible, why_infeasible=why)
+        dense=curve.dense, feasible=feasible, why_infeasible=why,
+        spares=spares, availability=achieved)
 
 
 def enumerate_options(curves: Sequence[DeploymentCurve], lam: float,
                       slo: Optional[SLOTarget] = None,
-                      max_replicas: int = DEFAULT_MAX_REPLICAS
+                      max_replicas: int = DEFAULT_MAX_REPLICAS,
+                      avail: Optional[AvailabilityTarget] = None
                       ) -> List[DeploymentOption]:
     """Every (footprint, R) candidate for one model at offered rate lam,
-    priced; feasibility and reasons attached, no ranking applied."""
+    priced; feasibility and reasons attached, no ranking applied. With an
+    `avail` target each option carries its spare count and its c_eff is
+    the per-*delivered*-token cost including the idle spares."""
     out = []
     for curve in curves:
         for replicas in range(1, max_replicas + 1):
-            out.append(_option(curve, lam, replicas, slo))
+            out.append(_option(curve, lam, replicas, slo, avail))
             if lam / replicas <= curve.lam_min:
                 # further splits only push deeper into the idle edge:
                 # same clamped metrics, strictly more hardware
@@ -274,7 +339,8 @@ def _finite_or_inf(v: float) -> float:
 
 def plan_capacity(curves: Sequence[DeploymentCurve], lam: float,
                   slo: Optional[SLOTarget] = None,
-                  max_replicas: int = DEFAULT_MAX_REPLICAS
+                  max_replicas: int = DEFAULT_MAX_REPLICAS,
+                  avail: Optional[AvailabilityTarget] = None
                   ) -> List[CapacityPlan]:
     """One CapacityPlan per (model, io_shape) present in `curves`, in
     that order — operating points measured under different workload
@@ -285,9 +351,14 @@ def plan_capacity(curves: Sequence[DeploymentCurve], lam: float,
     plans = []
     for (model, io_shape), group in sorted(by_group.items()):
         options = enumerate_options(group, lam, slo,
-                                    max_replicas=max_replicas)
+                                    max_replicas=max_replicas,
+                                    avail=avail)
         ranked, rejected = rank_options(options)
-        mix = greedy_mix(group, lam, slo) if len(group) > 1 else None
+        # the greedy mix is not availability-aware (it has no replica
+        # structure to buy spares against) — suppressing it under an
+        # availability target keeps the ranking honest
+        mix = greedy_mix(group, lam, slo) \
+            if len(group) > 1 and avail is None else None
         # the API verdict belongs to the curve the operator would deploy
         if ranked:
             key = (model, ranked[0].hw, ranked[0].quant,
@@ -301,5 +372,5 @@ def plan_capacity(curves: Sequence[DeploymentCurve], lam: float,
         plans.append(CapacityPlan(
             model=model, lam=lam, io_shape=io_shape, slo=slo,
             ranked=ranked, rejected=rejected, mix=mix,
-            crossover=crossover))
+            crossover=crossover, avail=avail))
     return plans

@@ -58,6 +58,7 @@ def plan_row(plan: CapacityPlan) -> dict:
     return _clean({
         "model": plan.model, "lam": plan.lam, "io_shape": plan.io_shape,
         "slo": plan.slo.describe() if plan.slo else None,
+        "availability": plan.avail.describe() if plan.avail else None,
         "feasible": plan.feasible,
         "n_feasible": len(plan.ranked),
         "n_rejected": len(plan.rejected),
@@ -98,6 +99,8 @@ def _ms(v: float) -> str:
 
 def _flags(o) -> str:
     out = []
+    if o.spares:
+        out.append(f"+{o.spares} spare(s) @ {o.availability:.4g} avail")
     if o.extrapolated:
         out.append("extrapolated")
     if not o.dense:
@@ -170,6 +173,9 @@ def render_plans(plans: Sequence[CapacityPlan], title: str = "") -> str:
         lines.append(f"=== capacity plan: {title} ===")
     if plans and plans[0].slo is not None:
         lines.append(f"SLO target: {plans[0].slo.describe()}")
+    if plans and plans[0].avail is not None:
+        lines.append(f"availability target: {plans[0].avail.describe()} "
+                     "— spares priced as utilization loss")
     for plan in plans:
         lines.append("")
         lines.append(render_plan(plan))

@@ -19,3 +19,6 @@ from repro.serving.fleet import (  # noqa: F401
     FleetEngine, FleetPoint, FleetStepModel, fleet_run_points)
 from repro.serving.metrics import MetricsRegistry  # noqa: F401
 from repro.serving.request import Request, RequestState  # noqa: F401
+from repro.serving.resilience import (  # noqa: F401
+    FailureEvent, FailureSpec, FailureStream, FailureTimeline, RetryPolicy,
+    as_failure_events)

@@ -38,14 +38,17 @@ straggler/failure story in DESIGN §5.
 from __future__ import annotations
 
 import dataclasses
+import heapq
 from collections import deque
-from typing import Deque, Dict, List, Optional, Sequence
+from typing import Deque, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.serving.kv_cache import PageManager
 from repro.serving.metrics import MetricsRegistry
 from repro.serving.request import Request, RequestState
+from repro.serving.resilience import (FailureSpec, FailureTimeline,
+                                      RetryPolicy, as_failure_events)
 
 
 @dataclasses.dataclass
@@ -59,6 +62,9 @@ class EngineConfig:
     max_retries: int = 2
     fast_forward: bool = True           # event-driven clock; False = per-token
     #                                     reference loop (the baseline/oracle)
+    # resilience knobs (ISSUE 6): zero = off, bit-identical to pre-6 engine
+    max_queue_depth: int = 0            # >0: shed arrivals over this depth
+    deadline_s: float = 0.0             # >0: queue-time deadline at admission
 
 
 class Engine:
@@ -87,6 +93,14 @@ class Engine:
         # time-weighted in-flight integral for Little's-law checks
         self._inflight_area = 0.0
         self._last_t = 0.0
+        # resilience state (ISSUE 6); all inert until a run enables them
+        self._fail_rng = None               # persistent victim stream
+        self._fail_stream = None            # FailureSpec event stream
+        self._down_until = 0.0              # restart lag: no admission before
+        self._retry: Optional[RetryPolicy] = None
+        self._retry_rng = None
+        self._retry_heap: List[Tuple[float, int, Request]] = []
+        self._in_retry: set = set()         # rids parked awaiting re-submit
         # scheduler instrumentation (bench_engine_throughput)
         self.n_iterations = 0
         self.n_decode_steps = 0
@@ -132,11 +146,33 @@ class Engine:
         if req.tpot is not None:
             self._h_tpot.observe(req.tpot)
 
+    def _sync_inflight_from_mirrors(self):
+        """Fast-path only: push the slot mirrors' decode progress back
+        onto the Request objects before an event that may terminate them
+        (a killed-past-budget request keeps its `tokens_out` at death,
+        and the reference loop keeps that field current per token)."""
+        for slot, r in self.slot_req.items():
+            r.tokens_out = int(self.tokens_out_arr[slot])
+
     def fail_running(self, frac: float = 1.0, rng=None):
-        """Simulate replica loss: re-queue `frac` of running requests."""
-        rng = rng or np.random.default_rng(0)
+        """Simulate replica loss: re-queue `frac` of running requests.
+
+        With `rng=None` victims come from a persistent engine-owned stream
+        seeded once per engine, so stacked failure events draw
+        consecutively and two engines given the same schedule pick the
+        same victims. `frac <= 0` loses nothing (the pre-ISSUE-6 code
+        failed one request); `frac >= 1` loses every running slot."""
+        if rng is None:
+            if self._fail_rng is None:
+                self._fail_rng = np.random.default_rng(0)
+            rng = self._fail_rng
         slots = list(self.slot_req)
-        n = max(1, int(len(slots) * frac)) if slots else 0
+        if not slots or frac <= 0.0:
+            n = 0
+        elif frac >= 1.0:
+            n = len(slots)
+        else:
+            n = max(1, int(len(slots) * frac))
         for slot in (rng.choice(slots, n, replace=False) if n else []):
             req = self.slot_req.pop(int(slot))
             self.pm.release(int(slot))
@@ -157,30 +193,119 @@ class Engine:
             else:
                 req.state = RequestState.FAILED
                 self.metrics.inc("repro:request_failure_total")
+                self._client_reject(req, self.t)
+
+    # ---- client-side retry / shedding (ISSUE 6) ----------------------
+    def _client_reject(self, req: Request, base_t: float):
+        """Client reaction to a shed/expired/failed request: re-submit
+        with capped exponential backoff if the RetryPolicy allows, else
+        abandon. `base_t` is the path-independent trigger time (arrival,
+        deadline expiry, failure event) so both scheduler paths schedule
+        bit-identical re-submission times."""
+        pol = self._retry
+        if pol is not None and pol.enabled and req.attempts < pol.max_attempts:
+            req.attempts += 1
+            if self._retry_rng is None:
+                self._retry_rng = np.random.default_rng(pol.seed)
+            at = base_t + pol.delay(req.attempts, self._retry_rng)
+            req.state = RequestState.QUEUED
+            req.slot = -1
+            req.prefill_done = 0
+            req.tokens_out = 0
+            req.first_token_time = None
+            req.retries = 0
+            req.submit_time = at
+            self._in_retry.add(req.rid)
+            heapq.heappush(self._retry_heap, (at, req.rid, req))
+            self.metrics.inc("repro:request_retry_total")
+        else:
+            req.state = RequestState.FAILED
+            self.metrics.inc("repro:request_abandoned_total")
+
+    def _accept(self, queue, req: Request):
+        """Arrival-time admission control: shed over max_queue_depth."""
+        mqd = self.cfg.max_queue_depth
+        if mqd > 0 and len(queue) >= mqd:
+            self.metrics.inc("repro:request_shed_total")
+            self._client_reject(req, req.submitted_at)
+        else:
+            queue.append(req)
+
+    def _next_submit(self, pending, pi: int) -> Optional[float]:
+        """Earliest future submission: next arrival or retry re-submit."""
+        nxt = pending[pi].arrival_time if pi < len(pending) else None
+        if self._retry_heap:
+            h = self._retry_heap[0][0]
+            nxt = h if nxt is None else min(nxt, h)
+        return nxt
+
+    def _drain_submissions(self, queue, pending, pi: int) -> int:
+        """Move every due submission (arrival or retry re-submit) into the
+        queue in global submission-time order (ties: arrivals first).
+        Both scheduler paths process submissions at different clock
+        granularities; merging by submission time keeps the FCFS order —
+        and thereby shed decisions — identical between them."""
+        heap = self._retry_heap
+        n = len(pending)
+        while True:
+            pa = pending[pi].arrival_time if pi < n else None
+            ha = heap[0][0] if heap else None
+            if (pa is not None and pa <= self.t
+                    and (ha is None or pa <= ha)):
+                self._accept(queue, pending[pi])
+                pi += 1
+            elif ha is not None and ha <= self.t:
+                _, _, req = heapq.heappop(heap)
+                self._in_retry.discard(req.rid)
+                self._accept(queue, req)
+            else:
+                return pi
 
     # ------------------------------------------------------------------
     def run(self, requests: Sequence[Request], *,
             horizon: Optional[float] = None,
-            failure_times: Sequence[float] = ()) -> List[Request]:
+            failure_times: Sequence[float] = (),
+            failure_spec: Optional[FailureSpec] = None,
+            retry: Optional[RetryPolicy] = None) -> List[Request]:
         """Open-loop run; returns the request list with timings filled.
 
         Re-entrant: calling run() again with the same list (e.g. under a
         meter-tick horizon loop) resumes — requests already admitted or
-        finished are not re-enqueued."""
+        finished are not re-enqueued; a FailureSpec stream keeps its
+        place across re-entry. `failure_times` accepts bare floats
+        (legacy: lose half the running slots) or FailureEvents."""
+        if retry is not None:
+            self._retry = retry if retry.enabled else None
+        if (failure_spec is not None and failure_spec.enabled
+                and self._fail_stream is None):
+            self._fail_stream = failure_spec.stream()
+        timeline = FailureTimeline(as_failure_events(failure_times),
+                                   self._fail_stream)
         if self.cfg.fast_forward and hasattr(self.ex, "decode_multi"):
             return self._run_fast(requests, horizon=horizon,
-                                  failure_times=failure_times)
+                                  timeline=timeline)
         return self._run_reference(requests, horizon=horizon,
-                                   failure_times=failure_times)
+                                   timeline=timeline)
 
     # ---- admission (shared helper) -----------------------------------
     def _admit_from(self, queue) -> List[Request]:
         batch: List[Request] = []
         budget = self.cfg.prefill_token_budget
-        while (queue and len(batch) < self.cfg.max_prefill_reqs and
-               (queue[0].prompt_len <= budget or not batch) and
-               self.pm.can_admit(queue[0].prompt_len,
-                                 queue[0].max_new_tokens)):
+        ddl = self.cfg.deadline_s
+        while queue:
+            if ddl > 0.0 and self.t - queue[0].submitted_at > ddl:
+                # queue-time deadline: expired heads are popped (they no
+                # longer block FCFS) and handed back to the client
+                req = (queue.popleft() if isinstance(queue, deque)
+                       else queue.pop(0))
+                self.metrics.inc("repro:request_timeout_total")
+                self._client_reject(req, req.submitted_at + ddl)
+                continue
+            if not (len(batch) < self.cfg.max_prefill_reqs and
+                    (queue[0].prompt_len <= budget or not batch) and
+                    self.pm.can_admit(queue[0].prompt_len,
+                                      queue[0].max_new_tokens)):
+                break
             req = queue.popleft() if isinstance(queue, deque) else queue.pop(0)
             slot = self.pm.admit(req.prompt_len, req.max_new_tokens)
             req.slot = slot
@@ -211,16 +336,18 @@ class Engine:
     # ---- fast path ----------------------------------------------------
     def _run_fast(self, requests: Sequence[Request], *,
                   horizon: Optional[float] = None,
-                  failure_times: Sequence[float] = ()) -> List[Request]:
+                  timeline: Optional[FailureTimeline] = None) -> List[Request]:
         B = self.cfg.max_batch
         pending = sorted(
             (r for r in requests
-             if r.state == RequestState.QUEUED and r.slot < 0),
+             if r.state == RequestState.QUEUED and r.slot < 0
+             and r.rid not in self._in_retry),
             key=lambda r: r.arrival_time)
         pi = 0                              # pending cursor (no pop(0))
         queue: Deque[Request] = deque()
-        fail_iter = iter(sorted(failure_times))
-        next_fail = next(fail_iter, None)
+        timeline = timeline or FailureTimeline(())
+        next_ev = timeline.peek()
+        ddl = self.cfg.deadline_s
         needs_tok = getattr(self.ex, "needs_tokens", True)
 
         # resync slot mirrors from request objects (re-entry / mode switch)
@@ -232,39 +359,51 @@ class Engine:
             self.tokens_out_arr[slot] = r.tokens_out
             self.max_new_arr[slot] = r.max_new_tokens
 
-        while pi < len(pending) or queue or self.slot_req or self._requeue:
+        while (pi < len(pending) or queue or self.slot_req or self._requeue
+               or self._retry_heap):
             self.n_iterations += 1
             if horizon is not None and self.t >= horizon:
                 break
             # failure injection
-            if next_fail is not None and self.t >= next_fail:
-                self.fail_running(0.5)
-                next_fail = next(fail_iter, None)
+            if next_ev is not None and self.t >= next_ev.time:
+                self._sync_inflight_from_mirrors()
+                self.fail_running(next_ev.frac)
+                if next_ev.downtime > 0.0:
+                    self._down_until = max(self._down_until,
+                                           next_ev.time + next_ev.downtime)
+                timeline.pop()
+                next_ev = timeline.peek()
             # idle regime (ISSUE 2): batch and queue both empty — jump the
-            # clock straight to the next arrival and admit it (plus any
-            # co-arrivals) in this same wakeup, instead of burning a whole
-            # scheduler iteration on the advance alone. The reference loop
-            # re-checks horizon and failure injection at the top of its
-            # next iteration before admitting, so replay those two checks
-            # here to keep the event order identical.
-            if (not self.slot_req and not queue and not self._requeue
-                    and pi < len(pending)
-                    and pending[pi].arrival_time > self.t):
-                self._advance(max(pending[pi].arrival_time - self.t, 1e-6))
-                if horizon is not None and self.t >= horizon:
-                    break
-                if next_fail is not None and self.t >= next_fail:
-                    self.fail_running(0.5)
-                    next_fail = next(fail_iter, None)
-            # arrivals
-            while pi < len(pending) and pending[pi].arrival_time <= self.t:
-                queue.append(pending[pi])
-                pi += 1
+            # clock straight to the next submission (arrival or retry
+            # re-submit) and admit it (plus any co-arrivals) in this same
+            # wakeup, instead of burning a whole scheduler iteration on
+            # the advance alone. The reference loop re-checks horizon and
+            # failure injection at the top of its next iteration before
+            # admitting, so replay those two checks here to keep the
+            # event order identical.
+            if not self.slot_req and not queue and not self._requeue:
+                nxt_sub = self._next_submit(pending, pi)
+                if nxt_sub is not None and nxt_sub > self.t:
+                    self._advance(max(nxt_sub - self.t, 1e-6))
+                    if horizon is not None and self.t >= horizon:
+                        break
+                    if next_ev is not None and self.t >= next_ev.time:
+                        self._sync_inflight_from_mirrors()
+                        self.fail_running(next_ev.frac)
+                        if next_ev.downtime > 0.0:
+                            self._down_until = max(
+                                self._down_until,
+                                next_ev.time + next_ev.downtime)
+                        timeline.pop()
+                        next_ev = timeline.peek()
+            # arrivals (client re-submissions are arrivals too)
+            pi = self._drain_submissions(queue, pending, pi)
             if self._requeue:
                 queue.extendleft(reversed(self._requeue))
                 self._requeue = []
 
-            batch = self._admit_from(queue)
+            blocked = self.t < self._down_until   # restart/warmup lag
+            batch = [] if blocked else self._admit_from(queue)
             did_work = False
             if batch:
                 lens = np.zeros(B, np.int32)
@@ -308,12 +447,19 @@ class Engine:
                            self.tokens_out_arr[self.active])
                     k_max = int(rem.min())
                     cands = []
-                    if not queue and pi < len(pending):
-                        # arrivals only matter while nothing is queued: a
-                        # blocked FCFS head keeps newcomers unadmittable
-                        cands.append(pending[pi].arrival_time - self.t)
-                    if next_fail is not None:
-                        cands.append(next_fail - self.t)
+                    if not queue:
+                        # submissions only matter while nothing is queued:
+                        # a blocked FCFS head keeps newcomers unadmittable
+                        nxt_sub = self._next_submit(pending, pi)
+                        if nxt_sub is not None:
+                            cands.append(nxt_sub - self.t)
+                    if next_ev is not None:
+                        cands.append(next_ev.time - self.t)
+                    if blocked and (queue or self._requeue):
+                        cands.append(self._down_until - self.t)
+                    if ddl > 0.0 and queue and not blocked:
+                        # head expiry unblocks FCFS: it is an event
+                        cands.append(queue[0].submitted_at + ddl - self.t)
                     if horizon is not None:
                         cands.append(horizon - self.t)
                     tbudget = min(cands) if cands else None
@@ -342,9 +488,16 @@ class Engine:
                 did_work = True
 
             if not did_work:
-                if pi < len(pending):
-                    gap = max(pending[pi].arrival_time - self.t, 1e-6)
-                    self._advance(gap)
+                cands = []
+                nxt_sub = self._next_submit(pending, pi)
+                if nxt_sub is not None:
+                    cands.append(nxt_sub)
+                if blocked and (queue or self._requeue):
+                    cands.append(self._down_until)
+                if ddl > 0.0 and queue and not blocked:
+                    cands.append(queue[0].submitted_at + ddl)
+                if cands:
+                    self._advance(max(min(cands) - self.t, 1e-6))
                 elif queue:
                     raise RuntimeError(
                         "scheduler stall: queued request cannot ever fit; "
@@ -362,30 +515,39 @@ class Engine:
     # ---- reference path (the executable spec / benchmark baseline) ----
     def _run_reference(self, requests: Sequence[Request], *,
                        horizon: Optional[float] = None,
-                       failure_times: Sequence[float] = ()) -> List[Request]:
+                       timeline: Optional[FailureTimeline] = None
+                       ) -> List[Request]:
         pending = sorted(
             (r for r in requests
-             if r.state == RequestState.QUEUED and r.slot < 0),
+             if r.state == RequestState.QUEUED and r.slot < 0
+             and r.rid not in self._in_retry),
             key=lambda r: r.arrival_time)
+        pi = 0
         queue: List[Request] = []
-        fail_iter = iter(sorted(failure_times))
-        next_fail = next(fail_iter, None)
+        timeline = timeline or FailureTimeline(())
+        next_ev = timeline.peek()
+        ddl = self.cfg.deadline_s
 
-        while pending or queue or self.slot_req or self._requeue:
+        while (pi < len(pending) or queue or self.slot_req or self._requeue
+               or self._retry_heap):
             self.n_iterations += 1
             if horizon is not None and self.t >= horizon:
                 break
             # failure injection
-            if next_fail is not None and self.t >= next_fail:
-                self.fail_running(0.5)
-                next_fail = next(fail_iter, None)
-            # arrivals
-            while pending and pending[0].arrival_time <= self.t:
-                queue.append(pending.pop(0))
+            if next_ev is not None and self.t >= next_ev.time:
+                self.fail_running(next_ev.frac)
+                if next_ev.downtime > 0.0:
+                    self._down_until = max(self._down_until,
+                                           next_ev.time + next_ev.downtime)
+                timeline.pop()
+                next_ev = timeline.peek()
+            # arrivals (client re-submissions are arrivals too)
+            pi = self._drain_submissions(queue, pending, pi)
             queue = self._requeue + queue
             self._requeue = []
 
-            batch = self._admit_from(queue)
+            blocked = self.t < self._down_until   # restart/warmup lag
+            batch = [] if blocked else self._admit_from(queue)
             did_work = False
             if batch:
                 B = self.cfg.max_batch
@@ -443,9 +605,16 @@ class Engine:
                 did_work = True
 
             if not did_work:
-                if pending:
-                    gap = max(pending[0].arrival_time - self.t, 1e-6)
-                    self._advance(gap)
+                cands = []
+                nxt_sub = self._next_submit(pending, pi)
+                if nxt_sub is not None:
+                    cands.append(nxt_sub)
+                if blocked and (queue or self._requeue):
+                    cands.append(self._down_until)
+                if ddl > 0.0 and queue and not blocked:
+                    cands.append(queue[0].submitted_at + ddl)
+                if cands:
+                    self._advance(max(min(cands) - self.t, 1e-6))
                 elif queue:
                     # queued but cannot admit (capacity) and nothing
                     # running -> deadlock guard (shouldn't happen)

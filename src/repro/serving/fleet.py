@@ -71,6 +71,13 @@ class FleetPoint:
     quant: str = "bf16"
     engine_kind: str = "sim"
     price_per_hr: float = 1.0
+    # resilience (ISSUE 6): lanes with a stochastic failure process,
+    # client retries, shedding or deadlines run through the scalar engine
+    # per lane (fleet_run_points routes them) — the SoA loop's contiguous
+    # queue cursors cannot express retry feedback, and per-lane fallback
+    # keeps the RNG streams trivially identical to run_point's
+    failure_spec: Optional["FailureSpec"] = None
+    retry: Optional["RetryPolicy"] = None
 
 
 # ---------------------------------------------------------------------------
@@ -245,6 +252,10 @@ class FleetEngine:
         # slot_req insertion order, kept only where failure injection can
         # read it (fail_running's rng.choice walks admission order)
         self.occ_order: List[Optional[Dict[int, None]]] = [None] * B
+        # persistent per-lane victim streams, mirroring the scalar
+        # engine's `_fail_rng` (seeded once, consecutive draws across
+        # stacked failure events)
+        self.fail_rngs: List[Optional[np.random.Generator]] = [None] * B
         self.requeue: List[List[int]] = [[] for _ in range(B)]
         self.n_requeue = np.zeros(B, np.int64)
         # scheduler instrumentation (bench surface)
@@ -320,13 +331,16 @@ class FleetEngine:
                              if self.fail_idx[i] < len(fl) else np.inf)
 
     def _fail_lane(self, i: int, frac: float):
-        """Mirror of `Engine.fail_running(frac)` for one lane (fresh
-        `default_rng(0)`, choice over slots in admission order)."""
+        """Mirror of `Engine.fail_running(frac)` for one lane (persistent
+        per-lane `default_rng(0)` stream, choice over slots in admission
+        order, exact frac=0/1 handling — all matching the scalar)."""
         slots = list(self.occ_order[i])
-        n = max(1, int(len(slots) * frac)) if slots else 0
-        if not n:
+        if not slots or frac <= 0.0:
             return
-        rng = np.random.default_rng(0)
+        n = len(slots) if frac >= 1.0 else max(1, int(len(slots) * frac))
+        if self.fail_rngs[i] is None:
+            self.fail_rngs[i] = np.random.default_rng(0)
+        rng = self.fail_rngs[i]
         requeued: List[int] = []
         for slot in rng.choice(slots, n, replace=False):
             slot = int(slot)
@@ -820,14 +834,40 @@ def _lane_record(eng: FleetEngine, i: int, p: FleetPoint) -> "RunRecord":
         mean_inflight=mean_inflight,
         price_per_hr=p.price_per_hr,
         c_eff=c_eff(p.price_per_hr, tps),
-        seed=spec.seed)
+        seed=spec.seed,
+        mttf=p.failure_spec.mttf if p.failure_spec is not None else 0.0,
+        retry_max=p.retry.max_attempts if p.retry is not None else 0,
+        n_shed=0, n_timeout=0, n_retried=0, n_abandoned=0)
+
+
+def _needs_scalar(p: FleetPoint) -> bool:
+    """Lanes the SoA loop cannot express (retry feedback, shedding,
+    deadlines, stochastic failure streams) run per-lane through the
+    scalar engine — the explicitly sanctioned fallback, RNG streams
+    identical to `run_point` by construction."""
+    return ((p.failure_spec is not None and p.failure_spec.enabled)
+            or (p.retry is not None and p.retry.enabled)
+            or getattr(p.engine, "max_queue_depth", 0) > 0
+            or getattr(p.engine, "deadline_s", 0.0) > 0.0)
+
+
+def _scalar_point(p: FleetPoint) -> "RunRecord":
+    from repro.core.sweep import run_point
+    return run_point(
+        p.engine, p.arrivals, warmup=p.warmup, horizon=p.horizon,
+        failure_times=p.failure_times, failure_spec=p.failure_spec,
+        retry=p.retry, config=p.config, model=p.model, hw=p.hw,
+        n_chips=p.n_chips, quant=p.quant, engine_kind=p.engine_kind,
+        price_per_hr=p.price_per_hr)
 
 
 def fleet_run_points(points: Sequence[FleetPoint],
                      on_result=None) -> List["RunRecord"]:
     """Run every point as one lane of one vectorized fleet; returns
     RunRecords equal (field-for-field, bit-for-bit) to running
-    `core.sweep.run_point` on each point independently.
+    `core.sweep.run_point` on each point independently. Points with
+    resilience features enabled (`_needs_scalar`) are executed through
+    the scalar engine per lane, after the vectorized lanes.
 
     `on_result(index, record)` streams each lane's record the moment the
     lane finishes its measured phase — the store hook for per-cell
@@ -836,6 +876,25 @@ def fleet_run_points(points: Sequence[FleetPoint],
     flight, not the whole chunk)."""
     if not points:
         return []
+    scalar_ids = [i for i, p in enumerate(points) if _needs_scalar(p)]
+    if scalar_ids:
+        lane_ids = [i for i in range(len(points)) if i not in
+                    set(scalar_ids)]
+        out: List[Optional["RunRecord"]] = [None] * len(points)
+        if lane_ids:
+            sub = [points[i] for i in lane_ids]
+
+            def _sub_result(j: int, rec):
+                out[lane_ids[j]] = rec
+                if on_result is not None:
+                    on_result(lane_ids[j], rec)
+
+            fleet_run_points(sub, on_result=_sub_result)
+        for i in scalar_ids:
+            out[i] = _scalar_point(points[i])
+            if on_result is not None:
+                on_result(i, out[i])
+        return list(out)
     eng = FleetEngine([p.engine for p in points])
     # warmup phase (per-lane stream seed + 7777, no horizon/failures),
     # exactly run_point's protocol; warmup-free lanes sit it out

@@ -30,7 +30,15 @@ class Request:
     first_token_time: Optional[float] = None
     finish_time: Optional[float] = None
     prev_token_time: Optional[float] = None
-    retries: int = 0
+    retries: int = 0                          # engine-side failure requeues
+    attempts: int = 0                         # client-side re-submissions
+    submit_time: Optional[float] = None       # last (re)submission; None ->
+    #                                           arrival_time (first attempt)
+
+    @property
+    def submitted_at(self) -> float:
+        return (self.arrival_time if self.submit_time is None
+                else self.submit_time)
 
     @property
     def ttft(self) -> Optional[float]:

@@ -1,0 +1,645 @@
+"""Resilience layer (ISSUE 6): chaos + equivalence tests.
+
+Pricing reliability is only trustworthy if the failure machinery is
+deterministic and path-independent, so the suite leans on the repo's
+equivalence discipline rather than statistics:
+
+* `fail_running` — exact frac=0/1 semantics, engine-seeded victim
+  stream determinism, `FailureStream` reproducibility.
+* fast-forward vs per-token reference equivalence under crash/recovery,
+  client retries (incl. jitter), shedding and deadlines — the same
+  contract ISSUE 1 established for the failure-free engine.
+* fleet lanes vs the scalar engine: bit-identical RunRecords under
+  FailureSpec/RetryPolicy (per-lane fallback path).
+* conservation identities: every reject (shed/timeout/engine-kill) is
+  answered by exactly one client decision (retry or abandon), and every
+  original request terminates (success or abandonment).
+* runner chaos: wedged workers time out, killed pools re-dispatch within
+  the per-cell retry budget, `kill -9` mid-chunk resumes byte-identical.
+* `store.verify` + the `--verify` CLI exit contract.
+* planner availability pricing: exact binomial spares, and the flip case
+  where the failure-free-cheapest footprint loses under 99.9%.
+"""
+import dataclasses
+import json
+import multiprocessing
+import os
+import signal
+import subprocess
+import sys
+import time
+import warnings
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.records import RunRecord
+from repro.core.sweep import SimEngineSpec, run_point
+from repro.experiments import (ExperimentStore, GridSpec, PlanRunner,
+                               get_plan)
+from repro.experiments.analyze import reliability_tables
+from repro.experiments.run import main as run_main
+import repro.experiments.runner as runner_mod
+from repro.experiments.runner import run_cell, shutdown_pool
+from repro.planner import (AvailabilityTarget, fit_curves, plan_capacity,
+                           spares_needed)
+from repro.serving import (ArrivalSpec, Engine, EngineConfig, SimExecutor,
+                           synth_requests)
+from repro.serving.fleet import FleetPoint, fleet_run_points
+from repro.serving.request import Request, RequestState
+from repro.serving.resilience import FailureSpec, RetryPolicy
+from repro.simulate import StepTimeModel, V5E
+
+RTOL = 1e-9
+
+# the full reject/answer counter set (ISSUE 6) + the pre-existing ones
+COUNTERS = ("repro:request_success_total",
+            "repro:request_preempted_total",
+            "repro:request_failure_total",
+            "repro:request_retry_total",
+            "repro:request_abandoned_total",
+            "repro:request_shed_total",
+            "repro:request_timeout_total",
+            "repro:generation_tokens_total")
+
+
+def _engine(fast_forward=True, arch="llama31-8b", max_batch=32,
+            num_pages=8192, **ecfg_kw):
+    cfg = get_config(arch)
+    stm = StepTimeModel(cfg, V5E)
+    return Engine(EngineConfig(max_batch=max_batch, page_size=16,
+                               num_pages=num_pages, max_pages_per_seq=64,
+                               fast_forward=fast_forward, **ecfg_kw),
+                  SimExecutor(cfg, stm))
+
+
+# ---- fail_running: exact fracs + deterministic victim stream ----------
+
+
+def _half_run(seed=0):
+    """An engine stopped mid-flight (horizon) with requests still in
+    slots — the re-entrant state fail_running operates on."""
+    eng = _engine()
+    reqs = synth_requests(ArrivalSpec(lam=40, n_requests=80, seed=seed))
+    eng.run(reqs, horizon=1.0)
+    assert eng.slot_req, "horizon left no in-flight work; bad fixture"
+    return eng, reqs
+
+
+def test_fail_running_exact_zero_and_one():
+    eng, _ = _half_run()
+    n_running = len(eng.slot_req)
+    eng.fail_running(0.0)
+    assert eng.metrics.get("repro:request_preempted_total") == 0
+    assert len(eng.slot_req) == n_running        # frac=0 loses nothing
+    eng.fail_running(1.0)
+    assert eng.metrics.get("repro:request_preempted_total") == n_running
+    assert not eng.slot_req                      # frac=1 loses every slot
+
+
+def test_fail_running_engine_seeded_stream_is_deterministic():
+    """Same engine state => same victims, across stacked events, with
+    no rng passed (the engine owns one persistent stream)."""
+    victims = []
+    for _ in range(2):
+        eng, reqs = _half_run(seed=3)
+        before = dict(eng.slot_req)
+        eng.fail_running(0.5)
+        eng.fail_running(0.5)        # second draw continues the stream
+        gone = [s for s in before if s not in eng.slot_req]
+        victims.append(sorted(before[s].rid for s in gone))
+    assert victims[0] == victims[1] and victims[0]
+
+
+def test_fail_running_explicit_rng_overrides_engine_stream():
+    victims = []
+    for _ in range(2):
+        eng, _ = _half_run(seed=3)
+        before = dict(eng.slot_req)
+        eng.fail_running(0.5, rng=np.random.default_rng(7))
+        victims.append(sorted(before[s].rid for s in before
+                              if s not in eng.slot_req))
+    assert victims[0] == victims[1] and victims[0]
+
+
+def test_failure_stream_deterministic_and_mttf_scaled():
+    spec = FailureSpec(mttf=10.0, mttr=2.0, loss_frac=0.3, seed=5)
+    a = [spec.stream().pop() for _ in range(1)]
+    runs = []
+    for _ in range(2):
+        s = spec.stream()
+        runs.append([s.pop() for _ in range(6)])
+    assert runs[0] == runs[1]
+    times = [e.time for e in runs[0]]
+    assert times == sorted(times) and times[0] > 0.0
+    assert all(e.downtime >= 0.0 and e.frac == 0.3 for e in runs[0])
+    assert a[0] == runs[0][0]
+    # same seed, 2x mttf => the first crash lands 2x later (scaled draws)
+    s2 = dataclasses.replace(spec, mttf=20.0).stream()
+    assert np.isclose(s2.pop().time, 2.0 * runs[0][0].time, rtol=1e-12)
+    # peek does not consume
+    s = spec.stream()
+    assert s.peek() is s.peek() and s.pop() == runs[0][0]
+    assert spec.availability() == pytest.approx(10.0 / 12.0)
+
+
+def test_failure_spec_disabled_is_inert():
+    off = FailureSpec(mttf=0.0, mttr=5.0, seed=1)
+    assert not off.enabled and off.availability() == 1.0
+    assert off.stream().peek() is None and off.stream().pop() is None
+
+
+# ---- fast-forward vs reference under the resilience layer -------------
+
+
+def _run_pair(spec, *, failure_spec=None, retry=None, horizon=None, **ekw):
+    out = []
+    for ff in (False, True):
+        eng = _engine(ff, **ekw)
+        reqs = synth_requests(spec)
+        eng.run(reqs, horizon=horizon, failure_spec=failure_spec,
+                retry=retry)
+        out.append((eng, reqs))
+    return out
+
+
+def _assert_equivalent(ref, fast):
+    (eref, rref), (efast, rfast) = ref, fast
+    assert abs(eref.t - efast.t) <= RTOL * max(1.0, eref.t)
+    for a, b in zip(rref, rfast):
+        assert a.state == b.state, (a.rid, a.state, b.state)
+        assert a.tokens_out == b.tokens_out
+        assert a.retries == b.retries
+        assert a.attempts == b.attempts
+        for ta, tb in ((a.finish_time, b.finish_time),
+                       (a.first_token_time, b.first_token_time),
+                       (a.submit_time, b.submit_time)):
+            assert (ta is None) == (tb is None)
+            if ta is not None:
+                assert abs(ta - tb) <= RTOL * max(1.0, abs(ta))
+    for key in COUNTERS:
+        assert eref.metrics.get(key) == efast.metrics.get(key), key
+
+
+RESIL_CASES = [
+    pytest.param(
+        dict(lam=20, n_requests=80, seed=0),
+        dict(failure_spec=FailureSpec(mttf=2.0, mttr=0.5, seed=3)),
+        {}, "repro:request_preempted_total", id="crash-recovery"),
+    pytest.param(
+        dict(lam=20, n_requests=80, seed=1),
+        dict(failure_spec=FailureSpec(mttf=1.5, mttr=0.25, seed=4),
+             retry=RetryPolicy(max_attempts=3, base_delay_s=0.25, seed=11)),
+        dict(max_retries=0), "repro:request_retry_total",
+        id="crash-plus-client-retry"),
+    pytest.param(
+        dict(lam=120, n_requests=150, seed=2),
+        dict(retry=RetryPolicy(max_attempts=2, base_delay_s=0.5, seed=9)),
+        dict(max_queue_depth=4, max_batch=8, num_pages=2048),
+        "repro:request_shed_total", id="shed-plus-retry"),
+    pytest.param(
+        dict(lam=60, n_requests=120, seed=5),
+        dict(retry=RetryPolicy(max_attempts=2, base_delay_s=0.25,
+                               jitter_s=0.2, seed=13)),
+        dict(deadline_s=0.4, max_batch=8, num_pages=2048),
+        "repro:request_timeout_total", id="deadline-plus-jittered-retry"),
+    pytest.param(
+        dict(lam=50, n_requests=120, seed=6, process="gamma", cv=2.0),
+        dict(failure_spec=FailureSpec(mttf=1.0, mttr=0.5, loss_frac=0.7,
+                                      seed=21),
+             retry=RetryPolicy(max_attempts=3, base_delay_s=0.25,
+                               jitter_s=0.1, seed=22)),
+        dict(max_queue_depth=16, deadline_s=1.0, max_retries=1,
+             max_batch=8, num_pages=2048),
+        "repro:request_abandoned_total", id="everything-at-once"),
+]
+
+
+@pytest.mark.parametrize("case,runkw,ekw,exercised", RESIL_CASES)
+def test_fast_forward_matches_reference_under_resilience(
+        case, runkw, ekw, exercised):
+    ref, fast = _run_pair(ArrivalSpec(**case), **runkw, **ekw)
+    _assert_equivalent(ref, fast)
+    # the scenario must actually trip its failure mode on both paths
+    assert ref[0].metrics.get(exercised) > 0, exercised
+
+
+@pytest.mark.parametrize("case,runkw,ekw,exercised", RESIL_CASES)
+def test_conservation_identities(case, runkw, ekw, exercised):
+    """Every reject is answered exactly once, every original request
+    terminates: shed + timeout + engine-kill == retry + abandoned, and
+    success + abandoned == n_requests."""
+    eng = _engine(True, **ekw)
+    reqs = synth_requests(ArrivalSpec(**case))
+    eng.run(reqs, **runkw)
+    m = eng.metrics
+    rejects = (m.get("repro:request_shed_total")
+               + m.get("repro:request_timeout_total")
+               + m.get("repro:request_failure_total"))
+    answers = (m.get("repro:request_retry_total")
+               + m.get("repro:request_abandoned_total"))
+    assert rejects == answers and rejects > 0
+    assert (m.get("repro:request_success_total")
+            + m.get("repro:request_abandoned_total")) == len(reqs)
+    # client attempt bookkeeping mirrors the retry counter exactly
+    assert m.get("repro:request_retry_total") == \
+        sum(r.attempts for r in reqs)
+    for r in reqs:
+        assert (r.finish_time is not None) == (r.state == RequestState.DONE)
+        assert r.state in (RequestState.DONE, RequestState.FAILED)
+
+
+def test_resilience_off_is_bit_identical_to_pre_issue6_engine():
+    """Zero-cost when off: passing disabled spec/policy objects must not
+    perturb a single scheduling decision or metric."""
+    spec = ArrivalSpec(lam=25, n_requests=100, seed=8)
+    plain = _engine(True)
+    reqs_a = synth_requests(spec)
+    plain.run(reqs_a)
+    guarded = _engine(True)
+    reqs_b = synth_requests(spec)
+    guarded.run(reqs_b, failure_spec=FailureSpec(mttf=0.0, seed=99),
+                retry=RetryPolicy(max_attempts=0, seed=99))
+    assert repr(plain.t) == repr(guarded.t)
+    for a, b in zip(reqs_a, reqs_b):
+        assert repr(a.finish_time) == repr(b.finish_time)
+    for key in COUNTERS:
+        assert plain.metrics.get(key) == guarded.metrics.get(key)
+
+
+def test_preempted_request_requeues_at_fcfs_position():
+    """A crash victim re-enters the queue ahead of later arrivals (its
+    FCFS position follows its original arrival), not at the tail."""
+    eng = _engine(True, max_batch=1, num_pages=2048)
+    reqs = [Request(rid=i, arrival_time=t, prompt_len=64,
+                    max_new_tokens=64)
+            for i, t in enumerate((0.0, 0.01, 0.02))]
+    eng.run(reqs, failure_times=[0.2])
+    assert eng.metrics.get("repro:request_preempted_total") == 1
+    assert reqs[0].retries == 1
+    # rid 0 restarts before rid 1 ever gets the slot
+    assert reqs[0].finish_time < reqs[1].first_token_time
+    assert reqs[1].finish_time < reqs[2].first_token_time
+
+
+# ---- record-level counters + retry amplification ----------------------
+
+
+def test_run_point_records_resilience_counters():
+    fac = SimEngineSpec("llama31-8b", max_batch=16, num_pages=4096,
+                        max_queue_depth=8, deadline_s=1.0)
+    spec = ArrivalSpec(lam=40, n_requests=120, seed=4)
+    rec = run_point(fac, spec, config="C", model="llama31-8b",
+                    hw="tpu-v5e",
+                    failure_spec=FailureSpec(mttf=1.0, mttr=0.5, seed=7),
+                    retry=RetryPolicy(max_attempts=3, base_delay_s=0.25,
+                                      seed=8))
+    assert rec.n_retried > 0 and rec.retry_amplification > 1.0
+    assert rec.n_completed + rec.n_abandoned == rec.n_requests
+    assert rec.goodput_rps == pytest.approx(
+        rec.n_completed / rec.window_s)
+    # the failure-free twin of the same arrivals delivers more, cheaper
+    base = run_point(SimEngineSpec("llama31-8b", max_batch=16,
+                                   num_pages=4096),
+                     spec, config="C", model="llama31-8b", hw="tpu-v5e")
+    assert base.n_completed >= rec.n_completed
+    assert base.c_eff <= rec.c_eff
+    assert base.n_shed == base.n_timeout == base.n_retried == 0
+
+
+# ---- fleet lanes vs scalar under failure/retry ------------------------
+
+
+def _points(cells):
+    return [FleetPoint(engine=c.engine_spec(), arrivals=c.arrival_spec(),
+                       warmup=c.warmup, horizon=c.horizon,
+                       failure_times=c.failure_times,
+                       failure_spec=c.failure_spec(),
+                       retry=c.retry_policy(), **c.record_kw())
+            for c in cells]
+
+
+def _assert_records_equal(xs, ys, ctx=""):
+    assert len(xs) == len(ys)
+    for a, b in zip(xs, ys):
+        da, db = dataclasses.asdict(a), dataclasses.asdict(b)
+        for key in da:
+            assert repr(da[key]) == repr(db[key]), \
+                (ctx, a.model, a.lam, key, da[key], db[key])
+
+
+def test_fleet_matches_scalar_under_failure_and_retry():
+    cells = list(get_plan("mini_resilience").cells)
+    scalar = [run_cell(c) for c in cells]
+    fleet = fleet_run_points(_points(cells))
+    _assert_records_equal(scalar, fleet, "mini_resilience")
+    assert any(r.n_retried > 0 for r in scalar)       # chaos actually ran
+    base = next(r for r in scalar if r.mttf == 0 and r.retry_max == 0)
+    assert all(r.c_eff >= base.c_eff - 1e-12
+               for r in scalar if r.mttf > 0)         # failures inflate
+
+
+# ---- experiment plans: pairing + zero-cost-off ------------------------
+
+
+def test_resilience_plans_expand_with_paired_seeds():
+    plan = get_plan("paper_resilience")
+    assert len(plan.cells) == 35
+    resil = [c for c in plan.cells if c.resilient]
+    assert len(resil) == 21
+    base_by_key = {(c.seed_key, c.lam): c for c in plan.cells
+                   if not c.resilient}
+    for c in resil:
+        assert "_mttf" in c.cell_id
+        twin = base_by_key[(c.seed_key, c.lam)]
+        # resilience axes are excluded from seed derivation: a resilient
+        # cell replays its failure-free sibling's arrival stream, so
+        # inflation is a paired comparison, not arrival noise
+        assert c.seed == twin.seed and c.cell_id != twin.cell_id
+    mini = get_plan("mini_resilience")
+    assert len(mini.cells) == 4
+    assert sum(c.resilient for c in mini.cells) == 3
+    # zero-cost when off: a non-resilient cell carries no failure state
+    for c in plan.cells:
+        if not c.resilient:
+            assert c.mttf == 0.0 and c.mttr == 0.0 and c.retry_max == 0
+            assert c.failure_spec() is None and c.retry_policy() is None
+
+
+def test_resilience_axes_default_off_preserves_historical_seeds():
+    spec = GridSpec(name="m", archs=("llama31-8b",), hws=("tpu-v5e",),
+                    quants=("bf16",), ladder=(5, 50), seed=0,
+                    protocol="smoke", max_batch=64, num_pages=8192)
+    a = spec.expand()
+    b = dataclasses.replace(spec, mttfs=(0.0,), retry_maxes=(0,)).expand()
+    assert [c.seed for c in a.cells] == [c.seed for c in b.cells]
+    assert [c.cell_id for c in a.cells] == [c.cell_id for c in b.cells]
+    assert not any(c.resilient for c in a.cells)
+
+
+# ---- reliability tables ----------------------------------------------
+
+
+def _rec(lam, c_eff, *, mttf=0.0, retry_max=0, n_completed=100,
+         n_retried=0, tps=100.0, hw="hw"):
+    return RunRecord(
+        config="C", model="m", hw=hw, n_chips=1, quant="bf16",
+        engine="sim", lam=lam, io_shape="fixed", n_requests=100,
+        n_completed=n_completed, window_s=10.0, tps=tps, prompt_tps=tps,
+        ttft_p50_ms=50.0, ttft_p90_ms=90.0, ttft_p99_ms=99.0,
+        tpot_p50_ms=10.0, tpot_p99_ms=20.0, e2e_p50_ms=500.0,
+        e2e_p99_ms=900.0, mean_inflight=2.0, price_per_hr=1.0,
+        c_eff=c_eff, theta_max=200.0, mttf=mttf, retry_max=retry_max,
+        n_retried=n_retried)
+
+
+def test_reliability_tables_inflation_and_ordering():
+    recs = [_rec(10, 0.20),
+            _rec(10, 0.30, mttf=5.0, n_completed=80),
+            _rec(10, 0.25, mttf=10.0, n_completed=90, retry_max=3,
+                 n_retried=40)]
+    rows = reliability_tables(recs)
+    assert len(rows) == 2                     # baseline row excluded
+    # ascending failure *rate*: mttf=10 (rate .1) before mttf=5 (rate .2)
+    assert [r["mttf"] for r in rows] == [10.0, 5.0]
+    assert rows[0]["c_eff_inflation"] == pytest.approx(0.25 / 0.20)
+    assert rows[1]["c_eff_inflation"] == pytest.approx(0.30 / 0.20)
+    assert rows[0]["retry_amplification"] == pytest.approx(1.4)
+    assert rows[0]["delivered_frac"] == pytest.approx(0.9)
+    assert rows[1]["n_retried"] == 0
+
+
+def test_committed_paper_resilience_store_prices_reliability():
+    """The committed artifact satisfies the acceptance shape: inflation
+    >= 1.0 and monotone in failure rate at fixed (lambda, retry budget),
+    amplification > 1.0 somewhere under failures with retries."""
+    store = ExperimentStore("paper_resilience")
+    plan = get_plan("paper_resilience")
+    if store.completed_ids(plan) != {c.cell_id for c in plan.cells}:
+        pytest.skip("paper_resilience store not committed/complete")
+    rows = reliability_tables(store.load_records(plan))
+    assert rows
+    by_block = {}
+    for r in rows:
+        by_block.setdefault(
+            (r["model"], r["hw"], r["n_chips"], r["lam"],
+             r["retry_max"]), []).append(r)
+    for block in by_block.values():
+        infl = [r["c_eff_inflation"] for r in block]
+        assert all(x >= 1.0 - 1e-9 for x in infl), block
+        assert infl == sorted(infl), block        # monotone in 1/mttf
+    assert any(r["retry_amplification"] > 1.0 for r in rows
+               if r["retry_max"] > 0 and r["mttf"] > 0)
+
+
+# ---- planner: availability pricing ------------------------------------
+
+
+def test_spares_needed_exact_binomial():
+    t = AvailabilityTarget(availability=0.999, replica_availability=0.99)
+    assert spares_needed(1, t) == 1     # 1 - 0.01^2 = 0.9999 >= 0.999
+    assert spares_needed(2, t) == 1
+    assert spares_needed(8, t) == 2
+    assert spares_needed(3, AvailabilityTarget(0.9, 0.99)) == 0
+    # 8-of-N active at 10% replica availability: no spare count reaches
+    # three nines within the _MAX_SPARES cap
+    assert spares_needed(8, AvailabilityTarget(0.999, 0.1)) is None
+
+
+def test_availability_flips_the_cheapest_footprint():
+    """The ISSUE-6 planner property: when c(lam/2)/c(lam) < (R+1+s')/
+    (R+s) economics, the failure-free winner (R=1) loses to R=2 once a
+    spare must be bought — the cost of reliability is a ranking change,
+    not just a markup."""
+    recs = [_rec(10, 0.30), _rec(20, 0.25),
+            # resilient rows at the same coords must NOT disturb curves
+            _rec(20, 0.60, mttf=5.0, n_completed=50)]
+    curves = fit_curves(recs)
+    assert len(curves) == 1 and len(curves[0].records) == 2
+    free = plan_capacity(curves, 20.0, max_replicas=2)[0]
+    assert free.best.replicas == 1 and free.best.spares == 0
+    assert free.best.c_eff == pytest.approx(0.25)
+    avail = AvailabilityTarget(availability=0.999,
+                               replica_availability=0.99)
+    priced = plan_capacity(curves, 20.0, max_replicas=2, avail=avail)[0]
+    assert priced.avail is avail and priced.mix is None
+    assert priced.best.replicas == 2 and priced.best.spares == 1
+    # R=2 + 1 spare: 0.25@lam10 * 3/2 = 0.375 < R=1 + 1 spare: 0.25*2
+    assert priced.best.c_eff == pytest.approx(0.30 * 3 / 2)
+    assert priced.best.fleet_price_per_hr == pytest.approx(3.0)
+    loser = [o for o in priced.ranked if o.replicas == 1][0]
+    assert loser.spares == 1 and loser.c_eff == pytest.approx(0.50)
+    assert priced.best.availability >= 0.999
+
+
+def test_committed_store_flip_at_lambda_30():
+    """On the committed paper_resilience curves the v5e x2 footprint's
+    cheapest replica count flips at lambda=30 under 99.9%."""
+    store = ExperimentStore("paper_resilience")
+    plan = get_plan("paper_resilience")
+    if store.completed_ids(plan) != {c.cell_id for c in plan.cells}:
+        pytest.skip("paper_resilience store not committed/complete")
+    curves = [c for c in fit_curves(store.load_records(plan))
+              if c.hw == "tpu-v5e"]
+    free = plan_capacity(curves, 30.0)[0]
+    avail = AvailabilityTarget(0.999, 0.99)
+    priced = plan_capacity(curves, 30.0, avail=avail)[0]
+    key_free = (free.best.hw, free.best.n_chips, free.best.replicas)
+    key_avail = (priced.best.hw, priced.best.n_chips,
+                 priced.best.replicas)
+    assert key_free != key_avail
+    assert priced.best.spares >= 1
+
+
+# ---- runner chaos: wedged workers, pool suicide, re-dispatch budget ---
+
+
+def _mini_plan(**over):
+    kw = dict(name="mini_resil_runner", archs=("llama31-8b",),
+              hws=("tpu-v5e",), quants=("bf16",), ladder=(5, 50),
+              seed=0, protocol="smoke", max_batch=64, num_pages=8192)
+    kw.update(over)
+    return GridSpec(**kw).expand()
+
+
+_real_run_cell = run_cell
+
+
+def _wedged_run_cell(cell, *args, **kw):
+    if multiprocessing.parent_process() is not None:
+        time.sleep(300)                          # pragma: no cover
+    return _real_run_cell(cell, *args, **kw)
+
+
+def _suicidal_run_cell(cell, *args, **kw):
+    if multiprocessing.parent_process() is not None:
+        os.kill(os.getpid(), signal.SIGKILL)     # pragma: no cover
+    return _real_run_cell(cell, *args, **kw)
+
+
+@pytest.mark.skipif("fork" not in multiprocessing.get_all_start_methods(),
+                    reason="fork start method unavailable")
+def test_wedged_worker_times_out_and_falls_back_serially():
+    """A pool whose workers hang forever must be declared wedged after
+    `worker_timeout`, killed, and (budget exhausted) completed serially
+    with correct records."""
+    plan = _mini_plan().transform(
+        lambda c: dataclasses.replace(c, cell_retries=0), suffix="")
+    shutdown_pool()                   # fresh pool inherits the patch
+    old = runner_mod.run_cell
+    runner_mod.run_cell = _wedged_run_cell
+    try:
+        with pytest.warns(RuntimeWarning, match="wedged"):
+            recs = PlanRunner(plan).run(parallel=True, mp_context="fork",
+                                        worker_timeout=1.0)
+    finally:
+        runner_mod.run_cell = old
+        shutdown_pool(kill=True)
+    serial = PlanRunner(plan).run(parallel=False)
+    _assert_records_equal(recs, serial, "wedged")
+
+
+@pytest.mark.skipif("fork" not in multiprocessing.get_all_start_methods(),
+                    reason="fork start method unavailable")
+def test_worker_suicide_exhausts_budget_then_serial():
+    """kill -9 inside every worker: BrokenProcessPool each round, per-cell
+    re-dispatch budget honoured, then the serial path finishes the run."""
+    plan = _mini_plan().transform(
+        lambda c: dataclasses.replace(c, cell_retries=1), suffix="")
+    shutdown_pool()
+    old = runner_mod.run_cell
+    runner_mod.run_cell = _suicidal_run_cell
+    try:
+        with pytest.warns(RuntimeWarning, match="process pool failed"):
+            recs = PlanRunner(plan).run(parallel=True, mp_context="fork")
+    finally:
+        runner_mod.run_cell = old
+        shutdown_pool(kill=True)
+    serial = PlanRunner(plan).run(parallel=False)
+    _assert_records_equal(recs, serial, "suicide")
+
+
+# ---- store.verify + CLI exit contract ---------------------------------
+
+
+def test_store_verify_reports_each_failure_mode(tmp_path):
+    plan = _mini_plan()
+    store = ExperimentStore(plan.name, tmp_path)
+    PlanRunner(plan, store=store).run(parallel=False)
+    clean = store.verify(plan)
+    assert clean == {"issues": [], "missing": []}
+
+    store.cell_path(plan.cells[0]).write_text('{"cell_id": "torn')
+    blob = json.loads(store.cell_path(plan.cells[1]).read_text())
+    blob["fingerprint"] = "stale"
+    store.cell_path(plan.cells[1]).write_text(json.dumps(blob))
+    (store.dir / "cell_orphan.json").write_text("{}")
+    res = store.verify(plan)
+    reasons = " ".join(res["issues"])
+    assert len(res["issues"]) == 3
+    assert "torn/unreadable" in reasons
+    assert "fingerprint drift" in reasons
+    assert "orphaned" in reasons
+    assert res["missing"] == []
+
+    store.cell_path(plan.cells[0]).unlink()
+    res = store.verify(plan)
+    assert any("never ran" in m for m in res["missing"])
+
+
+def test_run_cli_verify_exit_status(tmp_path, capsys):
+    store = ExperimentStore("mini_2x2", tmp_path)
+    store.dir.mkdir(parents=True, exist_ok=True)
+    assert run_main(["--plan", "mini_2x2", "--root", str(tmp_path),
+                     "--verify"]) == 0           # missing cells: not corrupt
+    (store.dir / "cell_orphan.json").write_text("{}")
+    assert run_main(["--plan", "mini_2x2", "--root", str(tmp_path),
+                     "--verify"]) == 1
+    out = capsys.readouterr().out
+    assert "ISSUE" in out and "orphan" in out
+
+
+# ---- kill -9 mid-chunk, resume byte-identity (chaos tier) -------------
+
+
+@pytest.mark.slow
+@pytest.mark.chaos
+def test_kill9_midchunk_then_resume_byte_identical(tmp_path):
+    """SIGKILL the runner process mid-plan (workers are writing cell
+    blobs themselves), re-invoke with resume, and the consolidated CSV +
+    manifest must match an uninterrupted run byte-for-byte."""
+    env = dict(os.environ, PYTHONPATH="src")
+    repo = Path(__file__).resolve().parents[1]
+    cmd = [sys.executable, "-m", "repro.experiments.run",
+           "--plan", "mini_2x2", "--workers", "2"]
+
+    clean = tmp_path / "clean"
+    subprocess.run(cmd + ["--root", str(clean)], cwd=repo, env=env,
+                   check=True, capture_output=True, timeout=300)
+    want_csv = (clean / "mini_2x2" / "mini_2x2.csv").read_bytes()
+    want_manifest = (clean / "mini_2x2" / "manifest.json").read_bytes()
+
+    chaos = tmp_path / "chaos"
+    proc = subprocess.Popen(cmd + ["--root", str(chaos)], cwd=repo,
+                            env=env, stdout=subprocess.PIPE,
+                            stderr=subprocess.STDOUT, text=True)
+    # SIGKILL as soon as the first cell reports: mid-chunk, no cleanup
+    deadline = time.time() + 300
+    while time.time() < deadline:
+        line = proc.stdout.readline()
+        if not line:
+            break
+        if line.startswith("["):
+            os.kill(proc.pid, signal.SIGKILL)
+            break
+    proc.wait(timeout=60)
+    assert proc.returncode != 0                   # it really died
+    assert not (chaos / "mini_2x2" / "mini_2x2.csv").exists()
+
+    subprocess.run(cmd + ["--root", str(chaos)], cwd=repo, env=env,
+                   check=True, capture_output=True, timeout=300)
+    assert (chaos / "mini_2x2" / "mini_2x2.csv").read_bytes() == want_csv
+    assert (chaos / "mini_2x2" / "manifest.json").read_bytes() == \
+        want_manifest
