@@ -1,41 +1,81 @@
 """Experiment-runner backend benchmark: per-cell (serial + pool) vs the
-vectorized fleet backend, with `cells_per_sec` as the tracked metric
-(ISSUE 4).
+vectorized numpy fleet vs the jit-compiled JAX fleet, with
+`cells_per_sec` as the tracked metric (ISSUE 4 + ISSUE 7).
 
 PR 1's pool parallelized ladder points inside one config; PR 2's
 PlanRunner sharded whole cells; ISSUE 4's fleet backend runs many cells
-as lanes of one struct-of-arrays event loop, so a plan's throughput is
-no longer one-engine-per-core. This bench runs the same plan through
-every backend, asserts the records are identical (the equivalence
-contract), reports cells/s per backend, and writes the perf-trajectory
-file `BENCH_plan_matrix.json` at the repo root:
+as lanes of one struct-of-arrays event loop; ISSUE 7 compiles that loop
+with JAX. This bench runs the same plan through every backend, asserts
+the records agree (byte-identical for the numpy backends, within
+`precision.jit_tolerance()` for the jit ones), reports cells/s per
+backend, and writes the perf-trajectory file `BENCH_plan_matrix.json`
+at the repo root:
 
-* full mode — a paper_h100-sized plan (42 paper-protocol cells): the
-  acceptance surface for the ">=5x cells/s single-process" criterion
-  (`vector` vs `serial` below).
+* full mode — a paper_h100-sized plan (42 paper-protocol cells) for the
+  ">=5x cells/s single-process" vector-vs-serial criterion (ISSUE 4),
+  plus a 288-lane quick-protocol workload (every atlas group x 16
+  arrival seeds at one offered rate) for the ">=3x cells/s at >=256
+  lanes" jit-vs-vector criterion (ISSUE 7).
 * --quick — the CI smoke: mini_2x2 + mini_crosshw (20 smoke cells);
-  `benchmarks/check_plan_matrix.py` gates on >20% regression of the
-  vector-vs-serial cells/s ratio against the committed baseline (the
-  ratio, not the absolute number, so CI hardware speed cancels out).
+  `benchmarks/check_plan_matrix.py` gates on >20% regression of BOTH
+  machine-neutral ratios (vector/serial and jit/vector) against the
+  committed baseline (ratios, not absolute numbers, so CI hardware
+  speed cancels out).
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
 
 from benchmarks.common import emit, merge_trajectory
 from repro.experiments.plans import get_plan, paper_h100
 from repro.experiments.runner import PlanRunner
+from repro.serving import precision
 
 # acceptance floor: fleet backend cells/s over the per-cell serial path,
 # single process (ISSUE 4)
 VECTOR_SPEEDUP_TARGET = 5.0
+# acceptance floor: jit backend cells/s over the vectorized numpy
+# backend at >= 256 lanes, single process (ISSUE 7)
+JIT_SPEEDUP_TARGET = 3.0
+JIT_MIN_LANES = 256
 
 
 def _plans(quick: bool):
     if quick:
         return [get_plan("mini_2x2"), get_plan("mini_crosshw")]
     return [paper_h100()]
+
+
+def _lane_scale_plan():
+    """The >=256-lane jit acceptance workload: every `paper_atlas`
+    (model, hw, quant) group replicated at 16 arrival seeds, pinned to
+    one mid-ladder offered rate — 288 uniform quick-protocol cells, so
+    the jit chunk actually runs at the lane width the criterion names
+    instead of paper_h100's 42."""
+    plan = get_plan("paper_ensemble").subset(lambda c: c.lam == 25.0)
+    assert len(plan.cells) >= JIT_MIN_LANES
+    return plan
+
+
+def _records_close(oracle, got, ctx):
+    """Tolerance agreement for the jit modes (their records are f64-
+    tolerance-identical, not byte-identical, to the numpy oracle)."""
+    rtol, atol = precision.jit_tolerance()
+    assert len(oracle) == len(got), ctx
+    for a, b in zip(oracle, got):
+        da, db = dataclasses.asdict(a), dataclasses.asdict(b)
+        for key in da:
+            va, vb = da[key], db[key]
+            if isinstance(va, float):
+                if math.isnan(va) and math.isnan(vb):
+                    continue
+                assert abs(va - vb) <= rtol * abs(va) + atol, \
+                    (ctx, a.model, a.lam, key, va, vb)
+            else:
+                assert va == vb, (ctx, a.model, a.lam, key, va, vb)
+    return True
 
 
 def run(quick: bool = False):
@@ -47,7 +87,9 @@ def run(quick: bool = False):
     modes = (("serial", "process", False),    # the PR-3 per-cell path
              ("sharded", "process", True),    # per-cell pool
              ("vector", "vector", False),     # fleet, single process
-             ("vector_pool", "vector", True))  # fleet chunks x cores
+             ("vector_pool", "vector", True),  # fleet chunks x cores
+             ("jit", "jit", False),           # compiled fleet (ISSUE 7)
+             ("jit_pool", "jit", True))       # compiled fleet x cores
     # Interleaved rounds with medians (the repo's noisy-wall-clock
     # discipline, see .claude/skills/verify): every round times each
     # mode once back-to-back, so machine-load drift hits serial and
@@ -71,6 +113,8 @@ def run(quick: bool = False):
     for mode in ("sharded", "vector", "vector_pool"):
         assert [repr(dataclasses.asdict(r)) for r in results[mode]] == base, \
             f"{mode} records diverge from serial"
+    for mode in ("jit", "jit_pool"):
+        _records_close(results["serial"], results[mode], mode)
 
     n = len(cells)
     rows = [{
@@ -80,7 +124,7 @@ def run(quick: bool = False):
         "seconds": timings[mode],
         "cells_per_sec": n / max(timings[mode], 1e-9),
         "speedup_vs_serial": timings["serial"] / max(timings[mode], 1e-9),
-        "records_identical": True,
+        "records_identical": backend != "jit",   # jit: tolerance-checked
     } for mode, backend, parallel in modes]
     emit("plan_matrix", [{"plan": "+".join(p.name for p in plans),
                           "n_cells": n, **row} for row in rows])
@@ -90,10 +134,14 @@ def run(quick: bool = False):
     } for c, r in zip(cells, results["vector"])]
     emit("plan_matrix_cells", cell_rows)
 
-    # the gated ratio: median of per-round serial/vector ratios
-    per_round = sorted(s / max(v, 1e-9) for s, v in
-                       zip(samples["serial"], samples["vector"]))
-    vec_vs_serial = per_round[len(per_round) // 2]
+    # the gated ratios: medians of per-round time ratios (machine-neutral)
+    def _median_ratio(num_mode, den_mode, mode_samples):
+        per_round = sorted(s / max(v, 1e-9) for s, v in
+                           zip(mode_samples[num_mode],
+                               mode_samples[den_mode]))
+        return per_round[len(per_round) // 2]
+
+    vec_vs_serial = _median_ratio("serial", "vector", samples)
     section = {
         "plans": [p.name for p in plans],
         "n_cells": n,
@@ -104,14 +152,46 @@ def run(quick: bool = False):
         "vector_vs_serial_speedup": vec_vs_serial,
         "records_identical": True,
     }
-    if not quick:
+    if quick:
+        # the CI smoke gates the jit ratio on the same 20-cell workload
+        # (tiny lanes, so compile amortization is poor — the committed
+        # baseline captures that and only regressions fail)
+        section["jit_vs_vector_speedup"] = _median_ratio("vector", "jit",
+                                                         samples)
+        section["jit_lanes"] = n
+    else:
         section["target_vector_vs_serial"] = VECTOR_SPEEDUP_TARGET
         section["meets_target"] = vec_vs_serial >= VECTOR_SPEEDUP_TARGET
+        # the ISSUE 7 acceptance workload: jit vs vector at >= 256
+        # uniform lanes, interleaved rounds, median per-round ratio
+        lane_plan = _lane_scale_plan()
+        lane_samples = {"vector": [], "jit": []}
+        lane_results = {}
+        for _ in range(4):
+            for mode in ("vector", "jit"):
+                t0 = time.time()
+                lane_results[mode] = PlanRunner(lane_plan).run(
+                    parallel=False, backend=mode)
+                lane_samples[mode].append(time.time() - t0)
+        _records_close(lane_results["vector"], lane_results["jit"],
+                       "jit-lane-scale")
+        jit_vs_vector = _median_ratio("vector", "jit", lane_samples)
+        nl = len(lane_plan.cells)
+        section["jit_vs_vector_speedup"] = jit_vs_vector
+        section["jit_lanes"] = nl
+        section["jit_lane_scale_modes"] = {
+            mode: {"seconds": min(lane_samples[mode]),
+                   "cells_per_sec": nl / max(min(lane_samples[mode]), 1e-9)}
+            for mode in ("vector", "jit")}
+        section["target_jit_vs_vector"] = JIT_SPEEDUP_TARGET
+        section["meets_jit_target"] = jit_vs_vector >= JIT_SPEEDUP_TARGET
     path = merge_trajectory("plan_matrix", "quick" if quick else "paper",
                             section)
     print(f"\n# vector vs serial: {vec_vs_serial:.2f}x cells/s "
           f"({section['modes']['vector']['cells_per_sec']:.2f} vs "
           f"{section['modes']['serial']['cells_per_sec']:.2f}); "
+          f"jit vs vector: {section['jit_vs_vector_speedup']:.2f}x at "
+          f"{section['jit_lanes']} lanes; "
           f"trajectory written to {path.name}")
 
 

@@ -1,18 +1,21 @@
-"""CI gate: fail on cells/s regression of the fleet backend (ISSUE 4).
+"""CI gate: fail on cells/s regression of the fleet backends (ISSUE 4 +
+ISSUE 7).
 
 Compares a fresh `BENCH_plan_matrix.json` (written by
 `python -m benchmarks.run --quick --only plan_matrix`) against the
-committed baseline. The gated metric is the *vector-vs-serial cells/s
-ratio*, not the absolute cells/s: both backends run on the same runner,
-so machine speed cancels and only a real change to the fleet's
-amortization (or to the per-cell path) can move the ratio.
+committed baseline. The gated metrics are the *vector-vs-serial* and
+*jit-vs-vector* cells/s ratios, not the absolute cells/s: the compared
+backends run on the same runner, so machine speed cancels and only a
+real change to a backend's amortization can move a ratio.
 
     python -m benchmarks.check_plan_matrix \
         --baseline BENCH_plan_matrix.baseline.json \
         --current BENCH_plan_matrix.json --section quick
 
-Exits non-zero when the current ratio falls below (1 - tolerance) of the
-baseline ratio (default tolerance 0.20, the ISSUE 4 gate).
+Exits non-zero when any gated ratio falls below (1 - tolerance) of its
+baseline (default tolerance 0.20, the ISSUE 4/7 gate). The jit ratio is
+gated only when the baseline records it, so the gate is
+forward-compatible with pre-jit baselines.
 """
 from __future__ import annotations
 
@@ -42,19 +45,30 @@ def main(argv=None):
 
     base = load(args.baseline)
     cur = load(args.current)
-    base_ratio = base["vector_vs_serial_speedup"]
-    cur_ratio = cur["vector_vs_serial_speedup"]
-    floor = (1.0 - args.tolerance) * base_ratio
-    print(f"vector-vs-serial cells/s ratio: baseline {base_ratio:.2f}x, "
-          f"current {cur_ratio:.2f}x, floor {floor:.2f}x "
-          f"(tolerance {args.tolerance:.0%})")
     if not cur.get("records_identical", False):
         print("FAIL: backend records diverged", file=sys.stderr)
         return 1
-    if cur_ratio < floor:
-        print(f"FAIL: fleet backend regressed >"
-              f"{args.tolerance:.0%} vs the committed baseline",
-              file=sys.stderr)
+    failed = False
+    gates = [("vector-vs-serial", "vector_vs_serial_speedup")]
+    if "jit_vs_vector_speedup" in base:
+        gates.append(("jit-vs-vector", "jit_vs_vector_speedup"))
+    for label, key in gates:
+        base_ratio = base[key]
+        cur_ratio = cur.get(key)
+        if cur_ratio is None:
+            print(f"FAIL: current bench has no {key!r} "
+                  f"(baseline records it)", file=sys.stderr)
+            failed = True
+            continue
+        floor = (1.0 - args.tolerance) * base_ratio
+        print(f"{label} cells/s ratio: baseline {base_ratio:.2f}x, "
+              f"current {cur_ratio:.2f}x, floor {floor:.2f}x "
+              f"(tolerance {args.tolerance:.0%})")
+        if cur_ratio < floor:
+            print(f"FAIL: {label} regressed >{args.tolerance:.0%} vs "
+                  f"the committed baseline", file=sys.stderr)
+            failed = True
+    if failed:
         return 1
     print("OK")
     return 0

@@ -226,6 +226,71 @@ def penalty_atlas(records: Sequence[RunRecord],
     return out
 
 
+def ensemble_bands(records: Sequence[RunRecord],
+                   min_seeds: int = 3) -> List[dict]:
+    """ISSUE 7: Monte-Carlo confidence bands from an ensemble store
+    (`paper_ensemble`: every atlas group replicated at N=16 independent
+    arrival seeds; `mini_ensemble`: the CI-smoke 4-seed version).
+
+    Per (model, hw, quant) group whose lambdas carry >= `min_seeds`
+    replicates: the central-95% percentile-bootstrap band of the
+    geometric mean of C_eff, the underutilization penalty and the
+    utilization at every offered rate — the error bars the paper's n=3
+    caveat ("broader validation needed") asks for. The bootstrap rides
+    `planner.curves.bootstrap_band` (deterministic, CRC-seeded), so the
+    C_eff band here brackets exactly the knot the planner interpolates
+    from the same store. Single-seed stores return [] and every classic
+    table is unchanged."""
+    from repro.planner.curves import _band_rng, bootstrap_band
+    import math
+    out = []
+    for key, group in _groups(records).items():
+        by_lam: Dict[float, List[RunRecord]] = {}
+        for r in group:
+            by_lam.setdefault(r.lam, []).append(r)
+        if max(len(v) for v in by_lam.values()) < min_seeds:
+            continue
+        metric_vals = {
+            "c_eff": lambda r: r.c_eff,
+            "penalty": lambda r: underutilization_penalty(r.tps,
+                                                          r.theta_max),
+            "util": lambda r: r.util,
+        }
+        lams = [lam for lam in sorted(by_lam)
+                if len(by_lam[lam]) >= min_seeds]
+        row = {
+            "model": key[0], "hw": key[1], "quant": key[2],
+            "n_chips": key[3], "io_shape": key[4],
+            "n_seeds": max(len(by_lam[lam]) for lam in lams),
+            "lams": lams,
+            "n_per_lam": [len(by_lam[lam]) for lam in lams],
+        }
+        widest = 0.0
+        for metric, value in metric_vals.items():
+            rng = _band_rng(key, metric)
+            mean, lo, hi = [], [], []
+            for lam in lams:
+                vals = [value(r) for r in by_lam[lam]]
+                vals = [v for v in vals if math.isfinite(v) and v > 0]
+                if len(vals) < min_seeds:
+                    mean.append(float("nan"))
+                    lo.append(float("nan"))
+                    hi.append(float("nan"))
+                    continue
+                m, l, h = bootstrap_band(vals, rng)
+                mean.append(m)
+                lo.append(l)
+                hi.append(h)
+                if metric == "c_eff" and m > 0:
+                    widest = max(widest, (h - l) / (2 * m))
+            row[metric] = {"mean": mean, "lo": lo, "hi": hi}
+        # the headline scalar: how tight the cost claim actually is —
+        # the widest relative half-width of the C_eff band on the ladder
+        row["max_rel_halfwidth_c_eff"] = widest
+        out.append(row)
+    return out
+
+
 def reliability_tables(records: Sequence[RunRecord]) -> List[dict]:
     """ISSUE 6: the cost of reliability. One row per resilient record
     (mttf > 0 or retry_max > 0): goodput vs offered rate, the client
@@ -304,6 +369,7 @@ def crosshw_tables(records: Sequence[RunRecord]) -> Dict[str, object]:
         "fp8_inversion": fp8_inversion(records),
         "active_params_ordering": crosshw_ordering(records),
         "penalty_atlas": penalty_atlas(records),
+        "ensemble_bands": ensemble_bands(records),
         "planner_tables": planner_tables(records),
         "reliability": reliability_tables(records),
     }
@@ -413,6 +479,25 @@ def report(records: Sequence[RunRecord], title: str = "") -> str:
                 f"{row['model']:<24} {row['hw']:<9} {row['quant']:<5} "
                 f"{row['idle_penalty']:>8.1f}x {row['spread']:>6.1f}x "
                 f"{row['knee_lambda']:>9.4g} {row['half_cost_lambda']:>13.4g}")
+
+    bands = ensemble_bands(records)
+    if bands:
+        lines.append("")
+        lines.append("-- Monte-Carlo confidence bands (central 95%, "
+                     f"N={bands[0]['n_seeds']} arrival seeds) --")
+        lines.append(f"{'model':<24} {'hw':<9} {'quant':<5} "
+                     f"{'idle c_eff [lo..hi]':>24} "
+                     f"{'sat c_eff [lo..hi]':>24} {'max hw':>7}")
+        for row in bands:
+            ce = row["c_eff"]
+            idle = f"{ce['mean'][0]:.3f} [{ce['lo'][0]:.3f}.." \
+                   f"{ce['hi'][0]:.3f}]"
+            sat = f"{ce['mean'][-1]:.3f} [{ce['lo'][-1]:.3f}.." \
+                  f"{ce['hi'][-1]:.3f}]"
+            lines.append(
+                f"{row['model']:<24} {row['hw']:<9} {row['quant']:<5} "
+                f"{idle:>24} {sat:>24} "
+                f"{100 * row['max_rel_halfwidth_c_eff']:>6.1f}%")
 
     reliability = reliability_tables(records)
     if reliability:

@@ -94,6 +94,11 @@ class Cell:
     retry_jitter_s: float = 0.0
     max_queue_depth: int = 0    # engine admission-control shed depth
     deadline_s: float = 0.0     # engine queue-time deadline
+    # Monte-Carlo replicate index (ISSUE 7). Nonzero offsets join
+    # cell_id / seed_key so each replicate draws an independent arrival
+    # stream; offset 0 stays OUT of the keys, so pre-ensemble plans keep
+    # their historical seed streams (and committed records) byte-exactly.
+    seed_offset: int = 0
     # runner execution policy (not part of the measurement itself)
     cell_retries: int = 2       # re-dispatch budget after worker loss
 
@@ -119,6 +124,8 @@ class Cell:
         if self.resilient:
             mttf = f"{self.mttf:g}".replace(".", "p")
             raw += f"_mttf{mttf}_r{self.retry_max}"
+        if self.seed_offset:
+            raw += f"_s{self.seed_offset}"
         return raw.replace("/", "-")
 
     @property
@@ -127,10 +134,17 @@ class Cell:
         resilient cell shares its failure-free sibling's arrival stream.
         Reliability comparisons are therefore *paired* — same arrivals,
         same request shapes — isolating the failure/retry effect from
-        arrival-realization noise."""
-        return (self.config, self.model, self.arch, self.hw, self.quant,
+        arrival-realization noise.
+
+        Ensemble replicates (nonzero `seed_offset`) append the offset so
+        each replicate draws an independent arrival stream; offset 0 is
+        omitted, keeping every historical plan's streams unchanged."""
+        base = (self.config, self.model, self.arch, self.hw, self.quant,
                 self.n_chips, self.io_shape, self.process, self.cv,
                 self.scale, self.engine_kind)
+        if self.seed_offset:
+            base = base + (("seed_offset", self.seed_offset),)
+        return base
 
     @property
     def group_key(self) -> Tuple:
@@ -144,7 +158,13 @@ class Cell:
     def fingerprint(self) -> str:
         """Spec hash stored beside each result; a stale on-disk cell (spec
         changed since it ran) is re-run instead of resumed."""
-        blob = json.dumps(dataclasses.asdict(self), sort_keys=True)
+        spec = dataclasses.asdict(self)
+        if not self.seed_offset:
+            # like the keys, the default-zero ensemble offset stays out
+            # of the hash: stores committed before the axis existed must
+            # keep resuming (and their cell files keep byte-identity)
+            spec.pop("seed_offset")
+        blob = json.dumps(spec, sort_keys=True)
         return hashlib.sha256(blob.encode()).hexdigest()[:16]
 
     def engine_spec(self) -> SimEngineSpec:
@@ -289,6 +309,10 @@ class GridSpec:
     retry_jitter_s: float = 0.0
     max_queue_depth: int = 0
     deadline_s: float = 0.0
+    # Monte-Carlo ensemble axis (ISSUE 7): each offset replicates the
+    # whole grid with an independent arrival stream. The default (0,)
+    # expands to the exact historical plan (offset 0 never joins keys).
+    seed_offsets: Tuple[int, ...] = (0,)
 
     def chips_for(self, arch: str, hw: Optional[str] = None) -> int:
         if hw is not None:
@@ -309,7 +333,8 @@ class GridSpec:
         cells: List[Cell] = []
         for ax in iter_grid(arch=self.archs, hw=self.hws, quant=self.quants,
                             io_shape=self.io_shapes, lam=self.ladder,
-                            mttf=self.mttfs, retry_max=self.retry_maxes):
+                            mttf=self.mttfs, retry_max=self.retry_maxes,
+                            seed_offset=self.seed_offsets):
             if ax["quant"] not in self.quants_for(ax["hw"]):
                 continue
             chips = self.chips_for(ax["arch"], ax["hw"])
@@ -333,7 +358,8 @@ class GridSpec:
                 retry_base_s=self.retry_base_s,
                 retry_jitter_s=self.retry_jitter_s,
                 max_queue_depth=self.max_queue_depth if resil else 0,
-                deadline_s=self.deadline_s if resil else 0.0)
+                deadline_s=self.deadline_s if resil else 0.0,
+                seed_offset=int(ax["seed_offset"]))
             cells.append(dataclasses.replace(
                 cell, seed=cell_seed(self.seed, cell.seed_key, cell.lam)))
         return ExperimentPlan(name=self.name, cells=tuple(cells),

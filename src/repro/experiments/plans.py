@@ -151,6 +151,57 @@ def paper_atlas() -> ExperimentPlan:
     ).expand()
 
 
+def paper_ensemble() -> ExperimentPlan:
+    """2016 cells: every `paper_atlas` (model, hw, quant) group x the
+    7-point paper ladder x 16 independent arrival seeds — the
+    Monte-Carlo ensemble behind the confidence bands (ISSUE 7).
+
+    The paper's headline numbers carry an n=3 caveat; this plan resolves
+    it inside the repo by replicating all 18 atlas groups at N=16 seeds
+    so `analyze.ensemble_bands` can bootstrap confidence bands on the
+    penalty / utilization / C_eff curves (threaded into the planner's
+    deployment curves and `analysis.json`). Quick protocol keeps the
+    per-cell cost ~10x below paper tier; at 2016 cells the plan is only
+    tractable because of the jit fleet backend:
+
+        python -m repro.experiments.run --plan paper_ensemble \\
+            --backend jit --resume --analyze-json
+    """
+    return GridSpec(
+        name="paper_ensemble",
+        description="Monte-Carlo ensemble: 3 models x {v5e, v5p, v6e} x "
+                    "{bf16, fp8} x 7-point ladder x 16 arrival seeds",
+        archs=PAPER_TRIO,
+        hws=("tpu-v5e", "tpu-v5p", "tpu-v6e"),
+        quants=("bf16", "fp8"),
+        ladder=LAMBDA_LADDER,
+        n_chips_by_arch_hw=CROSSHW_CHIPS,
+        seed_offsets=tuple(range(16)),
+        seed=0,
+        protocol="quick",
+    ).expand()
+
+
+def mini_ensemble() -> ExperimentPlan:
+    """CI smoke for the ensemble axis: the mini_2x2 grid x 4 arrival
+    seeds, smoke-tier traffic (16 cells). Enough replicates for
+    `analyze.ensemble_bands` to emit finite (non-degenerate) bands."""
+    return GridSpec(
+        name="mini_ensemble",
+        description="ensemble CI smoke: 2 archs x 2 lambdas x 4 arrival "
+                    "seeds (sim tier)",
+        archs=("llama31-8b", "qwen3-30b-a3b"),
+        hws=("tpu-v5e",),
+        quants=("bf16",),
+        ladder=(5, 50),
+        seed_offsets=(0, 1, 2, 3),
+        seed=0,
+        protocol="smoke",
+        max_batch=64,
+        num_pages=8192,
+    ).expand()
+
+
 def probe_int8_nonnative() -> ExperimentPlan:
     """126 cells exercising `quants_by_hw` at paper scale (ROADMAP PR-3
     follow-up): int8 — the natively-accelerated low-precision format on
@@ -332,6 +383,8 @@ PLANS: Dict[str, Callable[[], ExperimentPlan]] = {
     "paper_a100": paper_a100,
     "paper_crosshw": paper_crosshw,
     "paper_atlas": paper_atlas,
+    "paper_ensemble": paper_ensemble,
+    "mini_ensemble": mini_ensemble,
     "probe_int8_nonnative": probe_int8_nonnative,
     "paper_resilience": paper_resilience,
     "mini_resilience": mini_resilience,

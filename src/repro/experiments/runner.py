@@ -1,6 +1,6 @@
 """PlanRunner: execution backends for experiment cells.
 
-Two backends behind one `execute_cells` surface (ISSUE 4):
+Three backends behind one `execute_cells` surface (ISSUE 4, ISSUE 7):
 
 * ``backend="process"`` — the PR-2/3 path: every cell is an independent
   (engine, arrival stream) measurement fanned cell-at-a-time across the
@@ -17,6 +17,23 @@ Two backends behind one `execute_cells` surface (ISSUE 4):
   the store the moment the lane finishes (per-cell, like the process
   backend); pool-dispatched chunks land at chunk completion, so a
   killed pooled run can lose at most one chunk per worker.
+* ``backend="jit"`` — the compiled fleet (`repro.serving.fleet_jit`):
+  same lane partitioning, but each chunk runs the jit-compiled
+  `lax.while_loop` event loop (~4x the vector backend's cells/s at 256
+  lanes). Records agree with the numpy oracle within
+  `serving.precision.jit_tolerance()` rather than bitwise — commit
+  stores with the vector/process backends, sweep with jit. Points the
+  compiled loop cannot express fall back through the numpy fleet
+  automatically, and checkpoint granularity is per chunk.
+
+Pooled lane chunks are *work-stolen* (ISSUE 7 satellite): instead of
+pre-slicing the lanes into fixed >=16-wide chunks (where a ragged
+lambda-ladder's slowest chunk idles every other worker at the tail),
+workers draw successive chunks from a shared queue, each sized to the
+work remaining — wide while the queue is deep, down to
+`MIN_FLEET_LANE_WIDTH` near the tail. Chunking is an execution detail:
+records (and therefore stores) are byte-identical to the fixed chunker
+(`tests/test_experiments.py` pins this).
 
 The process pool is *persistent* (ISSUE 4 satellite): one pool is kept
 alive across a plan's chunks and across `--resume` passes instead of
@@ -33,6 +50,7 @@ matrix are a footgun.
 from __future__ import annotations
 
 import atexit
+import collections
 import concurrent.futures
 import multiprocessing
 import pickle
@@ -49,6 +67,9 @@ from repro.experiments.store import ExperimentStore, backfill_theta
 # loop, small enough that (lanes x requests) request-stream arrays stay a
 # few MB and chunks spread across pool workers
 FLEET_LANE_WIDTH = 128
+# the jit backend amortizes one compiled program over the whole chunk;
+# wider is strictly better until the (lanes x requests) logs hit memory
+JIT_LANE_WIDTH = 512
 # never split below this under the pool: a chunk's round count is set by
 # its slowest lane, so narrow chunks lose the amortization that makes the
 # fleet fast (width 1 would be the scalar path plus IPC)
@@ -116,23 +137,28 @@ def _pool_task(cell: Cell, checkpoint=None) -> RunRecord:
 
 
 def _fleet_task(points, cells: Optional[List[Cell]] = None,
-                checkpoint=None) -> List[RunRecord]:
-    """Fleet-chunk pool task: run a lane chunk in one vectorized engine.
+                checkpoint=None, backend: str = "vector"
+                ) -> List[RunRecord]:
+    """Fleet-chunk pool task: run a lane chunk in one vectorized engine
+    (numpy fleet, or the compiled fleet under ``backend="jit"``).
 
     With a checkpoint handle, each lane's record is written to the store
     *from the worker* the moment the lane finishes — a chunk killed
     mid-flight (SIGKILL, OOM) loses only its in-flight lanes on resume
     instead of the whole chunk (writes are atomic; the parent's own
     `on_result` write at chunk completion is byte-identical)."""
-    from repro.serving.fleet import fleet_run_points
+    if backend == "jit":
+        from repro.serving.fleet_jit import jit_run_points as _run
+    else:
+        from repro.serving.fleet import fleet_run_points as _run
     store = _checkpoint_store(checkpoint)
     if store is None or cells is None:
-        return fleet_run_points(points)
+        return _run(points)
 
     def _ckpt(j: int, rec: RunRecord):
         store.write_cell(cells[j], rec)
 
-    return fleet_run_points(points, on_result=_ckpt)
+    return _run(points, on_result=_ckpt)
 
 
 def shutdown_pool(kill: bool = False):
@@ -228,6 +254,9 @@ def execute_cells(cells: Sequence[Cell], *,
     backend="vector" chunks fleet-eligible cells into lanes of the
     vectorized fleet simulator and composes with the pool (lanes x
     cores); records are identical to backend="process" bit-for-bit.
+    backend="jit" runs the chunks on the compiled fleet instead
+    (tolerance-equivalent records; see `serving.fleet_jit`). Pooled
+    chunks are drawn work-stealing from a shared lane queue.
 
     `checkpoint=(plan_name, store_root)` lets pool *workers* write each
     finished cell to the store themselves (atomic), so a worker killed
@@ -238,9 +267,9 @@ def execute_cells(cells: Sequence[Cell], *,
     killed and unfinished cells are re-dispatched on a fresh pool,
     bounded by each cell's `cell_retries` budget.
     """
-    if backend not in ("process", "vector"):
+    if backend not in ("process", "vector", "jit"):
         raise ValueError(f"unknown backend {backend!r}; "
-                         "expected 'process' or 'vector'")
+                         "expected 'process', 'vector' or 'jit'")
     if lane_width is not None and lane_width < 1:
         raise ValueError(f"lane_width must be >= 1, got {lane_width}")
     results: Dict[int, RunRecord] = {}
@@ -253,25 +282,22 @@ def execute_cells(cells: Sequence[Cell], *,
             parallel = False
 
     # -- partition work into units (per-cell or fleet chunks) ----------
-    if backend == "vector":
+    if backend in ("vector", "jit"):
         lane_idx = [i for i, c in enumerate(cells)
                     if _fleet_eligible(c, factory)]
         lane_set = set(lane_idx)
         solo_idx = [i for i in range(len(cells)) if i not in lane_set]
-        width = lane_width or FLEET_LANE_WIDTH
-        if parallel and lane_idx and lane_width is None:
-            # spread chunks over the pool without starving workers, but
-            # never below the width that keeps the fleet amortized
-            n_workers = max_workers or multiprocessing.cpu_count()
-            per_worker = -(-len(lane_idx) // n_workers)
-            width = min(width, max(per_worker, MIN_FLEET_LANE_WIDTH))
-        chunks = _chunk(lane_idx, max(1, width))
+        width_cap = lane_width or (JIT_LANE_WIDTH if backend == "jit"
+                                   else FLEET_LANE_WIDTH)
     else:
-        solo_idx = list(range(len(cells)))
-        chunks = []
+        lane_idx, solo_idx = [], list(range(len(cells)))
+        width_cap = FLEET_LANE_WIDTH
 
     def _run_chunk_serial(chunk: List[int]):
-        from repro.serving.fleet import fleet_run_points
+        if backend == "jit":
+            from repro.serving.fleet_jit import jit_run_points as _run
+        else:
+            from repro.serving.fleet import fleet_run_points as _run
 
         # in-process chunks stream per lane as lanes finish — the store
         # hook fires per cell, so a killed run loses only in-flight lanes
@@ -280,11 +306,11 @@ def execute_cells(cells: Sequence[Cell], *,
             if on_result:
                 on_result(cells[chunk[j]], rec)
 
-        fleet_run_points([_fleet_point(cells[i], factory) for i in chunk],
-                         on_result=_stream)
+        _run([_fleet_point(cells[i], factory) for i in chunk],
+             on_result=_stream)
 
     def _serial_missing():
-        for chunk in chunks:
+        for chunk in _chunk(lane_idx, max(1, width_cap)):
             missing = [i for i in chunk if i not in results]
             if missing:
                 _run_chunk_serial(missing)
@@ -294,12 +320,14 @@ def execute_cells(cells: Sequence[Cell], *,
                 if on_result:
                     on_result(cells[i], results[i])
 
-    n_units = len(chunks) + len(solo_idx)
+    # pool sizing: every solo cell is a unit; lanes count as the number
+    # of minimum-width chunks they could split into under work stealing
+    n_units = -(-len(lane_idx) // MIN_FLEET_LANE_WIDTH) + len(solo_idx)
     if parallel and n_units > 1:
         ctx_name = mp_context or default_mp_context()
         attempts: Dict[int, int] = {}      # per-cell re-dispatch count
-        todo_chunks, todo_solo = list(chunks), list(solo_idx)
-        while todo_chunks or todo_solo:
+        todo_lanes, todo_solo = list(lane_idx), list(solo_idx)
+        while todo_lanes or todo_solo:
             try:
                 pool = _get_pool(ctx_name,
                                  max_workers or multiprocessing.cpu_count(),
@@ -307,19 +335,45 @@ def execute_cells(cells: Sequence[Cell], *,
             except (ValueError, OSError) as e:
                 fallback_warning(f"process pool failed to start: {e!r}")
                 break
+            pool_size = _POOL["key"][1]
+            # -- work-stealing lane queue (ISSUE 7 satellite) ---------
+            # workers draw chunks sized to the remaining queue: wide
+            # while there is plenty (amortization), narrowing toward
+            # MIN_FLEET_LANE_WIDTH at the tail so a ragged ladder's
+            # final lanes spread across workers instead of riding one
+            # slow chunk. Chunk composition cannot change any record —
+            # lanes are independent — so stores stay byte-identical to
+            # the fixed chunker.
+            queue = collections.deque(todo_lanes)
             futs = {}
-            for chunk in todo_chunks:
+            pending = set()
+
+            def _steal_chunk():
+                if not queue:
+                    return
+                w = max(MIN_FLEET_LANE_WIDTH,
+                        min(width_cap,
+                            -(-len(queue) // (2 * pool_size))))
+                chunk = [queue.popleft()
+                         for _ in range(min(w, len(queue)))]
                 fut = pool.submit(_fleet_task,
                                   [_fleet_point(cells[i], factory)
                                    for i in chunk],
                                   [cells[i] for i in chunk]
                                   if checkpoint else None,
-                                  checkpoint)
+                                  checkpoint, backend)
                 futs[fut] = chunk
+                pending.add(fut)
+
+            # keep 2 chunks per worker outstanding so a completion never
+            # leaves a worker idle while the dispatcher wakes up
+            for _ in range(2 * pool_size):
+                _steal_chunk()
             for i in todo_solo:
-                futs[pool.submit(_pool_task, cells[i], checkpoint)] = i
+                fut = pool.submit(_pool_task, cells[i], checkpoint)
+                futs[fut] = i
+                pending.add(fut)
             reason = None
-            pending = set(futs)
             try:
                 while pending:
                     done, _ = concurrent.futures.wait(
@@ -341,6 +395,7 @@ def execute_cells(cells: Sequence[Cell], *,
                                 results[i] = rec
                                 if on_result:
                                     on_result(cells[i], rec)
+                            _steal_chunk()     # refill the worker
                         else:
                             results[tag] = res
                             if on_result:
@@ -356,10 +411,13 @@ def execute_cells(cells: Sequence[Cell], *,
             # pool *infrastructure* died (or wedged): kill the cached
             # pool, keep whatever finished (already reported through
             # on_result) and re-dispatch only the unfinished cells on a
-            # fresh pool, each bounded by its `cell_retries` budget;
-            # over-budget cells fall through to the serial path below.
+            # fresh pool. Dispatched-but-unfinished cells consume their
+            # `cell_retries` budget; cells still in the steal queue were
+            # never dispatched and re-enter free. Over-budget cells fall
+            # through to the serial path below.
             shutdown_pool(kill=True)
-            todo_chunks, todo_solo, spent = [], [], []
+            queued = set(queue)
+            todo_lanes, todo_solo, spent = [], [], []
             for tag in futs.values():
                 idx_list = tag if isinstance(tag, list) else [tag]
                 missing = [i for i in idx_list if i not in results]
@@ -371,11 +429,11 @@ def execute_cells(cells: Sequence[Cell], *,
                     (retry_ok if attempts[i] <= cells[i].cell_retries
                      else spent).append(i)
                 if isinstance(tag, list):
-                    if retry_ok:
-                        todo_chunks.append(retry_ok)
+                    todo_lanes.extend(retry_ok)
                 elif retry_ok:
                     todo_solo.append(tag)
-            n_left = sum(len(c) for c in todo_chunks) + len(todo_solo)
+            todo_lanes.extend(sorted(queued))
+            n_left = len(todo_lanes) + len(todo_solo)
             if not (n_left or spent):
                 break                     # pool died after the last unit
             warnings.warn(

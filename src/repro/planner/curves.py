@@ -17,12 +17,22 @@ a real curve; sparse 7-point ladders are accepted too — queries between
 knots are still interpolation, but `dense` is False and anything outside
 the measured span reports `extrapolated(lam) == True` (the paper's
 'modeled continuation' caveat, §5.6).
+
+Monte-Carlo ensemble stores (`paper_ensemble`, ISSUE 7: the same ladder
+replicated at >= ENSEMBLE_MIN_SEEDS independent arrival seeds) carry
+bootstrap confidence `bands` beside the knots: per metric, the
+central-95% band of the geometric mean at each lambda, queryable via
+`DeploymentCurve.band`. Single-seed stores fit exactly as before with
+empty bands.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
+import zlib
 from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
 
 from repro.core.crossover import aggregate_points, interp_aggregated
 from repro.core.records import RunRecord
@@ -30,6 +40,17 @@ from repro.core.records import RunRecord
 # a curve is "dense" from this many distinct offered rates on — matches
 # analyze.penalty_atlas's min_points, so the same stores qualify
 DENSE_MIN_POINTS = 10
+
+# Monte-Carlo ensemble bands (ISSUE 7): a ladder group whose lambdas
+# carry at least this many seed replicates (`paper_ensemble` runs 16)
+# gets bootstrap confidence bands beside its aggregated knots; below it
+# a "band" would just be resampling noise on 1-2 points.
+ENSEMBLE_MIN_SEEDS = 3
+BOOTSTRAP_RESAMPLES = 200
+BAND_QUANTILES = (2.5, 97.5)     # central 95% band
+# knot metrics that get bands (penalty bands derive from these two in
+# analyze.ensemble_bands; latency percentiles stay point estimates)
+BAND_METRICS = ("c_eff", "util", "tps")
 
 # RunRecord fields fitted as lambda -> value interpolators
 CURVE_METRICS = ("c_eff", "tps", "util", "mean_inflight",
@@ -54,6 +75,12 @@ class DeploymentCurve:
     theta_max: float            # saturation output tokens/s (§4.4)
     records: Tuple[RunRecord, ...]      # ladder-ordered source records
     knots: Dict[str, Tuple[Tuple[float, float], ...]]   # metric -> (lam, v)
+    # Monte-Carlo confidence bands (ISSUE 7): metric -> ((lam, lo, hi),
+    # ...) — the central-95% bootstrap band around each aggregated knot.
+    # Empty for single-seed stores; populated when the group carries
+    # >= ENSEMBLE_MIN_SEEDS replicates per lambda (`paper_ensemble`).
+    bands: Dict[str, Tuple[Tuple[float, float, float], ...]] = \
+        dataclasses.field(default_factory=dict)
 
     @property
     def key(self) -> Tuple:
@@ -132,6 +159,17 @@ class DeploymentCurve:
         """Every fitted metric interpolated at `lam` (SLO-check input)."""
         return {m: self.interp(m, lam) for m in CURVE_METRICS}
 
+    def band(self, metric: str, lam: float) -> Tuple[float, float]:
+        """(lo, hi) of the central-95% bootstrap band at `lam`, each edge
+        interpolated through the same log-log primitive as the knots.
+        (nan, nan) when this curve carries no ensemble replicates."""
+        pts = self.bands.get(metric, ())
+        if not pts:
+            return (math.nan, math.nan)
+        lo = interp_aggregated(tuple((x, l) for x, l, _ in pts), lam)
+        hi = interp_aggregated(tuple((x, h) for x, _, h in pts), lam)
+        return (lo, hi)
+
 
 def penalty_from_util(u: float) -> float:
     """1/U with the zero/nan guard — the one underutilization-penalty
@@ -141,6 +179,62 @@ def penalty_from_util(u: float) -> float:
 
 def _metric_value(rec: RunRecord, metric: str) -> float:
     return getattr(rec, metric)
+
+
+def bootstrap_band(values: Sequence[float], rng: np.random.Generator,
+                   n_boot: int = BOOTSTRAP_RESAMPLES,
+                   quantiles: Tuple[float, float] = BAND_QUANTILES
+                   ) -> Tuple[float, float, float]:
+    """(point, lo, hi): the geometric mean of `values` with its
+    percentile-bootstrap band — the one band primitive both the planner
+    curves and `analyze.ensemble_bands` share. The statistic is the
+    geometric mean, matching `aggregate_points`' duplicate-lambda
+    policy, so a band always brackets the knot the planner actually
+    interpolates. Deterministic given `rng` (callers derive it from the
+    group key via CRC32, never from global state)."""
+    logv = np.log(np.asarray(values, dtype=float))
+    point = float(np.exp(logv.mean()))
+    if logv.size == 1:
+        return point, point, point      # degenerate but finite
+    idx = rng.integers(0, logv.size, size=(n_boot, logv.size))
+    means = logv[idx].mean(axis=1)
+    lo, hi = np.percentile(means, quantiles)
+    return point, float(np.exp(lo)), float(np.exp(hi))
+
+
+def _band_rng(key: Tuple, metric: str) -> np.random.Generator:
+    """Deterministic per-(group, metric) bootstrap stream: same store ->
+    same bands, independent of dict order or PYTHONHASHSEED."""
+    return np.random.default_rng(
+        zlib.crc32(f"{key}|{metric}".encode()))
+
+
+def fit_bands(key: Tuple, group: Sequence[RunRecord],
+              metrics: Sequence[str] = BAND_METRICS,
+              min_seeds: int = ENSEMBLE_MIN_SEEDS
+              ) -> Dict[str, Tuple[Tuple[float, float, float], ...]]:
+    """Bootstrap bands for one ladder group, keyed like `knots`. Only
+    lambdas with >= `min_seeds` finite-positive replicate values get a
+    band knot (a single-seed lambda inside an ensemble store carries no
+    spread information); groups with no such lambda return {}."""
+    by_lam: Dict[float, List[RunRecord]] = {}
+    for r in group:
+        by_lam.setdefault(r.lam, []).append(r)
+    if max(len(v) for v in by_lam.values()) < min_seeds:
+        return {}
+    bands = {}
+    for metric in metrics:
+        rng = _band_rng(key, metric)
+        pts = []
+        for lam in sorted(by_lam):
+            vals = [_metric_value(r, metric) for r in by_lam[lam]]
+            vals = [v for v in vals if math.isfinite(v) and v > 0]
+            if len(vals) >= min_seeds:
+                _, lo, hi = bootstrap_band(vals, rng)
+                pts.append((lam, lo, hi))
+        if pts:
+            bands[metric] = tuple(pts)
+    return bands
 
 
 def fit_curves(records: Sequence[RunRecord],
@@ -180,7 +274,7 @@ def fit_curves(records: Sequence[RunRecord],
             model=key[0], hw=key[1], quant=key[2], n_chips=key[3],
             io_shape=key[4], price_per_hr=group[0].price_per_hr,
             theta_max=group[0].theta_max, records=tuple(group),
-            knots=knots))
+            knots=knots, bands=fit_bands(key, group)))
     return out
 
 

@@ -35,7 +35,10 @@ def _clean(obj):
 
 
 def curve_rows(curves: Sequence[DeploymentCurve]) -> List[dict]:
-    """The fitted curves as plottable knot tables (per-hw figure input)."""
+    """The fitted curves as plottable knot tables (per-hw figure input).
+    Ensemble-fitted curves (ISSUE 7) additionally carry `bands`: per
+    metric the lambda-aligned central-95% bootstrap band, ready to plot
+    as a ribbon around the knots."""
     rows = []
     for c in curves:
         rows.append(_clean({
@@ -49,6 +52,10 @@ def curve_rows(curves: Sequence[DeploymentCurve]) -> List[dict]:
             "util": [r.util for r in c.records],
             "ttft_p90_ms": [r.ttft_p90_ms for r in c.records],
             "tpot_p99_ms": [r.tpot_p99_ms for r in c.records],
+            "bands": {metric: {"lams": [p[0] for p in pts],
+                               "lo": [p[1] for p in pts],
+                               "hi": [p[2] for p in pts]}
+                      for metric, pts in sorted(c.bands.items())},
         }))
     return rows
 

@@ -1,0 +1,488 @@
+"""JIT-compiled fleet backend: the event loop as one `lax.while_loop`.
+
+`FleetEngine` (the numpy SoA fleet, PR 4) pays ~1ms of numpy dispatch
+per event *round* at 256 lanes; this module compiles the whole round to
+one XLA program so a round costs microseconds, not interpreter time.
+The numpy fleet stays the equivalence oracle — exactly the way
+`Engine._run_fast` kept the per-token loop, and the fleet kept
+`run_point`.
+
+Why this is not a transliteration
+---------------------------------
+XLA:CPU makes per-round scatters into (B, max_batch) slot tables or
+(B, n_requests) request arrays catastrophically expensive (a functional
+`.at[].set` outside the hot path copies the destination; even fused,
+a (B, S)-shaped scatter costs ~100x a (B,) op). The port therefore
+*eliminates the slot tables entirely*, which is sound for precisely the
+lanes the numpy fleet's own vectorized fast path accepts (uniform
+request shapes, no failure tracking, no re-queue fronts):
+
+* Every active slot advances by the same `k` each decode round, so a
+  request admitted when the lane's cumulative decode-step counter was
+  `K_adm` has `tokens_out = 1 + (K_now - K_adm)` — slot state collapses
+  to one per-lane counter `K` plus the admission-time snapshot.
+* Admission cohorts therefore complete in FIFO order, and because the
+  decode burst `k = min(remaining)` is exactly the *oldest* cohort's
+  remaining tokens (never more), **at most one cohort completes per
+  round**. Completion becomes a cursor walk, not a slot scan.
+* Slot ids never reach a RunRecord on untracked lanes, so the
+  free-slot stack (which only exists to keep failure-injection RNG
+  streams aligned) is replaced by the count `n_free = max_batch -
+  n_occ`; pages by `free_pages = (num_pages - 1) - n_occ * need`.
+
+The loop carries only (B,) scalars plus *cohort event logs* — per-lane
+append-only columns (Kadm, cumulative-admitted, first-token time,
+finish time) written with one-column-per-row scatters (~17us) and read
+back on the host, where `r_first`/`r_finish`/`r_out` are reconstructed
+with `np.repeat` and fed through the numpy fleet's own `_lane_record`.
+
+Equivalence and tolerance policy (see `serving.precision`)
+----------------------------------------------------------
+The arithmetic mirrors `FleetStepModel` op-for-op in float64
+(`precision.enable_x64`), and the event *decisions* (admission counts,
+closed-form burst inversion via bisection, idle jumps, horizon cuts)
+are integer/comparison-exact given equal clocks. XLA may contract
+mul+add chains into FMAs, so clocks can drift by ~1 ulp per step and
+RunRecords agree with the numpy oracle within
+`precision.jit_tolerance()` rather than bitwise; the numpy path remains
+the byte-identity surface for committed stores. Points the SoA design
+cannot express — variable request shapes, deterministic failure
+streams, resilience features, `max_new <= 1`, statically inadmissible
+shapes — route to `fleet_run_points` unchanged (which in turn routes
+retry-feedback cells to the scalar engine).
+
+Warmup is skipped, provably: a jit-eligible lane's warmup phase drains
+completely and `reset_measurement` zeroes the clocks, so the measured
+phase starts from exactly the reset state — the only state a warmup
+leaves behind is free-stack *order*, which cannot reach an untracked
+lane's record. (`tests/test_fleet_jit.py` pins record equality against
+the warmed numpy path.)
+
+Pallas note (ISSUE 7): profiling shows the compiled round is dominated
+by the four event-log scatter/gather ops and the arrival binary search,
+each already a single fused XLA:CPU loop; the admission/completion
+passes are (B,) elementwise chains XLA fuses into one kernel. A Pallas
+lowering of those passes (interpret mode on CPU) would add per-call
+overhead without removing any of the remaining cost, so the kernel
+stays un-lowered until a real accelerator target makes it worthwhile.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import types
+from typing import Callable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.serving import precision
+from repro.serving.arrivals import synth_arrays
+from repro.serving.fleet import (FleetPoint, FleetStepModel, _lane_record,
+                                 _needs_scalar, fleet_run_points)
+
+# safety valve: the event loop is bounded by ~4 rounds per request
+# (admission, completion, one arrival interrupt, one idle jump); a lane
+# still live past this cap indicates a scheduling bug and the chunk
+# falls back to the numpy oracle instead of looping forever
+_CAP_PER_REQ = 8
+_CAP_FLOOR = 256
+
+_MODEL_FIELDS = ("nc", "fixed", "is_moe", "moe_oh", "moe_ratio", "wb",
+                 "q_ratio", "kv", "ap2", "pdenom", "cdenom", "bwd",
+                 "ici_denom", "ncm1", "L2", "Lf", "dm", "attn_coef")
+
+
+class JitFallback(RuntimeError):
+    """The compiled loop could not finish the chunk (round-cap hit or a
+    dynamic scheduler stall); the caller re-runs the chunk on the numpy
+    fleet, which either finishes or raises the real error."""
+
+
+# ---------------------------------------------------------------------------
+# eligibility
+# ---------------------------------------------------------------------------
+
+
+def jit_eligible(p: FleetPoint, stream) -> bool:
+    """True iff this point can ride the jit loop with record-equivalent
+    results: untracked, uniform request shape, `max_new >= 2` (so no
+    prefill-time completions) and statically admissible (the numpy path
+    raises the scheduler-stall error for the rest)."""
+    if _needs_scalar(p) or p.failure_times:
+        return False
+    times, p_ins, p_outs = stream
+    if len(times) == 0:
+        return True                       # born-finished lane
+    if int(p_ins.min()) != int(p_ins.max()) or \
+            int(p_outs.min()) != int(p_outs.max()):
+        return False
+    uplen, umn = int(p_ins[0]), int(p_outs[0])
+    if umn < 2:
+        return False
+    s = p.engine
+    try:
+        need = -(-(uplen + umn) // int(s.page_size))
+        if (need > int(s.max_pages_per_seq)
+                or need > int(s.num_pages) - 1
+                or int(s.max_prefill_reqs) <= 0
+                or int(s.max_batch) < 1):
+            return False
+    except (AttributeError, TypeError):
+        return False                      # not a SimEngineSpec shape
+    return True
+
+
+# ---------------------------------------------------------------------------
+# compiled phase
+# ---------------------------------------------------------------------------
+
+
+def _pow2(n: int, floor: int = 8) -> int:
+    return max(floor, 1 << (max(n - 1, 0)).bit_length() if n > 1 else floor)
+
+
+@functools.lru_cache(maxsize=64)
+def _compiled_phase(ilog_n: int, ilog_k: int, cap: int) -> Callable:
+    """Build (and cache) the jitted phase runner for one search-depth /
+    round-cap bucket; jax's own jit cache further specializes on the
+    (B_pad, N_pad) array shapes."""
+    import jax
+    import jax.numpy as jnp
+    from jax import lax
+
+    def take(arr, idx):
+        return jnp.take_along_axis(arr, idx[:, None], axis=1)[:, 0]
+
+    # -- FleetStepModel mirrors (same op order; see serving.fleet) -----
+    def collective(md, tokens):
+        bytes_ar = (md["L2"] * tokens * md["dm"] * 2.0 * 2.0 *
+                    md["ncm1"] / md["nc"])
+        out = bytes_ar / md["ici_denom"]
+        return jnp.where(md["nc"] <= 1.0, 0.0, out)
+
+    def decode_terms(md, b):
+        compute = md["ap2"] * b / md["cdenom"]
+        inner = jnp.where(md["is_moe"], b * md["moe_ratio"], 1.0)
+        touched = jnp.minimum(1.0, jnp.maximum(md["q_ratio"], inner))
+        mem_base = md["wb"] * touched / md["bwd"]
+        mem_slope = b * md["kv"] / md["bwd"]
+        moe_term = jnp.where(md["is_moe"], md["moe_oh"] * b, 0.0)
+        const = collective(md, b) + moe_term + md["fixed"]
+        return compute, mem_base, mem_slope, const
+
+    def jump(terms, ctx0, kf):
+        compute, mem_base, slope, const = terms
+        mem0 = mem_base + slope * ctx0
+        m = jnp.ceil((compute - mem0) / slope)
+        m = jnp.minimum(jnp.maximum(m, 0.0), kf)
+        series = (kf - m) * mem0 + slope * (m + kf - 1.0) * (kf - m) / 2.0
+        out = m * compute + series + kf * const
+        flat = kf * (jnp.maximum(compute, mem0) + const)
+        return jnp.where(slope <= 0.0, flat, out)
+
+    def prefill_time(md, n_tok, n_breq):
+        mean_len = n_tok / jnp.maximum(n_breq, 1.0)
+        flops = md["ap2"] * n_tok
+        flops = flops + md["attn_coef"] * n_tok * mean_len
+        compute = flops / md["pdenom"]
+        mem_bytes = md["wb"] + 2.0 * n_tok * md["dm"] * 2.0 * md["Lf"]
+        memory = mem_bytes / md["bwd"]
+        moe_term = jnp.where(md["is_moe"], md["moe_oh"] * n_tok, 0.0)
+        out = (jnp.maximum(compute, memory) + collective(md, n_tok) +
+               moe_term + md["fixed"])
+        return jnp.where(n_tok == 0.0, 0.0, out)
+
+    def phase(md, ec, r_arr):
+        fdt = r_arr.dtype
+        B, W = r_arr.shape                 # W == N_pad + 1
+        dump = W - 1
+        rows = jnp.arange(B)
+        idt = ec["n_req"].dtype
+        one = jnp.ones((), idt)
+        n_req, mb = ec["n_req"], ec["mb"]
+        uplen, umn, uneed = ec["uplen"], ec["umn"], ec["uneed"]
+        pf_budget, max_pf_reqs = ec["pf_budget"], ec["max_pf_reqs"]
+        num_pages, horizon = ec["num_pages"], ec["horizon"]
+
+        def searchsorted_right(t):
+            lo = jnp.zeros(B, idt)
+            hi = jnp.full(B, dump, idt)
+            for _ in range(ilog_n):
+                act = lo < hi
+                mid = (lo + hi) // 2
+                le = take(r_arr, mid) <= t
+                lo = jnp.where(act & le, mid + one, lo)
+                hi = jnp.where(act & ~le, mid, hi)
+            return lo
+
+        def cond(st):
+            return st[1].any() & (st[0] < cap)
+
+        def body(st):
+            (i, live, stall, t, area, K, q_next, arrived, ncomp, crd, ne,
+             ctx_sum, head_K, head_Q, KadmE, QadmE, TfirstE, TfinE) = st
+            n_occ = q_next - ncomp
+            live = live & ((arrived < n_req) | (q_next < arrived)
+                           | (n_occ > 0))
+            alive = live
+            # 1. horizon
+            hb = alive & (t >= horizon)
+            live, alive = live & ~hb, alive & ~hb
+            # 3. idle regime: jump to the next arrival, replay horizon
+            next_arr = take(r_arr, arrived)
+            idle = (alive & (n_occ == 0) & (q_next == arrived)
+                    & (arrived < n_req) & (next_arr > t))
+            t = jnp.where(idle, t + jnp.maximum(next_arr - t, 1e-6), t)
+            hb = idle & (t >= horizon)
+            live, alive = live & ~hb, alive & ~hb
+            # 4. arrivals (np.searchsorted side="right"; inf padding).
+            # The search is skipped outright on rounds with no arrivals
+            # (numpy's `if move.any()`), which most decode rounds are.
+            move = alive & (next_arr <= t)
+            arrived = lax.cond(
+                move.any(),
+                lambda a: jnp.where(move, searchsorted_right(t), a),
+                lambda a: a, arrived)
+            next_arr = take(r_arr, arrived)
+            # 5. admission: the numpy fast path's closed-form FCFS count
+            free_pages = (num_pages - one) - n_occ * uneed
+            n_free = mb - n_occ
+            can = (alive & (q_next < arrived) & (n_occ < mb)
+                   & (free_pages >= uneed))
+            n = jnp.maximum(pf_budget // uplen, one)
+            n = jnp.minimum(n, max_pf_reqs)
+            n = jnp.minimum(n, arrived - q_next)
+            n = jnp.minimum(n, free_pages // uneed)
+            n = jnp.minimum(n, n_free)
+            cnt = jnp.where(can, n, jnp.zeros((), idt))
+            had_batch = cnt > 0
+            # 6. prefill
+            n_tok = cnt * uplen
+            dt = prefill_time(md, n_tok.astype(fdt), cnt.astype(fdt))
+            n_occ = n_occ + cnt
+            t = jnp.where(had_batch, t + dt, t)
+            area = jnp.where(had_batch, area + n_occ * dt, area)
+            ctx_sum = ctx_sum + n_tok
+            q_next = q_next + cnt
+            # cohort event log (one cohort per admission round)
+            col = jnp.where(had_batch, ne, dump)
+            KadmE = KadmE.at[rows, col].set(K)
+            QadmE = QadmE.at[rows, col].set(q_next)
+            TfirstE = TfirstE.at[rows, col].set(t)
+            new_head = (crd == ne) & had_batch
+            ne = ne + had_batch.astype(idt)
+            head_K = jnp.where(new_head, K, head_K)
+            head_Q = jnp.where(new_head, q_next, head_Q)
+            # 7. decode: closed-form jump, event-budget bisection
+            dec = alive & (n_occ > 0)
+            rem = (head_K + (umn - one)) - K
+            k = jnp.maximum(jnp.where(had_batch, one, rem), one)
+            q_empty = q_next == arrived
+            cand = jnp.where(q_empty & (arrived < n_req),
+                             next_arr - t, jnp.inf)
+            cand = jnp.minimum(cand, horizon - t)
+            n_eff = jnp.maximum(n_occ, one)
+            b = n_eff.astype(fdt)
+            ctx0 = ctx_sum / n_eff
+            terms = decode_terms(md, b)
+            dtd = jump(terms, ctx0, k.astype(fdt))
+            bis = dec & (k > one) & (dtd >= cand)
+
+            def budget_cut(ops):
+                # smallest k' in [1, k] with S(k') >= budget — pure
+                # bisection; S is strictly increasing so the minimal k'
+                # is unique and matches the numpy closed-form+verify
+                # inversion integer-for-integer
+                k0, dtd0 = ops
+                lo, hi = jnp.ones(B, idt), k0
+                for _ in range(ilog_k):
+                    act = bis & (lo < hi)
+                    mid = (lo + hi) // 2
+                    ge = jump(terms, ctx0, mid.astype(fdt)) >= cand
+                    hi = jnp.where(act & ge, mid, hi)
+                    lo = jnp.where(act & ~ge, mid + one, lo)
+                k1 = jnp.where(bis, lo, k0)
+                return k1, jnp.where(bis, jump(terms, ctx0,
+                                               k1.astype(fdt)), dtd0)
+
+            # skipped whole on rounds with no budget-cut lane (numpy's
+            # `if bis.any()`): the unrolled probe chain dominates the
+            # round's op count when it runs
+            k, dtd = lax.cond(bis.any(), budget_cut, lambda o: o, (k, dtd))
+            t = jnp.where(dec, t + dtd, t)
+            area = jnp.where(dec, area + n_occ * dtd, area)
+            ctx_sum = jnp.where(dec, ctx_sum + k * n_occ, ctx_sum)
+            K = jnp.where(dec, K + k, K)
+            # 8. completion: at most one cohort per round (module doc)
+            done_c = dec & (crd < ne) & (head_K <= K - (umn - one))
+            ndone = jnp.where(done_c, head_Q - ncomp, jnp.zeros((), idt))
+            ncomp = ncomp + ndone
+            ctx_sum = ctx_sum - ndone * (uplen + (umn - one))
+            TfinE = TfinE.at[rows,
+                             jnp.where(done_c, crd, dump)].set(t)
+            crd = crd + done_c.astype(idt)
+            head_K = jnp.where(done_c, take(KadmE, crd), head_K)
+            head_Q = jnp.where(done_c, take(QadmE, crd), head_Q)
+            # 9. no work: advance to the next arrival or flag a stall
+            nw = alive & ~had_batch & ~dec
+            pend = nw & (arrived < n_req)
+            t = jnp.where(pend, t + jnp.maximum(next_arr - t, 1e-6), t)
+            stall = stall | (nw & ~pend & (q_next < arrived))
+            live = live & ~(nw & ~pend)
+            return (i + 1, live, stall, t, area, K, q_next, arrived,
+                    ncomp, crd, ne, ctx_sum, head_K, head_Q,
+                    KadmE, QadmE, TfirstE, TfinE)
+
+        zi = jnp.zeros(B, idt)
+        zf = jnp.zeros(B, fdt)
+        init = (jnp.zeros((), idt), jnp.ones(B, bool), jnp.zeros(B, bool),
+                zf, zf, zi, zi, zi, zi, zi, zi, zi, zi, zi,
+                jnp.zeros((B, W), idt), jnp.zeros((B, W), idt),
+                jnp.zeros((B, W), fdt), jnp.zeros((B, W), fdt))
+        out = lax.while_loop(cond, body, init)
+        (i, live, stall, t, area, _K, q_next, _arr, ncomp, crd, ne,
+         _ctx, _hk, _hq, _KadmE, QadmE, TfirstE, TfinE) = out
+        return (live, stall, t, area, ncomp, crd, ne,
+                QadmE, TfirstE, TfinE)
+
+    return jax.jit(phase)
+
+
+# ---------------------------------------------------------------------------
+# host wrapper
+# ---------------------------------------------------------------------------
+
+
+def _edge_pad(a: np.ndarray, b_pad: int) -> np.ndarray:
+    return np.pad(a, (0, b_pad - len(a)), mode="edge")
+
+
+def _run_jit_fleet(points: Sequence[FleetPoint], streams) -> List:
+    """Run jit-eligible points as lanes of one compiled phase; returns
+    per-lane RunRecords. Raises `JitFallback` when the compiled loop
+    could not finish (caller re-runs on the numpy fleet)."""
+    import jax.numpy as jnp
+
+    from repro.configs import get_config
+    from repro.simulate import HW_BY_NAME, StepTimeModel
+
+    fdt = np.float64 if precision.active_x64() else np.float32
+    idt = np.int64 if precision.active_x64() else np.int32
+    B = len(points)
+    n_req = np.asarray([len(s[0]) for s in streams], idt)
+    N = int(n_req.max()) if B else 0
+    n_pad = _pow2(N)
+    b_pad = _pow2(B)
+
+    models = []
+    for p in points:
+        s = p.engine
+        models.append(StepTimeModel(get_config(s.arch), HW_BY_NAME[s.hw],
+                                    n_chips=s.n_chips, quant=s.quant))
+    fm = FleetStepModel(models)
+    md = {}
+    for name in _MODEL_FIELDS:
+        arr = getattr(fm, name)
+        if arr.dtype == bool:
+            md[name] = jnp.asarray(_edge_pad(arr, b_pad))
+        else:
+            md[name] = jnp.asarray(_edge_pad(arr.astype(fdt), b_pad))
+
+    ivec = lambda key: _edge_pad(                            # noqa: E731
+        np.asarray([key(p.engine) for p in points], idt), b_pad)
+    uplen = np.asarray(
+        [int(s[1][0]) if len(s[0]) else 1 for s in streams], idt)
+    umn = np.asarray(
+        [int(s[2][0]) if len(s[0]) else 2 for s in streams], idt)
+    page_size = np.asarray([int(p.engine.page_size) for p in points], idt)
+    uneed = (-(-(uplen + umn) // page_size)).astype(idt)
+    ec = {
+        "n_req": _edge_pad(n_req, b_pad) if B else n_req,
+        "mb": ivec(lambda s: int(s.max_batch)),
+        "pf_budget": ivec(lambda s: int(s.prefill_token_budget)),
+        "max_pf_reqs": ivec(lambda s: int(s.max_prefill_reqs)),
+        "num_pages": ivec(lambda s: int(s.num_pages)),
+        "uplen": _edge_pad(uplen, b_pad),
+        "umn": _edge_pad(umn, b_pad),
+        "uneed": _edge_pad(uneed, b_pad),
+        "horizon": _edge_pad(np.asarray(
+            [np.inf if p.horizon is None else float(p.horizon)
+             for p in points], fdt), b_pad),
+    }
+    # padding lanes are born finished
+    ec["n_req"][B:] = 0
+    ec = {k: jnp.asarray(v) for k, v in ec.items()}
+
+    r_arr = np.full((b_pad, n_pad + 1), np.inf, fdt)
+    for i, (times, _pi, _po) in enumerate(streams):
+        r_arr[i, :len(times)] = times
+
+    ilog_n = (n_pad + 1).bit_length()
+    ilog_k = max(1, int(umn.max()) if B else 2).bit_length()
+    cap = max(_CAP_FLOOR, _CAP_PER_REQ * n_pad)
+    phase = _compiled_phase(ilog_n, ilog_k, cap)
+    (live, stall, t, area, ncomp, crd, ne, QadmE, TfirstE, TfinE) = [
+        np.asarray(a) for a in phase(md, ec, jnp.asarray(r_arr))]
+    if live[:B].any() or stall[:B].any():
+        raise JitFallback(
+            "compiled fleet loop did not converge "
+            f"(live={int(live[:B].sum())}, stall={int(stall[:B].sum())})")
+
+    # -- host-side record reconstruction (cohort logs -> request rows) --
+    r_first = np.full((B, N), np.nan)
+    r_finish = np.full((B, N), np.nan)
+    r_out = np.zeros((B, N), np.int64)
+    r_plen = np.zeros((B, N), np.int64)
+    for i in range(B):
+        ne_i, crd_i, nc_i = int(ne[i]), int(crd[i]), int(ncomp[i])
+        r_plen[i, :] = uplen[i]
+        if ne_i == 0:
+            continue
+        q = QadmE[i, :ne_i].astype(np.int64)
+        cnt = np.diff(np.concatenate(([0], q)))
+        n_adm = int(q[-1])
+        r_first[i, :n_adm] = np.repeat(TfirstE[i, :ne_i], cnt)
+        r_out[i, :n_adm] = 1
+        if crd_i:
+            r_finish[i, :nc_i] = np.repeat(TfinE[i, :crd_i], cnt[:crd_i])
+            r_out[i, :nc_i] = umn[i]
+    view = types.SimpleNamespace(
+        n_req=n_req.astype(np.int64), r_arr=r_arr[:B].astype(np.float64),
+        r_plen=r_plen, r_first=r_first, r_finish=r_finish, r_out=r_out,
+        t=t[:B].astype(np.float64), area=area[:B].astype(np.float64))
+    return [_lane_record(view, i, p) for i, p in enumerate(points)]
+
+
+def jit_run_points(points: Sequence[FleetPoint],
+                   on_result=None) -> List:
+    """`fleet_run_points` with the compiled loop for every point it can
+    express; the rest (and any chunk the compiled loop rejects) run on
+    the numpy fleet unchanged. Records agree with the numpy oracle
+    within `precision.jit_tolerance()`; `on_result(index, record)`
+    fires per lane once its phase completes (chunk-granular for the
+    compiled lanes)."""
+    if not points:
+        return []
+    precision.enable_x64()
+    streams = [synth_arrays(p.arrivals) for p in points]
+    jit_ids = [i for i, p in enumerate(points)
+               if jit_eligible(p, streams[i])]
+    out: List = [None] * len(points)
+    rest = [i for i in range(len(points)) if i not in set(jit_ids)]
+    if rest:
+        def _sub(j: int, rec):
+            out[rest[j]] = rec
+            if on_result is not None:
+                on_result(rest[j], rec)
+        fleet_run_points([points[i] for i in rest], on_result=_sub)
+    if jit_ids:
+        sub_pts = [points[i] for i in jit_ids]
+        try:
+            recs = _run_jit_fleet(sub_pts, [streams[i] for i in jit_ids])
+        except JitFallback:
+            recs = fleet_run_points(sub_pts)
+        for j, rec in zip(jit_ids, recs):
+            out[j] = rec
+            if on_result is not None:
+                on_result(j, rec)
+    return out

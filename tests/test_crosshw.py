@@ -243,3 +243,53 @@ def test_live_crosshw_matrix_reproduces_spread_band(tmp_path):
     assert inv[("tpu-v5e", "llama31-8b")]["inverted"]
     assert not inv[("tpu-v6e", "llama31-8b")]["inverted"]
     assert all(r["consistent"] for r in inv.values())
+
+
+# ---- the committed paper_ensemble store (ISSUE 7) ---------------------
+
+
+def test_committed_ensemble_store_confidence_bands():
+    """Acceptance: the committed `paper_ensemble` store carries finite
+    central-95% bands on every penalty/C_eff curve — every atlas group
+    at N=16 arrival seeds — and they are threaded into the planner's
+    fitted curves."""
+    from repro.experiments.analyze import ensemble_bands
+    from repro.planner.curves import fit_curves
+    recs = load_store_records("paper_ensemble")
+    if len(recs) < 2016:
+        pytest.skip("paper_ensemble store not populated")
+    bands = ensemble_bands(recs)
+    assert len(bands) == 18              # 3 models x 3 hw x 2 quants
+    import math
+    for row in bands:
+        assert row["n_seeds"] == 16
+        assert len(row["lams"]) == 7
+        for metric in ("c_eff", "penalty", "util"):
+            for lo, mean, hi in zip(row[metric]["lo"], row[metric]["mean"],
+                                    row[metric]["hi"]):
+                assert math.isfinite(lo) and math.isfinite(hi)
+                assert 0 < lo <= mean <= hi
+        # n=16 must actually tighten the claim: the widest C_eff CI
+        # half-width stays under 25% of the mean on every curve
+        assert 0 <= row["max_rel_halfwidth_c_eff"] < 0.25
+    # the bands ride the planner's fitted curves from the same store
+    curves = fit_curves(recs)
+    assert len(curves) == 18
+    for c in curves:
+        assert set(c.bands) == {"c_eff", "util", "tps"}
+        lo, hi = c.band("c_eff", c.lam_min)
+        assert 0 < lo <= hi
+        # the band brackets the aggregated knot the planner interpolates
+        assert lo <= c.c_eff(c.lam_min) <= hi
+
+
+def test_committed_ensemble_analysis_json_matches_fresh_derivation():
+    recs = load_store_records("paper_ensemble")
+    if len(recs) < 2016:
+        pytest.skip("paper_ensemble store not populated")
+    path = DEFAULT_ROOT / "paper_ensemble" / "analysis.json"
+    if not path.exists():
+        pytest.skip("analysis.json not committed")
+    blob = json.loads(path.read_text())
+    fresh = json.loads(json.dumps(crosshw_tables(recs)))
+    assert blob == fresh

@@ -409,3 +409,84 @@ def test_unknown_plan_and_protocol_raise():
         get_plan("nope")
     with pytest.raises(KeyError):
         _mini_spec(protocol="nope").expand()
+
+
+# ---- work-stealing lane scheduler (ISSUE 7) --------------------------
+
+
+def test_work_stealing_chunker_store_byte_identity(tmp_path, monkeypatch):
+    """The shared-deque chunker re-chunks lanes adaptively across pool
+    workers; lanes are independent and the store consolidates in plan
+    order, so the artifacts must stay byte-identical to the serial
+    fixed-width path no matter how the queue drained."""
+    import repro.experiments.runner as runner_mod
+    from repro.experiments.runner import shutdown_pool
+    plan = get_plan("mini_crosshw")
+    ref = ExperimentStore(plan.name, tmp_path / "serial")
+    PlanRunner(plan, store=ref).run(parallel=False, backend="vector")
+    # steal-width floor of 1 + tiny cap -> many 1-2 cell chunks through
+    # the shared queue, exercising refill-on-completion and the final
+    # ragged chunk
+    monkeypatch.setattr(runner_mod, "MIN_FLEET_LANE_WIDTH", 1)
+    shutdown_pool()
+    stolen = ExperimentStore(plan.name, tmp_path / "stolen")
+    PlanRunner(plan, store=stolen).run(parallel=True, backend="vector",
+                                       max_workers=2, lane_width=2)
+    shutdown_pool()
+    assert ref.csv_path.read_bytes() == stolen.csv_path.read_bytes()
+    assert ref.manifest_path.read_bytes() == stolen.manifest_path.read_bytes()
+    for cell in plan.cells:
+        assert ref.cell_path(cell).read_bytes() == \
+            stolen.cell_path(cell).read_bytes()
+
+
+# ---- Monte-Carlo ensemble axis (ISSUE 7) -----------------------------
+
+
+def test_seed_offset_zero_preserves_base_plan():
+    """Offset 0 stays out of cell ids, seed keys and fingerprints: the
+    ensemble plan's base replicate is the historical plan, cell for
+    cell."""
+    base = get_plan("mini_2x2")
+    ens = get_plan("mini_ensemble")
+    base_rep = [c for c in ens.cells if c.seed_offset == 0]
+    assert [c.cell_id for c in base_rep] == [c.cell_id for c in base.cells]
+    assert [c.seed for c in base_rep] == [c.seed for c in base.cells]
+    # fingerprint ignores the default-zero offset (stores committed
+    # before the axis existed keep resuming) but keys on nonzero ones
+    c0 = base.cells[0]
+    spec = dataclasses.asdict(c0)
+    spec.pop("seed_offset")
+    import hashlib
+    legacy = hashlib.sha256(
+        json.dumps(spec, sort_keys=True).encode()).hexdigest()[:16]
+    assert c0.fingerprint() == legacy
+    assert dataclasses.replace(c0, seed_offset=1).fingerprint() != legacy
+
+
+def test_seed_offsets_draw_independent_streams():
+    ens = get_plan("mini_ensemble")
+    assert len(ens.cells) == 16 and len(ens.groups()) == 8
+    by_lam_offsets = {}
+    for c in ens.cells:
+        by_lam_offsets.setdefault((c.arch, c.lam), []).append(c)
+    for (_, _), reps in by_lam_offsets.items():
+        assert len(reps) == 4
+        assert len({c.seed for c in reps}) == 4          # distinct streams
+        assert len({c.cell_id for c in reps}) == 4
+        # replicates share everything but the arrival realization
+        assert len({(c.n_requests, c.warmup, c.max_batch) for c in reps}) == 1
+    # nonzero offsets tag the id, and each offset is its own ladder group
+    assert sorted({c.seed_offset for c in ens.cells}) == [0, 1, 2, 3]
+    for c in ens.cells:
+        assert (f"_s{c.seed_offset}" in c.cell_id) == (c.seed_offset > 0)
+
+
+def test_paper_ensemble_plan_shape():
+    plan = get_plan("paper_ensemble")
+    assert len(plan.cells) == 2016                # 18 groups x 7 lams x 16
+    assert len({c.cell_id for c in plan.cells}) == 2016
+    assert len(plan.groups()) == 288              # 18 x 16 ladder groups
+    combos = {(c.arch, c.hw, c.quant) for c in plan.cells}
+    assert len(combos) == 18
+    assert {c.seed_offset for c in plan.cells} == set(range(16))

@@ -1,0 +1,235 @@
+"""Jit fleet backend (ISSUE 7): the equivalence matrix.
+
+Three layers, mirroring the PR-4 fleet discipline one precision notch
+down:
+
+* The numpy path stays the *bitwise* oracle — `precision.enable_x64`
+  must not move a single bit of `FleetStepModel` outputs or of the
+  committed-store records the numpy fleet regenerates.
+* Jit-vs-numpy RunRecords agree within the documented tolerance
+  (`precision.jit_tolerance()`): every float field approx-equal, every
+  int/str field exactly equal, on all three mini plans.
+* Routing: retry-feedback / failure-injected / non-uniform cells fall
+  back to the scalar-capable numpy path inside `jit_run_points`, and
+  the `backend="jit"` execution path produces a complete store.
+"""
+import dataclasses
+import math
+
+import pytest
+
+from repro.core.sweep import SimEngineSpec
+from repro.experiments import ExperimentStore, PlanRunner, get_plan
+from repro.experiments.plan import ladder_plan
+from repro.experiments.runner import execute_cells
+from repro.serving import precision
+from repro.serving.arrivals import synth_arrays
+from repro.serving.fleet import FleetPoint, FleetStepModel, fleet_run_points
+from repro.serving.fleet_jit import jit_eligible, jit_run_points
+
+jax = pytest.importorskip("jax")
+
+
+def _points(cells, factory=None):
+    return [FleetPoint(engine=factory or c.engine_spec(),
+                       arrivals=c.arrival_spec(), warmup=c.warmup,
+                       horizon=c.horizon, failure_times=c.failure_times,
+                       **c.record_kw())
+            for c in cells]
+
+
+def _assert_records_close(oracle, got, ctx=""):
+    """Float fields within `precision.jit_tolerance()`, everything else
+    exactly equal — the documented jit-vs-numpy agreement contract."""
+    rtol, atol = precision.jit_tolerance()
+    assert len(oracle) == len(got)
+    for a, b in zip(oracle, got):
+        da, db = dataclasses.asdict(a), dataclasses.asdict(b)
+        assert da.keys() == db.keys()
+        for key in da:
+            va, vb = da[key], db[key]
+            if isinstance(va, float):
+                if math.isnan(va):
+                    assert math.isnan(vb), (ctx, a.lam, key)
+                else:
+                    assert vb == pytest.approx(va, rel=rtol, abs=atol), \
+                        (ctx, a.model, a.hw, a.quant, a.lam, key, va, vb)
+            else:
+                assert va == vb, (ctx, a.model, a.lam, key, va, vb)
+
+
+def _assert_records_equal(xs, ys, ctx=""):
+    assert len(xs) == len(ys)
+    for a, b in zip(xs, ys):
+        da, db = dataclasses.asdict(a), dataclasses.asdict(b)
+        for key in da:
+            assert repr(da[key]) == repr(db[key]), \
+                (ctx, a.model, a.hw, a.quant, a.lam, key, da[key], db[key])
+
+
+# ---- precision policy --------------------------------------------------
+
+
+def test_enable_x64_active_and_tolerance_switch(monkeypatch):
+    assert precision.enable_x64()           # container jax supports x64
+    assert precision.active_x64()
+    assert precision.jit_tolerance() == precision.X64_TOLERANCE
+    # the f32 fallback bound is what callers would see without x64
+    monkeypatch.setitem(precision._STATE, "enabled", False)
+    assert not precision.active_x64()
+    assert precision.jit_tolerance() == precision.F32_TOLERANCE
+    # the bounds themselves are ordered: x64 is the tight one
+    assert precision.X64_TOLERANCE[0] < precision.F32_TOLERANCE[0]
+
+
+def test_enable_x64_leaves_numpy_step_model_bitwise():
+    """The satellite guard: flipping jax's dtype config cannot move a
+    bit of the pure-numpy roofline (the committed stores' oracle)."""
+    from repro.configs import get_config
+    from repro.simulate import HW_BY_NAME, StepTimeModel
+    import numpy as np
+    models = [StepTimeModel(get_config("llama31-8b"),
+                            HW_BY_NAME["tpu-v5e"], n_chips=2),
+              StepTimeModel(get_config("qwen3-30b-a3b"),
+                            HW_BY_NAME["tpu-v6e"], n_chips=2, quant="fp8")]
+    b = np.array([17.0, 203.0])
+    ctx = np.array([512.0, 37.5])
+    k = np.array([9.0, 411.0])
+    before = FleetStepModel(models)
+    dt0 = before.decode_time(b, ctx).tobytes()
+    dtm0 = before.decode_time_multi(b, ctx, k).tobytes()
+    pf0 = before.prefill_time(b, ctx).tobytes()
+    assert precision.enable_x64()
+    after = FleetStepModel(models)      # rebuilt under the jax flag
+    assert after.decode_time(b, ctx).tobytes() == dt0
+    assert after.decode_time_multi(b, ctx, k).tobytes() == dtm0
+    assert after.prefill_time(b, ctx).tobytes() == pf0
+
+
+# ---- jit-vs-numpy equivalence matrix -----------------------------------
+
+
+@pytest.mark.parametrize("plan_name",
+                         ["mini_2x2", "mini_crosshw", "mini_resilience"])
+def test_jit_records_match_numpy_within_tolerance(plan_name):
+    """The tentpole contract on every mini plan: the numpy fleet is the
+    oracle, the jit backend agrees field-for-field within the
+    documented tolerance (mini_resilience rides the scalar fallback
+    inside jit_run_points, so it is exact by construction)."""
+    cells = list(get_plan(plan_name).cells)
+    oracle = fleet_run_points(_points(cells))
+    got = jit_run_points(_points(cells))
+    _assert_records_close(oracle, got, plan_name)
+
+
+def test_jit_on_result_streams_every_lane():
+    cells = list(get_plan("mini_crosshw").cells)
+    seen = {}
+    recs = jit_run_points(_points(cells),
+                          on_result=lambda i, r: seen.setdefault(i, r))
+    assert sorted(seen) == list(range(len(cells)))
+    for i, rec in enumerate(recs):
+        assert seen[i] is rec
+
+
+def test_uniform_warmup_lanes_ride_jit_with_identical_records():
+    """Warmup is a measurement-phase no-op for jit-eligible lanes (the
+    jit loop skips it outright); records must still match the numpy
+    fleet, which replays the full warmup protocol."""
+    fac = SimEngineSpec("llama31-8b", max_batch=64, num_pages=8192)
+    plan = ladder_plan(ladder=(5, 25), arch="llama31-8b",
+                       model="llama31-8b", hw="tpu-v5e",
+                       requests_per_point=lambda lam: 150,
+                       warmup_per_point=lambda lam: 25)
+    pts = _points(list(plan.cells), factory=fac)
+    assert all(jit_eligible(p, synth_arrays(p.arrivals)) for p in pts)
+    _assert_records_close(fleet_run_points(pts), jit_run_points(pts),
+                          "warmup")
+
+
+# ---- scalar-fallback routing -------------------------------------------
+
+
+def test_resilient_cells_are_not_jit_eligible():
+    """Retry-feedback cells (failure injection, client retries, shed /
+    deadline admission control) must route to the scalar path — the jit
+    loop has no failure machinery by design."""
+    for cell in get_plan("mini_resilience").cells:
+        p = _points([cell])[0]
+        stream = synth_arrays(p.arrivals)
+        assert jit_eligible(p, stream) == (not cell.resilient)
+
+
+def test_failure_times_and_nonuniform_shapes_fall_back():
+    fac = SimEngineSpec("llama31-8b", max_batch=64, num_pages=8192)
+    plan = ladder_plan(ladder=(10,), arch="llama31-8b",
+                       model="llama31-8b", hw="tpu-v5e",
+                       requests_per_point=lambda lam: 60,
+                       warmup_per_point=lambda lam: 0)
+    base = _points(list(plan.cells), factory=fac)[0]
+    assert jit_eligible(base, synth_arrays(base.arrivals))
+    # explicit failure injection -> scalar path
+    failed = dataclasses.replace(base, failure_times=(0.5,))
+    assert not jit_eligible(failed, synth_arrays(failed.arrivals))
+    # sampled (non-uniform) request shapes -> numpy fleet path (the
+    # log-normal tail needs a bigger per-seq page budget than the mini
+    # engine default, on any backend)
+    sampled = dataclasses.replace(
+        base,
+        engine=dataclasses.replace(fac, max_pages_per_seq=512),
+        arrivals=dataclasses.replace(base.arrivals, io_shape="variable"))
+    assert not jit_eligible(sampled, synth_arrays(sampled.arrivals))
+    # a mixed batch still returns one record per point, in order
+    mixed = [base, failed, sampled]
+    oracle = fleet_run_points(mixed)
+    got = jit_run_points(mixed)
+    _assert_records_close(oracle, got, "mixed-routing")
+
+
+# ---- execution backend ---------------------------------------------------
+
+
+def test_jit_backend_store_complete_and_tolerance_identical(tmp_path):
+    """`backend="jit"` fills a complete store whose records agree with
+    the vector backend's within tolerance (the CI matrix-smoke check)."""
+    plan = get_plan("mini_2x2")
+    s1 = ExperimentStore(plan.name, tmp_path / "vector")
+    s2 = ExperimentStore(plan.name, tmp_path / "jit")
+    vec = PlanRunner(plan, store=s1).run(parallel=False, backend="vector")
+    jit = PlanRunner(plan, store=s2).run(parallel=False, backend="jit")
+    assert len(jit) == len(plan.cells)
+    assert len(s2.completed_ids(plan)) == len(plan.cells)
+    _assert_records_close(vec, jit, "jit-store")
+
+
+def test_jit_backend_handles_reference_cells():
+    """fast_forward=False cells cannot ride any fleet lane; the jit
+    backend must route them through the per-cell path transparently."""
+    plan = get_plan("mini_2x2")
+    mixed = [dataclasses.replace(c, fast_forward=(i % 2 == 0))
+             for i, c in enumerate(plan.cells)]
+    process = execute_cells(mixed, parallel=False, backend="process")
+    jit = execute_cells(mixed, parallel=False, backend="jit")
+    _assert_records_close(process, jit, "mixed-ff")
+
+
+# ---- committed-store regeneration (numpy oracle) ------------------------
+
+
+def test_committed_atlas_cells_regenerate_bitwise_on_numpy_path():
+    """Acceptance: enabling x64 for the jit backend leaves the numpy
+    fleet byte-identical to the committed stores. Re-runs a sample of
+    committed `paper_atlas` cells (cheap low-lambda paper-protocol
+    points) through the numpy fleet under the jax flag and repr-compares
+    against the stored records."""
+    plan = get_plan("paper_atlas")
+    store = ExperimentStore(plan.name)
+    stored = store.load_cell_records(plan)
+    if len(stored) < len(plan.cells):
+        pytest.skip("paper_atlas store not populated")
+    assert precision.enable_x64()
+    sample = [c for c in plan.cells if c.lam <= 1.25][:4]
+    assert len(sample) == 4
+    fresh = fleet_run_points(_points(sample))
+    _assert_records_equal([stored[c.cell_id] for c in sample], fresh,
+                          "committed-atlas")
