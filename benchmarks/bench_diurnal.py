@@ -1,0 +1,97 @@
+"""lambda(t) layer cost (ISSUE 8). Informational only, no CI gate.
+
+Three timings an operator of the day-pricing pipeline cares about:
+
+* `thinning-stream` — arrivals/s of the Lewis-Shedler thinning generator
+  on a diurnal profile vs the legacy homogeneous generator at the same
+  mean rate: what non-stationarity costs the stream synthesizer.
+* `constant-bypass` — the byte-identity fast path: a constant profile
+  must route through the legacy generator, so wrapping a stationary spec
+  in a profile should cost ~nothing.
+* `day-pricing` — simulate_policy + price_day over the committed
+  `paper_day` scenario (every deployment x policy), and the full
+  `diurnal_tables` analysis over the committed `paper_diurnal` store:
+  the interactive cost of re-pricing a day.
+"""
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.serving import ArrivalSpec, RateProfile, synth_arrays
+from repro.serving.arrivals import profile_arrivals
+from repro.serving.autoscale import PAPER_DAY, price_day
+
+
+def _timed(fn, n):
+    best, out = float("inf"), None
+    for _ in range(n):
+        t0 = time.perf_counter()
+        out = fn()
+        best = min(best, time.perf_counter() - t0)
+    return best, out
+
+
+def run(quick: bool = False):
+    n = 3 if quick else 6
+    n_req = 20_000 if quick else 100_000
+    rows = []
+
+    prof = RateProfile.diurnal(trough=2.0, peak=14.0, period_s=86400.0)
+    t_thin, times = _timed(
+        lambda: profile_arrivals(np.random.default_rng(0), prof, n_req), n)
+    t_legacy, _ = _timed(
+        lambda: synth_arrays(ArrivalSpec(lam=prof.mean_rate(),
+                                         n_requests=n_req, seed=0)), n)
+    rows.append({"case": "thinning-stream", "n": n_req,
+                 "wall_s": t_thin, "baseline_s": t_legacy,
+                 "ratio": t_thin / t_legacy,
+                 "arrivals_per_s": n_req / t_thin})
+
+    spec = ArrivalSpec(lam=8.0, n_requests=n_req, seed=1)
+    wrapped = ArrivalSpec(lam=8.0, n_requests=n_req, seed=1,
+                          profile=RateProfile.constant(8.0))
+    t_plain, _ = _timed(lambda: synth_arrays(spec), n)
+    t_wrap, _ = _timed(lambda: synth_arrays(wrapped), n)
+    rows.append({"case": "constant-bypass", "n": n_req,
+                 "wall_s": t_wrap, "baseline_s": t_plain,
+                 "ratio": t_wrap / t_plain,
+                 "arrivals_per_s": n_req / t_wrap})
+
+    def price_paper_day():
+        out = 0.0
+        for dep in PAPER_DAY.deployments:
+            cap = dep.lam_cap
+            for traj in PAPER_DAY.trajectories(dep).values():
+                out += price_day(
+                    traj, price_per_hr=dep.price_per_hr,
+                    tps_at=lambda lam: min(lam, cap) * 256.0,
+                    lam_cap=cap)["daily_cost_usd"]
+        return out
+
+    t_day, _ = _timed(price_paper_day, n)
+    n_traj = len(PAPER_DAY.deployments) * (1 + len(PAPER_DAY.policies))
+    rows.append({"case": "day-pricing", "n": n_traj,
+                 "wall_s": t_day, "baseline_s": float("nan"),
+                 "ratio": float("nan"),
+                 "arrivals_per_s": n_traj / t_day})
+
+    try:
+        from repro.experiments.analyze import (diurnal_tables,
+                                               load_store_records)
+        records = load_store_records("paper_diurnal")
+    except OSError:
+        records = []
+    if records:
+        t_tab, tab = _timed(lambda: diurnal_tables(records), n)
+        rows.append({"case": "diurnal-tables", "n": len(records),
+                     "wall_s": t_tab, "baseline_s": float("nan"),
+                     "ratio": float("nan"),
+                     "arrivals_per_s": len(tab) / t_tab})
+    else:
+        print("# paper_diurnal store absent; analysis section skipped")
+    emit("diurnal", rows)
+
+
+if __name__ == "__main__":
+    run(quick=True)

@@ -9,7 +9,8 @@ from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
 
-from benchmarks import (bench_engine_throughput, bench_fig1_cost_curves,
+from benchmarks import (bench_diurnal, bench_engine_throughput,
+                        bench_fig1_cost_curves,
                         bench_fig2_quant, bench_fig3_penalty_heatmap,
                         bench_fig5_crossover, bench_kernels,
                         bench_plan_matrix, bench_planner, bench_resilience,
@@ -23,6 +24,7 @@ SUITES = (
     ("plan_matrix", bench_plan_matrix),
     ("planner", bench_planner),
     ("resilience", bench_resilience),
+    ("diurnal", bench_diurnal),
     ("fig1_cost_curves", bench_fig1_cost_curves),
     ("table3_penalty", bench_table3_penalty),
     ("fig2_quant", bench_fig2_quant),

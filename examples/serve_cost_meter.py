@@ -45,9 +45,11 @@ def six_phase(eng, price, phases, phase_s, scale, label):
             break
     summ = meter.summary()
     done = [r for r in reqs if r.finish_time is not None]
+    swing = "n/a (idle window)" if summ["swing"] is None \
+        else f"{summ['swing']:.1f}x"
     print(f"  {label}: {len(done)}/{len(reqs)} ok | best-minute "
           f"${summ['best_minute']:.4f} worst ${summ['worst_minute']:.4f} "
-          f"swing {summ['swing']:.1f}x avg ${summ['time_weighted_avg']:.4f}")
+          f"swing {swing} avg ${summ['time_weighted_avg']:.4f}")
     return summ
 
 

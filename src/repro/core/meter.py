@@ -67,7 +67,12 @@ class CostMeter:
 
     # ------------------------------------------------------------------
     def minute_costs(self) -> List[float]:
-        """Aggregate samples into minute windows -> per-minute C_eff."""
+        """Aggregate samples into minute windows -> per-minute C_eff.
+
+        An idle window (observed seconds but zero tokens — the diurnal
+        trough regime, ISSUE 8) is kept as an explicit `inf` entry: the
+        deployment was billed while delivering nothing. Callers that
+        want only busy windows filter on `math.isfinite`."""
         if not self.samples:
             return []
         out, bucket_t, toks, secs = [], None, 0.0, 0.0
@@ -85,19 +90,34 @@ class CostMeter:
             out.append(c_eff(self.price_per_hr, toks / secs))
         return out
 
-    def summary(self) -> Dict[str, float]:
-        """Best/worst minute + hourly-average cost (paper Table 7)."""
-        minutes = [m for m in self.minute_costs() if math.isfinite(m)]
+    def summary(self) -> Dict[str, Optional[float]]:
+        """Best/worst minute + hourly-average cost (paper Table 7).
+
+        Idle-window semantics (ISSUE 8): `minutes` counts *all* observed
+        windows and `idle_minutes` the zero-goodput ones; an idle window
+        makes `worst_minute` inf (cost-at-zero-goodput, flagged rather
+        than hidden) and `swing` None — max/min is undefined when a
+        window delivered nothing (previously idle windows were silently
+        dropped, undercounting `minutes` and understating the swing, and
+        a zero-cost minute made `swing` raise ZeroDivisionError)."""
+        all_minutes = self.minute_costs()
+        finite = [m for m in all_minutes if math.isfinite(m)]
+        idle = len(all_minutes) - len(finite)
         total_tok = sum(s.tokens for s in self.samples)
         total_t = sum(s.window_s for s in self.samples)
         avg = c_eff(self.price_per_hr, total_tok / total_t) \
             if total_t > 0 and total_tok > 0 else math.inf
+        if idle or not finite or min(finite) <= 0:
+            swing: Optional[float] = None
+        else:
+            swing = max(finite) / min(finite)
         return {
-            "best_minute": min(minutes) if minutes else math.inf,
-            "worst_minute": max(minutes) if minutes else math.inf,
-            "swing": (max(minutes) / min(minutes)) if minutes else math.inf,
+            "best_minute": min(finite) if finite else math.inf,
+            "worst_minute": math.inf if idle or not finite else max(finite),
+            "swing": swing,
             "time_weighted_avg": avg,
-            "minutes": float(len(minutes)),
+            "minutes": float(len(all_minutes)),
+            "idle_minutes": float(idle),
         }
 
     # ------------------------------------------------------------------

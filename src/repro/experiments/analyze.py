@@ -37,10 +37,15 @@ def _groups(records: Sequence[RunRecord]
     Resilient records (injected failures / client retries, ISSUE 6) are
     excluded: they sit at the same coordinates as their failure-free
     siblings and would pollute the classic cost curves with degraded
-    points. They are analyzed by `reliability_tables` instead."""
+    points. They are analyzed by `reliability_tables` instead.
+    Non-stationary records (config prefixed `profile:`, ISSUE 8) are
+    excluded too: their `lam` is the nominal mean of lambda(t), not a
+    stationary offered rate, so they are not ladder knots."""
     out: Dict[Tuple, List[RunRecord]] = {}
     for r in records:
         if r.mttf > 0.0 or r.retry_max > 0:
+            continue
+        if r.config.startswith("profile:"):
             continue
         key = (r.model, r.hw, r.quant, r.n_chips, r.io_shape)
         out.setdefault(key, []).append(r)
@@ -335,6 +340,121 @@ def reliability_tables(records: Sequence[RunRecord]) -> List[dict]:
     return out
 
 
+def diurnal_tables(records: Sequence[RunRecord]) -> List[dict]:
+    """ISSUE 8: the "cost of a day of traffic" table. Day-store records
+    (config `day:<scenario>`) are stationary per-replica measurements at
+    every rate the scenario's fleet trajectories visit;
+    this recomputes the trajectories (pure, deterministic —
+    `DayScenario.trajectories`) and prices the static footprint against
+    every autoscaling policy from those measured points: per-window
+    C_eff over the 24h profile, daily $ total and delivered tokens,
+    the peak-hour penalty, and the static-vs-autoscaled verdict per
+    deployment. The committed `paper_day` profile is built so the
+    verdict FLIPS between its two deployments — autoscaling pays on the
+    small-capacity footprint (trough savings span whole replicas) and
+    costs on the big one (target-util headroom is pure premium when one
+    replica already covers the peak)."""
+    import math
+    from repro.planner.tables import _clean
+    from repro.serving.autoscale import DAY_SCENARIOS, price_day, \
+        quantize_rate
+    by_scenario: Dict[str, List[RunRecord]] = {}
+    for r in records:
+        if r.config.startswith("day:"):
+            by_scenario.setdefault(r.config[4:], []).append(r)
+    out = []
+    for name in sorted(by_scenario):
+        sc = DAY_SCENARIOS.get(name)
+        if sc is None:
+            continue                     # store from a retired scenario
+        recs = by_scenario[name]
+        for dep in sc.deployments:
+            tps_by_lam = {
+                quantize_rate(r.lam): r.tps for r in recs
+                if (r.model, r.hw, r.quant, r.n_chips) ==
+                   (dep.model, dep.hw, dep.quant, dep.n_chips)}
+            if not tps_by_lam:
+                continue
+            missing = sorted(set(sc.rate_ladder(dep)) - set(tps_by_lam))
+            policies = []
+            for pname, traj in sc.trajectories(dep).items():
+                try:
+                    priced = price_day(traj, price_per_hr=dep.price_per_hr,
+                                       tps_at=lambda l: tps_by_lam[l],
+                                       lam_cap=dep.lam_cap)
+                except KeyError:
+                    continue             # ladder cell not yet run
+                policies.append({"policy": pname, **priced})
+            finite = [p for p in policies
+                      if math.isfinite(p["day_c_eff"])]
+            winner = min(finite, key=lambda p: p["day_c_eff"]) \
+                if finite else None
+            static = next((p for p in policies if p["policy"] == "static"),
+                          None)
+            saving = None
+            if winner is not None and static is not None \
+                    and static["day_c_eff"] > 0 \
+                    and math.isfinite(static["day_c_eff"]):
+                saving = 1.0 - winner["day_c_eff"] / static["day_c_eff"]
+            out.append(_clean({
+                "scenario": name, "deployment": dep.name,
+                "model": dep.model, "hw": dep.hw, "quant": dep.quant,
+                "n_chips": dep.n_chips, "price_per_hr": dep.price_per_hr,
+                "lam_cap": dep.lam_cap, "window_s": sc.window_s,
+                "n_windows": len(sc.window_rates),
+                "peak_lam": sc.peak_lam,
+                "static_replicas": sc.static_replicas(dep),
+                "missing_rates": missing,
+                "policies": policies,
+                "winner": winner["policy"] if winner else None,
+                "autoscaling_pays": bool(winner) and
+                winner["policy"] != "static",
+                "winner_saving_vs_static": saving,
+            }))
+    return out
+
+
+def render_diurnal(rows: Sequence[dict]) -> str:
+    """Text rendering of `diurnal_tables` rows (report + example)."""
+    if not rows:
+        return ""
+    row0 = rows[0]
+    lines = [
+        f"-- cost of a day of traffic ({row0['scenario']}: "
+        f"{row0['n_windows']} windows x {row0['window_s']:g} s, "
+        f"peak {row0['peak_lam']:g} req/s) --"]
+    for row in rows:
+        lines.append(f"{row['deployment']} "
+                     f"(static R={row['static_replicas']}, "
+                     f"lam_cap {row['lam_cap']:g} req/s/replica):")
+        lines.append(f"  {'policy':<10} {'repl-hrs':>8} {'daily $':>8} "
+                     f"{'Mtok':>7} {'day C_eff':>9} {'peak pen':>8} "
+                     f"{'idle':>4} {'sat':>3}")
+        for p in row["policies"]:
+            pen = f"{p['peak_penalty']:.2f}x" \
+                if p["peak_penalty"] is not None else "n/a"
+            dce = f"{p['day_c_eff']:.4f}" \
+                if p["day_c_eff"] is not None else "inf"
+            lines.append(
+                f"  {p['policy']:<10} {p['replica_hours']:>8.2f} "
+                f"{p['daily_cost_usd']:>8.3f} "
+                f"{p['daily_tokens'] / 1e6:>7.2f} {dce:>9} "
+                f"{pen:>8} {p['idle_windows']:>4d} "
+                f"{p['saturated_windows']:>3d}")
+        if row["winner"]:
+            tag = f"cheapest day: {row['winner']}"
+            if row["winner_saving_vs_static"]:
+                tag += (f" ({100 * row['winner_saving_vs_static']:.0f}%"
+                        f" below static)")
+            if not row["autoscaling_pays"]:
+                tag += "  [autoscaling does NOT pay here]"
+            lines.append(f"  -> {tag}")
+        if row["missing_rates"]:
+            lines.append(f"  !! incomplete store: missing rates "
+                         f"{row['missing_rates']}")
+    return "\n".join(lines)
+
+
 def crosshw_ordering(records: Sequence[RunRecord]) -> List[dict]:
     """§5.2 across the hardware axis: per quant, does the per-chip
     active-params saturation ordering survive on every generation?"""
@@ -372,6 +492,7 @@ def crosshw_tables(records: Sequence[RunRecord]) -> Dict[str, object]:
         "ensemble_bands": ensemble_bands(records),
         "planner_tables": planner_tables(records),
         "reliability": reliability_tables(records),
+        "diurnal": diurnal_tables(records),
     }
 
 
@@ -514,6 +635,11 @@ def report(records: Sequence[RunRecord], title: str = "") -> str:
                 f"{row['retry_max']:>5d} {row['goodput_rps']:>8.2f} "
                 f"{row['retry_amplification']:>5.2f}x {row['n_shed']:>5d} "
                 f"{row['c_eff']:>8.3f} {row['c_eff_inflation']:>8.2f}x")
+
+    diurnal = diurnal_tables(records)
+    if diurnal:
+        lines.append("")
+        lines.extend(render_diurnal(diurnal).splitlines())
 
     lines.append("")
     lines.append("-- API crossover (list prices, no SLA: §6.4 gate "

@@ -99,8 +99,23 @@ class Cell:
     # stream; offset 0 stays OUT of the keys, so pre-ensemble plans keep
     # their historical seed streams (and committed records) byte-exactly.
     seed_offset: int = 0
+    # lambda(t) (ISSUE 8): a non-stationary cell carries its RateProfile
+    # flattened into hashable tuples (kind/knots/period/args — see
+    # serving.arrivals.RateProfile). Empty kind = stationary; like
+    # seed_offset, the default stays OUT of cell_id / seed_key /
+    # fingerprint so every historical plan and committed store keeps its
+    # exact ids, seeds and cell files.
+    profile_kind: str = ""
+    profile_knots: Tuple[Tuple[float, float], ...] = ()
+    profile_period_s: float = 0.0
+    profile_args: Tuple[float, ...] = ()
     # runner execution policy (not part of the measurement itself)
     cell_retries: int = 2       # re-dispatch budget after worker loss
+
+    @property
+    def profile_key(self) -> Tuple:
+        return (self.profile_kind, self.profile_knots,
+                self.profile_period_s, self.profile_args)
 
     @property
     def resilience_key(self) -> Tuple:
@@ -126,6 +141,9 @@ class Cell:
             raw += f"_mttf{mttf}_r{self.retry_max}"
         if self.seed_offset:
             raw += f"_s{self.seed_offset}"
+        if self.profile_kind:
+            pk = zlib.crc32(repr(self.profile_key).encode()) % 100000
+            raw += f"_prof-{self.profile_kind}{pk}"
         return raw.replace("/", "-")
 
     @property
@@ -144,6 +162,8 @@ class Cell:
                 self.scale, self.engine_kind)
         if self.seed_offset:
             base = base + (("seed_offset", self.seed_offset),)
+        if self.profile_kind:
+            base = base + (("profile",) + self.profile_key,)
         return base
 
     @property
@@ -164,6 +184,11 @@ class Cell:
             # of the hash: stores committed before the axis existed must
             # keep resuming (and their cell files keep byte-identity)
             spec.pop("seed_offset")
+        if not self.profile_kind:
+            # same rule for the lambda(t) fields (ISSUE 8)
+            for k in ("profile_kind", "profile_knots", "profile_period_s",
+                      "profile_args"):
+                spec.pop(k)
         blob = json.dumps(spec, sort_keys=True)
         return hashlib.sha256(blob.encode()).hexdigest()[:16]
 
@@ -199,10 +224,18 @@ class Cell:
                            seed=self.seed + 977)
 
     def arrival_spec(self):
-        from repro.serving.arrivals import ArrivalSpec
+        from repro.serving.arrivals import ArrivalSpec, RateProfile
+        profile = None
+        if self.profile_kind:
+            profile = RateProfile(
+                kind=self.profile_kind,
+                knots=tuple(tuple(k) for k in self.profile_knots),
+                period_s=self.profile_period_s,
+                args=tuple(self.profile_args)).validate()
         return ArrivalSpec(lam=self.lam, n_requests=self.n_requests,
                            io_shape=self.io_shape, process=self.process,
-                           cv=self.cv, seed=self.seed, scale=self.scale)
+                           cv=self.cv, seed=self.seed, scale=self.scale,
+                           profile=profile)
 
     def record_kw(self) -> Dict:
         return dict(config=self.config, model=self.model, hw=self.hw,

@@ -20,10 +20,12 @@ meaningful for deployable footprints); price_per_hr scales with chips.
 """
 from __future__ import annotations
 
-from typing import Callable, Dict
+import dataclasses
+from typing import Callable, Dict, Tuple
 
 from repro.core.sweep import LAMBDA_LADDER
-from repro.experiments.plan import ExperimentPlan, GridSpec
+from repro.experiments.plan import Cell, ExperimentPlan, GridSpec, cell_seed
+from repro.serving.autoscale import DAY_SCENARIOS, DayScenario
 
 # paper benchmark trio: dense 8B / ultra-sparse 30B-A3B MoE / 47B-A13B MoE
 PAPER_TRIO = ("llama31-8b", "qwen3-30b-a3b", "mixtral-8x7b")
@@ -361,6 +363,95 @@ def quickstart() -> ExperimentPlan:
     ).expand()
 
 
+def _day_cells(scenario: DayScenario, *, plan_name: str, max_requests: int,
+               min_requests: int, max_batch: int = 256,
+               num_pages: int = 65536, seed: int = 0) -> Tuple[Cell, ...]:
+    """Expand a DayScenario into its measurement cells.
+
+    The windows of a piecewise-constant day are stationary segments, so
+    the store measures POLICY-AGNOSTIC stationary points: for each
+    deployment, one cell per distinct quantized per-replica rate that
+    any trajectory (static or policy) visits — `scenario.rate_ladder` is
+    the shared source of truth, so `analyze.diurnal_tables` can map
+    every (window, policy) back to its record. Each cell captures about
+    one window's worth of traffic (lam x window_s requests, clamped)."""
+    cells = []
+    for dep in scenario.deployments:
+        for lam in scenario.rate_ladder(dep):
+            n = int(min(max_requests,
+                        max(min_requests, round(lam * scenario.window_s))))
+            cell = Cell(
+                plan=plan_name, config=f"day:{scenario.name}",
+                model=dep.model, arch=dep.model, hw=dep.hw,
+                quant=dep.quant, n_chips=dep.n_chips, lam=float(lam),
+                io_shape="chat", seed=0, n_requests=n, warmup=0,
+                price_per_hr=dep.price_per_hr, max_batch=max_batch,
+                num_pages=num_pages)
+            cells.append(dataclasses.replace(
+                cell, seed=cell_seed(seed, cell.seed_key, cell.lam)))
+    return tuple(cells)
+
+
+def paper_diurnal() -> ExperimentPlan:
+    """The "cost of a day of traffic" store (ISSUE 8): every stationary
+    per-replica rate the `paper_day` scenario's trajectories visit —
+    24 windows x (static + reactive + cautious autoscaling) x 2
+    deployments, deduplicated to the distinct quantized rates
+    (~60 cells). `analyze.diurnal_tables` recomputes the fleet
+    trajectories (pure) and prices each policy's day from these
+    measurements; the committed profile is chosen so the
+    static-vs-autoscaled verdict FLIPS between the two deployments.
+
+        python -m repro.experiments.run --plan paper_diurnal \\
+            --backend vector --resume --analyze
+    """
+    sc = DAY_SCENARIOS["paper_day"]
+    return ExperimentPlan(
+        name="paper_diurnal",
+        cells=_day_cells(sc, plan_name="paper_diurnal",
+                         max_requests=5000, min_requests=40),
+        seed=0,
+        description="cost of a day of traffic: per-replica stationary "
+                    "rates for the paper_day 24h profile, static + 2 "
+                    "autoscaling policies x 2 deployments")
+
+
+def mini_diurnal() -> ExperimentPlan:
+    """CI smoke for the non-stationary layer: the `mini_day` scenario's
+    rate ladder at smoke tier (including a zero-rate window priced as
+    idle), plus two profile-bearing cells — a trace replay and a diurnal
+    sinusoid — that push lambda(t) streams through the fleet backend
+    end to end."""
+    sc = DAY_SCENARIOS["mini_day"]
+    cells = list(_day_cells(sc, plan_name="mini_diurnal", max_requests=150,
+                            min_requests=16, max_batch=64, num_pages=8192))
+    dep = sc.deployments[0]
+    t, knots = 0.0, []
+    for r in sc.window_rates:
+        knots.append((t, r))
+        t += sc.window_s
+    # the `profile:` config prefix marks non-stationary records: their
+    # `lam` is the nominal mean of lambda(t), not a stationary offered
+    # rate, so stationary analytics (_groups / fit_curves) skip them
+    for config, kind, kn, period, args in (
+            ("profile:trace_smoke", "trace", tuple(knots), sc.day_s, ()),
+            ("profile:diurnal_smoke", "diurnal", (), 120.0,
+             (1.0, 8.0, 0.5))):
+        cell = Cell(
+            plan="mini_diurnal", config=config, model=dep.model,
+            arch=dep.model, hw=dep.hw, quant=dep.quant,
+            n_chips=dep.n_chips, lam=4.0, io_shape="chat", seed=0,
+            n_requests=120, warmup=0, price_per_hr=dep.price_per_hr,
+            max_batch=64, num_pages=8192, profile_kind=kind,
+            profile_knots=kn, profile_period_s=period, profile_args=args)
+        cells.append(dataclasses.replace(
+            cell, seed=cell_seed(0, cell.seed_key, cell.lam)))
+    return ExperimentPlan(
+        name="mini_diurnal", cells=tuple(cells), seed=0,
+        description="diurnal CI smoke: mini_day rate ladder (incl. idle "
+                    "window) + trace/diurnal lambda(t) stream cells")
+
+
 def crossover_trio() -> ExperimentPlan:
     """The crossover example's three configs on tpu-v5p, quick protocol."""
     plans = []
@@ -388,6 +479,8 @@ PLANS: Dict[str, Callable[[], ExperimentPlan]] = {
     "probe_int8_nonnative": probe_int8_nonnative,
     "paper_resilience": paper_resilience,
     "mini_resilience": mini_resilience,
+    "paper_diurnal": paper_diurnal,
+    "mini_diurnal": mini_diurnal,
     "mini_crosshw": mini_crosshw,
     "mini_2x2": mini_2x2,
     "quickstart": quickstart,

@@ -34,5 +34,7 @@ from repro.planner.optimize import (  # noqa: F401
     DeploymentOption, HeterogeneousMix, MixAllocation, enumerate_options,
     greedy_mix, plan_capacity, rank_options, slo_feasible_cap,
     spares_needed)
+from repro.planner.day import (  # noqa: F401
+    curve_lam_cap, day_price_for_curve, day_tables, render_day)
 from repro.planner.tables import (  # noqa: F401
     REFERENCE_LAMS, planner_tables, render_plan, render_plans)

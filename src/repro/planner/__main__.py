@@ -28,8 +28,13 @@ def main(argv=None):
     ap.add_argument("--plan", required=True,
                     help="experiment plan whose store to invert "
                          "(e.g. paper_atlas)")
-    ap.add_argument("--lam", type=float, required=True,
-                    help="offered rate, req/s")
+    ap.add_argument("--lam", type=float, default=None,
+                    help="offered rate, req/s (stationary planning)")
+    ap.add_argument("--day", default=None, metavar="SCENARIO",
+                    help="price a 24h lambda(t) scenario (e.g. paper_day) "
+                         "against every fitted curve: static-vs-autoscaled "
+                         "day cost per footprint (time-aware planning, "
+                         "ISSUE 8)")
     ap.add_argument("--model", default=None,
                     help="restrict to one model (default: every model "
                          "in the store)")
@@ -57,6 +62,9 @@ def main(argv=None):
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write the per-model plans as JSON")
     args = ap.parse_args(argv)
+    if (args.lam is None) == (args.day is None):
+        ap.error("exactly one of --lam (stationary) or --day (lambda(t)) "
+                 "is required")
 
     records = load_store_records(args.plan, args.root)
     if not records:
@@ -68,6 +76,20 @@ def main(argv=None):
         raise SystemExit(
             f"store for {args.plan!r} has no curves for "
             f"model={args.model!r} io_shape={args.io_shape!r}")
+
+    if args.day is not None:
+        from repro.planner.day import day_tables, render_day
+        from repro.serving.autoscale import DAY_SCENARIOS
+        if args.day not in DAY_SCENARIOS:
+            raise SystemExit(f"unknown day scenario {args.day!r}; known: "
+                             f"{sorted(DAY_SCENARIOS)}")
+        rows = day_tables(curves, DAY_SCENARIOS[args.day])
+        print(render_day(rows, title=f"{args.plan} x {args.day}"))
+        if args.json:
+            with open(args.json, "w") as f:
+                json.dump(rows, f, indent=1, sort_keys=True)
+            print(f"\nday tables written to {args.json}")
+        return
 
     slo = None
     if (args.slo_ttft_p90 is not None or args.slo_ttft_p99 is not None

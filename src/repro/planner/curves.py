@@ -252,6 +252,10 @@ def fit_curves(records: Sequence[RunRecord],
             # planner's curves price healthy replicas (failure cost
             # enters through the availability/spares model instead)
             continue
+        if r.config.startswith("profile:"):
+            # non-stationary lambda(t) records (ISSUE 8): `lam` is the
+            # profile's nominal mean, not a stationary ladder knot
+            continue
         if io_shape is not None and r.io_shape != io_shape:
             continue
         if model is not None and r.model != model:

@@ -1,0 +1,149 @@
+"""Time-aware planning: price a 24h lambda(t) profile from fitted curves.
+
+`analyze.diurnal_tables` prices the committed day scenarios from their
+dedicated stores (exact stationary measurements at every per-replica
+rate a trajectory visits). This module is the planner-side counterpart:
+it prices a `DayScenario`'s profile against ANY store's fitted
+`DeploymentCurve`s — interpolating per-replica throughput from whatever
+ladder the store measured — so an operator can ask "what does my day of
+traffic cost on each footprint, static vs autoscaled?" from e.g. the
+dense `paper_atlas` store without running new cells.
+
+Interpolated prices inherit the curves' caveats: queries outside a
+curve's demonstrated span are clamped to its edge knots and the result
+is flagged `interpolated_beyond_span` (the §5.6 'modeled continuation'
+caveat, time-resolved). The exact-store path in `analyze` has no such
+caveat — its ladder measures every visited rate by construction.
+
+    PYTHONPATH=src python -m repro.planner --plan paper_atlas \\
+        --day paper_day
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Sequence
+
+from repro.planner.curves import DeploymentCurve
+from repro.planner.tables import _clean
+from repro.serving.arrivals import IO_SHAPES
+from repro.serving.autoscale import DayScenario, price_day
+
+# tokens a completed request delivers, per io_shape — converts a curve's
+# saturation throughput (tok/s) into a per-replica request capacity
+OUT_TOKENS = {shape: float(out) for shape, (_, out) in IO_SHAPES.items()}
+
+
+def curve_lam_cap(curve: DeploymentCurve) -> float:
+    """Demonstrated per-replica request capacity: saturation tokens/s
+    over tokens per request. Falls back to the demonstrated lam span's
+    top for io_shapes without a fixed output length."""
+    out_tok = OUT_TOKENS.get(curve.io_shape)
+    if out_tok:
+        return curve.theta_max / out_tok
+    return curve.lam_max
+
+
+def day_price_for_curve(curve: DeploymentCurve, scenario: DayScenario
+                        ) -> Dict:
+    """Price the scenario's day on one footprint: static fleet sized for
+    the peak vs every scenario policy, per-replica throughput
+    interpolated from the curve (clamped to its demonstrated span)."""
+    lam_cap = curve_lam_cap(curve)
+
+    def tps_at(lam_per: float) -> float:
+        return curve.tps(min(max(lam_per, curve.lam_min), curve.lam_max))
+
+    from repro.serving.autoscale import (simulate_policy, static_size,
+                                         static_windows)
+    replicas = static_size(scenario.peak_lam, lam_cap, scenario.util_sla)
+    trajs = {"static": static_windows(replicas, scenario.window_rates,
+                                      scenario.window_s)}
+    for pol in scenario.policies:
+        trajs[pol.name] = simulate_policy(pol, scenario.window_rates,
+                                          scenario.window_s, lam_cap)
+
+    beyond = set()
+    policies = []
+    for pname, traj in trajs.items():
+        for fw in traj:
+            if fw.lam > 0 and fw.serving > 0 \
+                    and curve.extrapolated(fw.lam / fw.serving):
+                beyond.add(pname)
+        priced = price_day(traj, price_per_hr=curve.price_per_hr,
+                           tps_at=tps_at, lam_cap=lam_cap)
+        policies.append({"policy": pname, **priced})
+    finite = [p for p in policies if math.isfinite(p["day_c_eff"])]
+    winner = min(finite, key=lambda p: p["day_c_eff"]) if finite else None
+    static = next(p for p in policies if p["policy"] == "static")
+    saving = None
+    if winner is not None and math.isfinite(static["day_c_eff"]) \
+            and static["day_c_eff"] > 0:
+        saving = 1.0 - winner["day_c_eff"] / static["day_c_eff"]
+    return _clean({
+        "scenario": scenario.name,
+        "deployment": curve.label,
+        "model": curve.model, "hw": curve.hw, "quant": curve.quant,
+        "n_chips": curve.n_chips, "io_shape": curve.io_shape,
+        "price_per_hr": curve.price_per_hr, "lam_cap": lam_cap,
+        "static_replicas": replicas,
+        "window_s": scenario.window_s,
+        "n_windows": len(scenario.window_rates),
+        "peak_lam": scenario.peak_lam,
+        "policies": policies,
+        "winner": winner["policy"] if winner else None,
+        "autoscaling_pays": bool(winner) and winner["policy"] != "static",
+        "winner_saving_vs_static": saving,
+        "interpolated_beyond_span": sorted(beyond),
+        "dense_curve": curve.dense,
+    })
+
+
+def day_tables(curves: Sequence[DeploymentCurve], scenario: DayScenario
+               ) -> List[Dict]:
+    """One `day_price_for_curve` row per fitted curve, cheapest day
+    first — the store-wide answer to "who should serve this day"."""
+    rows = [day_price_for_curve(c, scenario) for c in curves]
+    rows.sort(key=lambda r: (
+        r["policies"] and min(p["day_c_eff"] or math.inf
+                              for p in r["policies"]) or math.inf))
+    return rows
+
+
+def render_day(rows: Sequence[Dict], title: str = "") -> str:
+    lines = []
+    if title:
+        lines.append(f"=== cost of a day of traffic: {title} ===")
+    if rows:
+        r0 = rows[0]
+        lines.append(f"profile: {r0['n_windows']} windows x "
+                     f"{r0['window_s']:g} s, peak {r0['peak_lam']:g} req/s")
+    for row in rows:
+        lines.append("")
+        lines.append(f"-- {row['deployment']} "
+                     f"(static R={row['static_replicas']}, lam_cap "
+                     f"{row['lam_cap']:.3g} req/s/replica) --")
+        lines.append(f"  {'policy':<10} {'repl-hrs':>8} {'daily $':>8} "
+                     f"{'Mtok':>7} {'day C_eff':>9} {'peak pen':>8} "
+                     f"{'idle':>4}")
+        for p in row["policies"]:
+            pen = f"{p['peak_penalty']:.2f}x" \
+                if p["peak_penalty"] is not None else "n/a"
+            dce = f"{p['day_c_eff']:.4f}" \
+                if p["day_c_eff"] is not None else "inf"
+            lines.append(f"  {p['policy']:<10} {p['replica_hours']:>8.2f} "
+                         f"{p['daily_cost_usd']:>8.3f} "
+                         f"{p['daily_tokens'] / 1e6:>7.2f} {dce:>9} "
+                         f"{pen:>8} {p['idle_windows']:>4d}")
+        if row["winner"]:
+            tag = f"cheapest: {row['winner']}"
+            if row["winner_saving_vs_static"]:
+                tag += (f" ({100 * row['winner_saving_vs_static']:.0f}% "
+                        f"below static)")
+            if not row["autoscaling_pays"]:
+                tag += "  [autoscaling does NOT pay]"
+            lines.append(f"  -> {tag}")
+        if row["interpolated_beyond_span"]:
+            lines.append("  (caveat: per-replica rates clamped to the "
+                         "measured span for: "
+                         + ", ".join(row["interpolated_beyond_span"]) + ")")
+    return "\n".join(lines)

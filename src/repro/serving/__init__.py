@@ -11,8 +11,12 @@ simulator that runs B independent sim-tier cells as lanes of one
 vectorized event loop, bit-identical to the scalar fast-forward engine.
 """
 from repro.serving.arrivals import (  # noqa: F401
-    ArrivalSpec, gamma_arrivals, poisson_arrivals, synth_arrays,
-    synth_requests)
+    ArrivalSpec, RateProfile, gamma_arrivals, poisson_arrivals,
+    profile_arrivals, synth_arrays, synth_requests)
+from repro.serving.autoscale import (  # noqa: F401
+    DAY_SCENARIOS, AutoscalePolicy, DayScenario, Deployment, FleetWindow,
+    meter_day_report, price_day, simulate_policy, static_size,
+    static_windows)
 from repro.serving.engine import Engine, EngineConfig  # noqa: F401
 from repro.serving.executors import RealExecutor, SimExecutor  # noqa: F401
 from repro.serving.fleet import (  # noqa: F401

@@ -1,0 +1,473 @@
+"""ISSUE 8: lambda(t) arrivals, the autoscaling simulator, and the
+zero-rate/idle-window bug class.
+
+Covers the frozen thinning stream protocol (per-segment empirical rates,
+determinism, byte-identity of constant profiles with the historical
+stationary streams), the three satellite regressions (zero/negative
+rates, shared_prefix_groups, CostMeter idle windows — each fails on the
+pre-fix code), the autoscale controller (lag, warmup billing,
+hysteresis, LIFO order cancelling), day pricing (idle windows flagged
+inf, the static-vs-autoscaled verdict flip), and plan/analyze wiring
+(day cells, profile cells out of the stationary analytics, cross-backend
+record identity)."""
+import dataclasses
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.meter import CostMeter
+from repro.experiments import PlanRunner, get_plan
+from repro.experiments.analyze import crosshw_tables, report
+from repro.serving import (ArrivalSpec, AutoscalePolicy, DAY_SCENARIOS,
+                           RateProfile, gamma_arrivals, poisson_arrivals,
+                           profile_arrivals, price_day, simulate_policy,
+                           static_size, static_windows, synth_arrays)
+from repro.serving.autoscale import MINI_DAY, PAPER_DAY, quantize_rate
+
+
+# ---- satellite: zero/negative stationary rates -----------------------
+
+
+def test_zero_rate_means_no_arrivals():
+    """lam=0 must yield an empty stream, not inf/NaN times (pre-fix:
+    1/lam minted inf gaps that cumsum'd silently into engine clocks)."""
+    rng = np.random.default_rng(0)
+    assert poisson_arrivals(rng, 0.0, 50).shape == (0,)
+    assert gamma_arrivals(rng, 0.0, 2.0, 50).shape == (0,)
+    times, p_in, p_out = synth_arrays(ArrivalSpec(lam=0.0, n_requests=50))
+    assert len(times) == len(p_in) == len(p_out) == 0
+
+
+def test_negative_rate_raises():
+    rng = np.random.default_rng(0)
+    with pytest.raises(ValueError, match=">= 0"):
+        poisson_arrivals(rng, -1.0, 10)
+    with pytest.raises(ValueError, match=">= 0"):
+        gamma_arrivals(rng, -0.5, 2.0, 10)
+
+
+# ---- satellite: shared_prefix_groups must not silently no-op ---------
+
+
+def test_shared_prefix_groups_raises_loudly():
+    """Pre-fix the field was accepted and ignored: a 'prefix-sharing'
+    cell silently measured plain chat."""
+    with pytest.raises(NotImplementedError, match="prefix"):
+        synth_arrays(ArrivalSpec(lam=5.0, n_requests=10,
+                                 shared_prefix_groups=4))
+
+
+# ---- satellite: CostMeter idle windows -------------------------------
+
+
+class _FakeEngine:
+    """Minimal Prometheus text source for meter unit tests."""
+
+    def __init__(self):
+        self.t = 0.0
+        self.tok = 0.0
+
+    def advance(self, dt, tokens):
+        self.t += dt
+        self.tok += tokens
+
+    def render(self):
+        return (f"repro:time_seconds {self.t}\n"
+                f"repro:generation_tokens_total {self.tok}\n"
+                f"repro:num_requests_running 0\n")
+
+
+def test_meter_idle_window_flagged_not_dropped():
+    """An idle minute (billed seconds, zero tokens) must appear as an
+    explicit inf window; pre-fix it was silently dropped (undercounting
+    `minutes`) and `summary()` had no `idle_minutes` key at all."""
+    eng = _FakeEngine()
+    meter = CostMeter(1.2, scrape=eng.render, minute_s=60.0)
+    meter.tick()
+    eng.advance(60.0, 6000.0)
+    meter.tick()
+    eng.advance(60.0, 0.0)      # the diurnal trough: billed, idle
+    meter.tick()
+    eng.advance(60.0, 6000.0)
+    meter.tick()
+    costs = meter.minute_costs()
+    assert len(costs) == 3
+    assert sum(1 for c in costs if math.isinf(c)) == 1
+    summ = meter.summary()
+    assert summ["minutes"] == 3.0
+    assert summ["idle_minutes"] == 1.0          # KeyError on pre-fix code
+    assert math.isinf(summ["worst_minute"])
+    assert summ["swing"] is None                # undefined, not a crash
+    assert math.isfinite(summ["best_minute"])
+    assert math.isfinite(summ["time_weighted_avg"])
+
+
+def test_meter_all_busy_swing_defined():
+    eng = _FakeEngine()
+    meter = CostMeter(1.2, scrape=eng.render, minute_s=60.0)
+    meter.tick()
+    for tok in (3000.0, 6000.0, 12000.0):
+        eng.advance(60.0, tok)
+        meter.tick()
+    summ = meter.summary()
+    assert summ["idle_minutes"] == 0.0
+    assert summ["swing"] == pytest.approx(4.0)
+    assert math.isfinite(summ["worst_minute"])
+
+
+# ---- RateProfile: validation + shapes --------------------------------
+
+
+def test_profile_validation_rejects_bad_shapes():
+    with pytest.raises(ValueError):
+        RateProfile.piecewise([(60.0, -1.0)]).validate()
+    with pytest.raises(ValueError):
+        RateProfile.piecewise([(0.0, 5.0)]).validate()
+    with pytest.raises(ValueError):
+        RateProfile.diurnal(trough=5.0, peak=2.0, period_s=60.0).validate()
+    with pytest.raises(ValueError):
+        RateProfile.trace([(10.0, 1.0), (5.0, 2.0)]).validate()
+    with pytest.raises(ValueError):
+        RateProfile(kind="wibble").validate()
+
+
+def test_profile_rate_at_piecewise_cycles_and_means():
+    prof = RateProfile.piecewise([(10.0, 2.0), (10.0, 0.0), (20.0, 8.0)])
+    ts = np.array([0.0, 9.9, 10.0, 19.9, 25.0, 40.0, 50.5])
+    np.testing.assert_allclose(prof.rate_at(ts),
+                               [2.0, 2.0, 0.0, 0.0, 8.0, 2.0, 0.0])
+    assert prof.mean_rate() == pytest.approx((20.0 + 160.0) / 40.0)
+    assert prof.max_rate() == 8.0
+
+
+def test_profile_trace_step_hold_and_cycle():
+    prof = RateProfile.trace([(0.0, 1.0), (10.0, 4.0)], period_s=20.0)
+    np.testing.assert_allclose(
+        prof.rate_at(np.array([0.0, 5.0, 10.0, 19.0, 20.0, 31.0])),
+        [1.0, 1.0, 4.0, 4.0, 1.0, 4.0])
+
+
+def test_mmpp_realize_deterministic_and_prefix_stable():
+    prof = RateProfile.mmpp(2.0, 20.0, 30.0, 10.0)
+    a = prof.realize(seed=7, t_end=100.0)
+    b = prof.realize(seed=7, t_end=100.0)
+    assert a == b and a.kind == "piecewise"
+    longer = prof.realize(seed=7, t_end=500.0)
+    assert longer.knots[:len(a.knots) - 1] == a.knots[:-1]  # same prefix
+    assert prof.realize(seed=8, t_end=100.0) != a
+
+
+# ---- thinning: empirical rates + protocol ----------------------------
+
+
+def test_thinning_empirical_rate_per_segment():
+    """The accepted stream must realize each segment's rate, including
+    an interior ZERO segment that accepts nothing."""
+    prof = RateProfile.piecewise([(30.0, 2.0), (30.0, 0.0), (30.0, 8.0)])
+    rng = np.random.default_rng(42)
+    times = profile_arrivals(rng, prof, 4000)
+    cycles = int(times[-1] // 90.0)             # whole cycles only: the
+    times = times[times < cycles * 90.0]        # tail would bias counts
+    assert cycles >= 10
+    t = np.mod(times, 90.0)
+    span = cycles * 30.0
+    rate0 = np.sum(t < 30.0) / span
+    rate1 = np.sum((t >= 30.0) & (t < 60.0)) / span
+    rate2 = np.sum(t >= 60.0) / span
+    assert rate1 == 0.0
+    assert rate0 == pytest.approx(2.0, rel=0.1)
+    assert rate2 == pytest.approx(8.0, rel=0.1)
+    assert np.all(np.diff(times) > 0)
+
+
+def test_thinning_deterministic_for_seed():
+    prof = RateProfile.diurnal(1.0, 9.0, period_s=120.0)
+    a = profile_arrivals(np.random.default_rng(5), prof, 400)
+    b = profile_arrivals(np.random.default_rng(5), prof, 400)
+    np.testing.assert_array_equal(a, b)
+
+
+def test_all_zero_profile_refuses():
+    with pytest.raises(ValueError, match="max rate is 0"):
+        profile_arrivals(np.random.default_rng(0),
+                         RateProfile.piecewise([(60.0, 0.0)]), 10)
+
+
+def test_decaying_trace_raises_instead_of_spinning():
+    """A trace that holds rate 0 forever can never satisfy n — the
+    thinning loop must abort after THINNING_MAX_BLOCKS, not spin."""
+    prof = RateProfile.trace([(0.0, 5.0), (1.0, 0.0)])  # 1 s of traffic
+    with pytest.raises(RuntimeError, match="thinning accepted only"):
+        profile_arrivals(np.random.default_rng(0), prof, 10_000)
+
+
+def test_nonconstant_profile_requires_poisson():
+    spec = ArrivalSpec(lam=4.0, n_requests=10, process="gamma", cv=2.0,
+                       profile=RateProfile.diurnal(1.0, 8.0, 60.0))
+    with pytest.raises(ValueError, match="poisson"):
+        synth_arrays(spec)
+
+
+# ---- byte-identity: constant profile == stationary spec --------------
+
+
+@pytest.mark.parametrize("process,cv", [("poisson", 1.0), ("gamma", 2.0)])
+@pytest.mark.parametrize("io_shape", ["chat", "variable"])
+def test_constant_profile_byte_identical(process, cv, io_shape):
+    """The committed stores' guarantee: adding the profile layer must not
+    move a single byte of any stationary stream."""
+    base = ArrivalSpec(lam=7.0, n_requests=200, io_shape=io_shape,
+                       process=process, cv=cv, seed=11)
+    wrapped = dataclasses.replace(base, profile=RateProfile.constant(7.0))
+    for a, b in zip(synth_arrays(base), synth_arrays(wrapped)):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_constant_profile_rate_overrides_lam_label():
+    """With a constant profile the profile's rate generates and spec.lam
+    is just the record label (profile cells label lam = mean rate)."""
+    t_prof, _, _ = synth_arrays(ArrivalSpec(
+        lam=99.0, n_requests=100, seed=3,
+        profile=RateProfile.constant(2.0)))
+    t_plain, _, _ = synth_arrays(ArrivalSpec(lam=2.0, n_requests=100,
+                                             seed=3))
+    np.testing.assert_array_equal(t_prof, t_plain)
+
+
+# ---- autoscaler: lag, warmup billing, hysteresis ---------------------
+
+POL = AutoscalePolicy(name="t", target_util=0.5, scale_up_lag_s=60.0,
+                      warmup_s=60.0, scale_down_hold_s=120.0,
+                      min_replicas=1, max_replicas=8)
+
+
+def test_desired_sizing_and_floor():
+    assert POL.desired(0.0, 10.0) == 1          # floor when idle
+    assert POL.desired(4.9, 10.0) == 1          # 4.9/(0.5*10) -> ceil 1
+    assert POL.desired(5.1, 10.0) == 2
+    assert POL.desired(1e9, 10.0) == 8          # ceiling
+
+
+def test_scale_up_lag_and_warmup_billing():
+    """Demand jumps at w1; the controller sees it at w2 and orders. With
+    lag=1 warmup=1 window the order bills at w3 and serves at w4 —
+    warming replicas are billed without serving."""
+    traj = simulate_policy(POL, [1.0, 20.0, 20.0, 20.0, 20.0, 20.0],
+                           window_s=60.0, lam_cap=10.0)
+    serving = [fw.serving for fw in traj]
+    billed = [fw.billed for fw in traj]
+    assert serving == [1, 1, 1, 1, 4, 4]
+    assert billed == [1, 1, 1, 4, 4, 4]         # w3: billed > serving
+    assert all(fw.billed >= fw.serving for fw in traj)
+
+
+def test_scale_down_hysteresis_holds_then_releases():
+    """Demand drops at w1: want < committed from w2 on, but hold=2
+    windows of consecutive low demand must pass before release."""
+    traj = simulate_policy(POL, [40.0, 1.0, 1.0, 1.0, 1.0, 1.0],
+                           window_s=60.0, lam_cap=10.0)
+    serving = [fw.serving for fw in traj]
+    assert serving[0] == 8                      # pre-provisioned at w0
+    assert serving == [8, 8, 8, 1, 1, 1]        # released only at w3
+    assert all(fw.billed == fw.serving for fw in traj)  # no new orders
+
+
+def test_scale_down_cancels_pending_orders_first():
+    """A spike order still warming is cancelled (LIFO) when demand
+    collapses — live replicas are shed only after pending ones."""
+    pol = AutoscalePolicy(name="x", target_util=0.5, scale_up_lag_s=120.0,
+                          warmup_s=120.0, scale_down_hold_s=60.0,
+                          min_replicas=1, max_replicas=8)
+    # w2 orders 3 more (sees w1's 40); w3+w4 see the collapse and the
+    # hold of 1 window cancels the order before it ever bills.
+    traj = simulate_policy(pol, [1.0, 40.0, 1.0, 1.0, 1.0],
+                           window_s=60.0, lam_cap=10.0)
+    assert [fw.serving for fw in traj] == [1, 1, 1, 1, 1]
+    assert [fw.billed for fw in traj] == [1, 1, 1, 1, 1]
+
+
+def test_static_size_and_windows():
+    assert static_size(34.0, 11.754, util_sla=0.95) == 4
+    assert static_size(34.0, 35.969, util_sla=0.95) == 1
+    with pytest.raises(ValueError):
+        static_size(10.0, 0.0)
+    wins = static_windows(3, [1.0, 0.0], 60.0)
+    assert [(w.serving, w.billed, w.lam) for w in wins] == \
+        [(3, 3, 1.0), (3, 3, 0.0)]
+
+
+# ---- price_day: idle windows, saturation, verdict flip ---------------
+
+
+def _flat_tps(cap, per_req=256.0):
+    """Crude measured-throughput stand-in: tokens/s grows linearly with
+    offered rate and clips at the saturation capacity."""
+    return lambda lam: min(lam, cap) * per_req
+
+
+def test_price_day_idle_window_inf_not_crash():
+    wins = static_windows(2, [4.0, 0.0, 4.0], 3600.0)
+    out = price_day(wins, price_per_hr=1.2, tps_at=_flat_tps(10.0),
+                    lam_cap=10.0)
+    assert out["idle_windows"] == 1
+    rows = out["windows"]
+    assert math.isinf(rows[1]["c_eff"]) and rows[1]["idle"]
+    assert rows[1]["cost_usd"] > 0              # billed while idle
+    assert math.isfinite(out["day_c_eff"])      # day total still prices
+    assert math.isinf(out["worst_busy_window_c_eff"]) is False
+
+
+def test_price_day_flags_saturated_windows():
+    wins = static_windows(1, [15.0], 3600.0)
+    out = price_day(wins, price_per_hr=1.2, tps_at=_flat_tps(10.0),
+                    lam_cap=10.0)
+    assert out["saturated_windows"] == 1        # excess queues, flagged
+
+
+def test_price_day_rejects_unmeasured_rates():
+    wins = static_windows(1, [5.0], 3600.0)
+    with pytest.raises(ValueError, match="measure"):
+        price_day(wins, price_per_hr=1.2, tps_at=lambda lam: math.nan)
+
+
+def test_verdict_flips_between_paper_day_deployments():
+    """The committed scenario's design invariant: autoscaling pays on the
+    small-capacity footprint (4 static replicas, deep trough) and does
+    NOT pay on the big one (1 static replica covers the whole day)."""
+    sc = PAPER_DAY
+    verdicts = {}
+    for dep in sc.deployments:
+        tps = _flat_tps(dep.lam_cap)
+        day = {name: price_day(traj, price_per_hr=dep.price_per_hr,
+                               tps_at=tps, lam_cap=dep.lam_cap)
+               for name, traj in sc.trajectories(dep).items()}
+        winner = min(day, key=lambda k: day[k]["day_c_eff"])
+        verdicts[dep.name] = winner
+    assert verdicts["llama31-8b@tpu-v5e x2"] != "static"
+    assert verdicts["qwen3-30b-a3b@tpu-v5e x8"] == "static"
+
+
+def test_rate_ladder_covers_every_visited_rate():
+    sc = MINI_DAY
+    dep = sc.deployments[0]
+    ladder = set(sc.rate_ladder(dep))
+    for traj in sc.trajectories(dep).values():
+        for fw in traj:
+            if fw.lam > 0 and fw.serving > 0:
+                assert quantize_rate(fw.lam / fw.serving) in ladder
+
+
+# ---- plans + analyze wiring ------------------------------------------
+
+
+def test_day_plans_expand_deterministically():
+    for name in ("paper_diurnal", "mini_diurnal"):
+        a, b = get_plan(name), get_plan(name)
+        assert [c.cell_id for c in a.cells] == [c.cell_id for c in b.cells]
+        assert len({c.cell_id for c in a.cells}) == len(a.cells)
+        assert [c.seed for c in a.cells] == [c.seed for c in b.cells]
+    paper = get_plan("paper_diurnal")
+    ladder_rates = {quantize_rate(r)
+                    for dep in PAPER_DAY.deployments
+                    for r in PAPER_DAY.rate_ladder(dep)}
+    assert {c.lam for c in paper.cells} <= ladder_rates
+
+
+def test_profile_cells_roundtrip_arrival_spec():
+    plan = get_plan("mini_diurnal")
+    prof_cells = [c for c in plan.cells if c.profile_kind]
+    assert len(prof_cells) == 2
+    for c in prof_cells:
+        spec = c.arrival_spec()
+        assert spec.profile is not None and not spec.profile.is_constant
+        times, _, _ = synth_arrays(dataclasses.replace(
+            spec, n_requests=30))
+        assert len(times) == 30 and np.all(np.diff(times) > 0)
+        assert "prof-" in c.cell_id
+
+
+def test_stationary_cells_keep_historical_identity():
+    """The profile axis must not leak into any stationary cell's id,
+    seed key or fingerprint (committed stores resume on these): a
+    default-profile cell hashes exactly like one whose dataclass
+    predates the axis."""
+    import hashlib
+    import json
+    for name in ("quickstart", "mini_crosshw"):
+        for c in get_plan(name).cells:
+            assert c.profile_kind == ""
+            assert "prof-" not in c.cell_id
+            assert not any(isinstance(k, tuple) and k and k[0] == "profile"
+                           for k in c.seed_key)
+            spec = dataclasses.asdict(c)
+            for k in ("profile_kind", "profile_knots", "profile_period_s",
+                      "profile_args"):
+                spec.pop(k)
+            if not c.seed_offset:
+                spec.pop("seed_offset")
+            legacy = hashlib.sha256(json.dumps(
+                spec, sort_keys=True).encode()).hexdigest()[:16]
+            assert c.fingerprint() == legacy
+
+
+@pytest.fixture(scope="module")
+def mini_records():
+    plan = get_plan("mini_diurnal")
+    recs = PlanRunner(plan).run(parallel=False, backend="vector")
+    assert len(recs) == len(plan.cells)
+    return recs
+
+
+def test_mini_diurnal_runs_and_reports(mini_records):
+    """End-to-end smoke: run the mini day store on the fleet backend,
+    then the analyze report prices the day and the verdict renders."""
+    recs = mini_records
+    tables = crosshw_tables(recs)
+    rows = tables["diurnal"]
+    assert len(rows) == 1
+    row = rows[0]
+    assert row["scenario"] == "mini_day"
+    assert not row["missing_rates"]
+    pol_names = {p["policy"] for p in row["policies"]}
+    assert pol_names == {"static", "reactive"}
+    for p in row["policies"]:
+        assert p["idle_windows"] == 1           # the zero window priced
+        assert p["day_c_eff"] is not None and p["day_c_eff"] > 0
+        busy = [w for w in p["windows"] if not w["idle"]]
+        assert all(w["c_eff"] is not None for w in busy)
+    assert row["winner"] in pol_names
+    text = report(recs)
+    assert "cost of a day of traffic" in text
+    assert "cheapest day" in text
+
+
+def test_profile_records_excluded_from_stationary_analytics(mini_records):
+    """Non-stationary records (config `profile:`) must not masquerade as
+    ladder knots or seed replicates in curves/bands."""
+    from repro.planner.curves import fit_curves
+    recs = mini_records
+    prof_recs = [r for r in recs if r.config.startswith("profile:")]
+    assert prof_recs, "mini_diurnal should carry profile smoke cells"
+    curves = fit_curves(recs)
+    for cu in curves:
+        assert not any(r.config.startswith("profile:") for r in cu.records)
+    # the two profile cells share the lam=4 label with a stationary cell;
+    # pre-exclusion they formed a fake 3-"seed" replicate band group
+    assert crosshw_tables(recs)["ensemble_bands"] == []
+
+
+def test_profile_cell_identical_across_backends():
+    """Trace-replay determinism: the same profile cell must produce a
+    bit-identical record on the scalar process path and the vectorized
+    fleet path (the thinning protocol pins the rng consumption)."""
+    plan = get_plan("mini_diurnal")
+    keep = [c for c in plan.cells if c.profile_kind] + \
+        [c for c in plan.cells if not c.profile_kind][:1]
+    small = dataclasses.replace(plan, cells=tuple(keep))
+    a = PlanRunner(small).run(parallel=False, backend="process")
+    b = PlanRunner(small).run(parallel=False, backend="vector")
+    c = PlanRunner(small).run(parallel=True, backend="process")
+    for ra, rb, rc in zip(a, b, c):
+        assert dataclasses.asdict(ra) == dataclasses.asdict(rb)
+        assert dataclasses.asdict(ra) == dataclasses.asdict(rc)

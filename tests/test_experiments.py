@@ -457,11 +457,16 @@ def test_seed_offset_zero_preserves_base_plan():
     c0 = base.cells[0]
     spec = dataclasses.asdict(c0)
     spec.pop("seed_offset")
+    for k in ("profile_kind", "profile_knots", "profile_period_s",
+              "profile_args"):
+        spec.pop(k)     # default-empty lambda(t) axis: same rule (ISSUE 8)
     import hashlib
     legacy = hashlib.sha256(
         json.dumps(spec, sort_keys=True).encode()).hexdigest()[:16]
     assert c0.fingerprint() == legacy
     assert dataclasses.replace(c0, seed_offset=1).fingerprint() != legacy
+    assert dataclasses.replace(c0, profile_kind="diurnal").fingerprint() \
+        != legacy
 
 
 def test_seed_offsets_draw_independent_streams():
