@@ -1,0 +1,95 @@
+"""Overload controller cost (ISSUE 9). Informational only, no CI gate.
+
+Three timings an operator of the degradation layer cares about:
+
+* `inert-policy` — zero-cost-off: an engine carrying a default (all
+  zero) OverloadPolicy vs `overload=None`; the bit-identity contract
+  says the records match, this measures that the wall-clock does too.
+* `armed-controller` — what the full degradation stack (priority
+  classes + state machine + brownout clamping) costs per cell next to
+  the same arrivals with no controller.
+* `flashcrowd-fleet` — cells/s of the vectorized fleet backend over the
+  `mini_flashcrowd` pair (the CI smoke store), admission/brownout
+  running in-lane.
+* `overload-tables` — re-deriving the degradation-vs-blind-shedding
+  verdict from the committed `paper_flashcrowd` store.
+"""
+import time
+
+from benchmarks.common import emit
+from repro.core.sweep import SimEngineSpec, run_point
+from repro.experiments.plans import get_plan
+from repro.serving.arrivals import ArrivalSpec
+from repro.serving.fleet import FleetPoint, fleet_run_points
+from repro.serving.overload import OverloadPolicy
+
+
+def _timed(fn, n):
+    best, out = float("inf"), None
+    for _ in range(n):
+        t0 = time.perf_counter()
+        out = fn()
+        best = min(best, time.perf_counter() - t0)
+    return best, out
+
+
+def run(quick: bool = False):
+    n = 3 if quick else 6
+    n_req = 300 if quick else 1500
+    rows = []
+
+    base = dict(arch="llama31-8b", max_batch=16, num_pages=8192,
+                max_pages_per_seq=64)
+    arr = ArrivalSpec(lam=12.0, n_requests=n_req, seed=0)
+    t_plain, _ = _timed(
+        lambda: run_point(SimEngineSpec(**base), arr, config="B"), n)
+    t_inert, _ = _timed(
+        lambda: run_point(SimEngineSpec(overload=OverloadPolicy(), **base),
+                          arr, config="B"), n)
+    rows.append({"case": "inert-policy", "n": n_req, "wall_s": t_inert,
+                 "baseline_s": t_plain, "ratio": t_inert / t_plain,
+                 "req_per_s": n_req / t_inert})
+
+    armed = OverloadPolicy(brownout_depth=12, shed_depth=24,
+                           recover_depth=4, ttft_slo_s=1.0,
+                           brownout_max_new=64)
+    classed = ArrivalSpec(lam=12.0, n_requests=n_req, seed=0,
+                          class_mix=(0.5, 0.3, 0.2))
+    t_armed, rec = _timed(
+        lambda: run_point(SimEngineSpec(overload=armed, **base), classed,
+                          config="B"), n)
+    rows.append({"case": "armed-controller", "n": n_req, "wall_s": t_armed,
+                 "baseline_s": t_plain, "ratio": t_armed / t_plain,
+                 "req_per_s": n_req / t_armed})
+    print(f"# armed cell: shed={rec.n_shed} browned={rec.n_browned} "
+          f"slo_viol={rec.n_slo_viol}")
+
+    cells = list(get_plan("mini_flashcrowd").cells)
+    points = [FleetPoint(engine=c.engine_spec(), arrivals=c.arrival_spec(),
+                         warmup=c.warmup, **c.record_kw())
+              for c in cells]
+    t_fleet, _ = _timed(lambda: fleet_run_points(points), n)
+    rows.append({"case": "flashcrowd-fleet", "n": len(points),
+                 "wall_s": t_fleet, "baseline_s": float("nan"),
+                 "ratio": float("nan"),
+                 "req_per_s": len(points) / t_fleet})
+
+    try:
+        from repro.experiments.analyze import (load_store_records,
+                                               overload_tables)
+        records = load_store_records("paper_flashcrowd")
+    except OSError:
+        records = []
+    if records:
+        t_tab, tab = _timed(lambda: overload_tables(records), n)
+        rows.append({"case": "overload-tables", "n": len(records),
+                     "wall_s": t_tab, "baseline_s": float("nan"),
+                     "ratio": float("nan"),
+                     "req_per_s": len(tab) / t_tab})
+    else:
+        print("# paper_flashcrowd store absent; analysis section skipped")
+    emit("overload", rows)
+
+
+if __name__ == "__main__":
+    run(quick=True)

@@ -13,7 +13,8 @@ from benchmarks import (bench_diurnal, bench_engine_throughput,
                         bench_fig1_cost_curves,
                         bench_fig2_quant, bench_fig3_penalty_heatmap,
                         bench_fig5_crossover, bench_kernels,
-                        bench_plan_matrix, bench_planner, bench_resilience,
+                        bench_overload, bench_plan_matrix, bench_planner,
+                        bench_resilience,
                         bench_sensitivity, bench_table3_penalty,
                         bench_table4_sla,
                         bench_table5_stability, bench_table6_crosshw,
@@ -25,6 +26,7 @@ SUITES = (
     ("planner", bench_planner),
     ("resilience", bench_resilience),
     ("diurnal", bench_diurnal),
+    ("overload", bench_overload),
     ("fig1_cost_curves", bench_fig1_cost_curves),
     ("table3_penalty", bench_table3_penalty),
     ("fig2_quant", bench_fig2_quant),

@@ -1,0 +1,84 @@
+"""Three-path identity check for admission/overload cells (ISSUE 9).
+
+Runs the same (engine, arrivals) points through the per-token reference
+loop, the event-driven fast path, and the fleet backend. The contract
+(unchanged since PR 1/PR 4): every scheduling decision — and therefore
+every integer field (completions, sheds, timeouts, class sheds,
+brownouts, SLO violations) — is bit-identical across all three paths;
+float fields are bit-identical between the fast path and the fleet
+(the committed-store surface) and agree with the per-token reference
+loop to float-rounding tolerance (the closed-form clock jump sums the
+same step durations in a different association order). Exercised by
+CI's overload-smoke job; handy standalone while hacking on the
+scheduler."""
+import dataclasses
+import math
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.core.records import FIELDS
+from repro.core.sweep import SimEngineSpec, run_point
+from repro.serving.arrivals import ArrivalSpec
+from repro.serving.fleet import FleetPoint, fleet_run_points
+from repro.serving.overload import OverloadPolicy
+
+
+def main():
+    pol = OverloadPolicy(brownout_depth=6, shed_depth=12, recover_depth=2,
+                         ttft_slo_s=0.6, brownout_max_new=24).validate()
+    mon = OverloadPolicy(ttft_slo_s=0.6)
+    base = dict(arch="llama31-8b", max_batch=8, num_pages=4096,
+                max_pages_per_seq=64)
+    cases = [
+        ("mqd", SimEngineSpec(max_queue_depth=10, **base),
+         ArrivalSpec(lam=6.0, n_requests=160, seed=3)),
+        ("ddl", SimEngineSpec(deadline_s=1.2, **base),
+         ArrivalSpec(lam=6.0, n_requests=160, seed=4)),
+        ("mqd+ddl", SimEngineSpec(max_queue_depth=8, deadline_s=1.0, **base),
+         ArrivalSpec(lam=7.0, n_requests=160, seed=5)),
+        ("overload", SimEngineSpec(overload=pol, **base),
+         ArrivalSpec(lam=7.0, n_requests=200, seed=6,
+                     class_mix=(0.6, 0.3, 0.1))),
+        ("overload+mqd+ddl",
+         SimEngineSpec(overload=pol, max_queue_depth=40, deadline_s=2.0,
+                       **base),
+         ArrivalSpec(lam=8.0, n_requests=200, seed=7,
+                     class_mix=(0.5, 0.3, 0.2))),
+        ("monitor", SimEngineSpec(overload=mon, **base),
+         ArrivalSpec(lam=6.0, n_requests=120, seed=8,
+                     class_mix=(0.6, 0.3, 0.1))),
+    ]
+    failures = 0
+    for name, spec, arr in cases:
+        ref_spec = dataclasses.replace(spec, fast_forward=False)
+        ref = run_point(ref_spec, arr, warmup=20, config=name)
+        fast = run_point(spec, arr, warmup=20, config=name)
+        fleet = fleet_run_points(
+            [FleetPoint(engine=spec, arrivals=arr, warmup=20,
+                        config=name)])[0]
+        for fld in FIELDS:
+            a, b, c = (getattr(ref, fld), getattr(fast, fld),
+                       getattr(fleet, fld))
+            ok = repr(b) == repr(c)     # fast <-> fleet: bitwise, always
+            if isinstance(b, float) and not isinstance(b, bool):
+                ok &= (a == b or (math.isnan(a) and math.isnan(b))
+                       or abs(a - b) <= 1e-9 * max(abs(a), abs(b), 1.0))
+            else:
+                ok &= repr(a) == repr(b)   # decisions: bitwise everywhere
+            if not ok:
+                print(f"FAIL {name}.{fld}: ref={a!r} fast={b!r} "
+                      f"fleet={c!r}")
+                failures += 1
+        shed = fleet.n_shed + fleet.n_timeout
+        print(f"ok {name}: completed={fleet.n_completed} "
+              f"shed+timeout={shed} class_shed={fleet.n_class_shed} "
+              f"browned={fleet.n_browned} slo_viol={fleet.n_slo_viol}")
+    if failures:
+        print(f"{failures} field mismatches")
+        sys.exit(1)
+    print("all paths bit-identical")
+
+
+if __name__ == "__main__":
+    main()

@@ -44,6 +44,14 @@ class RunRecord:
     n_timeout: int = 0          # queue-time deadline expiries
     n_retried: int = 0          # client re-submissions (amplification)
     n_abandoned: int = 0        # permanently given up (budget exhausted)
+    # overload-survival counters (ISSUE 9); all zero without an
+    # OverloadPolicy, so pre-9 records regenerate byte-identical.
+    n_class_shed: int = 0       # of n_shed: refused by class (not depth cap)
+    n_browned: int = 0          # admitted with a brownout-clamped budget
+    browned_tokens: int = 0     # output tokens clipped by the clamp
+    n_slo_viol: int = 0         # served requests whose TTFT broke the SLO
+    interactive_tps: float = 0.0  # delivered interactive-class tokens/s
+    #                               (0 unless the cell declares a class_mix)
 
     @property
     def penalty(self) -> float:

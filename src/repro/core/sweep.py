@@ -30,6 +30,7 @@ from repro.core.cost import c_eff
 from repro.core.records import RunRecord
 from repro.serving.arrivals import ArrivalSpec, synth_requests
 from repro.serving.engine import Engine, EngineConfig
+from repro.serving.overload import OverloadPolicy
 
 # The paper's 7-point ladder.
 LAMBDA_LADDER = (1, 5, 10, 25, 50, 100, 200)
@@ -62,6 +63,7 @@ class SimEngineSpec:
     fast_forward: bool = True
     max_queue_depth: int = 0            # >0: admission-control shedding
     deadline_s: float = 0.0             # >0: queue-time deadline
+    overload: Optional[OverloadPolicy] = None     # ISSUE 9 controller
 
     def __call__(self) -> Engine:
         from repro.configs import get_config
@@ -78,7 +80,8 @@ class SimEngineSpec:
             max_prefill_reqs=self.max_prefill_reqs,
             fast_forward=self.fast_forward,
             max_queue_depth=self.max_queue_depth,
-            deadline_s=self.deadline_s)
+            deadline_s=self.deadline_s,
+            overload=self.overload)
         return Engine(ecfg, SimExecutor(cfg, stm))
 
 
@@ -133,7 +136,16 @@ def run_point(engine_factory: Callable[[], Engine], spec: ArrivalSpec, *,
         n_shed=int(m.get("repro:request_shed_total")),
         n_timeout=int(m.get("repro:request_timeout_total")),
         n_retried=int(m.get("repro:request_retry_total")),
-        n_abandoned=int(m.get("repro:request_abandoned_total")))
+        n_abandoned=int(m.get("repro:request_abandoned_total")),
+        n_class_shed=int(m.get("repro:request_class_shed_total")),
+        n_browned=int(m.get("repro:request_browned_total")),
+        browned_tokens=int(m.get("repro:browned_tokens_total")),
+        n_slo_viol=int(m.get("repro:request_slo_violation_total")),
+        # gated on class_mix so classless cells (every pre-9 store)
+        # keep the 0.0 default byte-for-byte
+        interactive_tps=(sum(r.tokens_out for r in done if r.priority == 0)
+                         / window if (spec.class_mix and window > 0)
+                         else 0.0))
     return rec
 
 

@@ -40,12 +40,14 @@ def _groups(records: Sequence[RunRecord]
     points. They are analyzed by `reliability_tables` instead.
     Non-stationary records (config prefixed `profile:`, ISSUE 8) are
     excluded too: their `lam` is the nominal mean of lambda(t), not a
-    stationary offered rate, so they are not ladder knots."""
+    stationary offered rate, so they are not ladder knots. Flash-crowd
+    records (config prefixed `flash:`, ISSUE 9) are both non-stationary
+    (MMPP bursts) and degradation-shaped; `overload_tables` owns them."""
     out: Dict[Tuple, List[RunRecord]] = {}
     for r in records:
         if r.mttf > 0.0 or r.retry_max > 0:
             continue
-        if r.config.startswith("profile:"):
+        if r.config.startswith(("profile:", "flash:")):
             continue
         key = (r.model, r.hw, r.quant, r.n_chips, r.io_shape)
         out.setdefault(key, []).append(r)
@@ -414,6 +416,143 @@ def diurnal_tables(records: Sequence[RunRecord]) -> List[dict]:
     return out
 
 
+def _overload_arm(r: RunRecord) -> dict:
+    """Per-arm scalars for one flash-crowd record. `slo_met_frac` is the
+    fraction of completed requests whose TTFT met the SLO;
+    `slo_violation_minutes` spreads the violating fraction over the
+    measurement window (a whole window out of SLO = window_s/60)."""
+    from repro.core.cost import c_eff as _ceff
+    done = max(r.n_completed, 1)
+    slo_met_frac = 1.0 - r.n_slo_viol / done
+    total_tokens = r.tps * r.window_s
+    return {
+        "offered_rps": r.lam, "goodput_rps": r.goodput_rps,
+        "delivered_frac": (r.n_completed / r.n_requests
+                           if r.n_requests else float("nan")),
+        "n_shed": r.n_shed, "n_class_shed": r.n_class_shed,
+        "n_timeout": r.n_timeout,
+        "shed_frac": ((r.n_shed + r.n_timeout) / r.n_requests
+                      if r.n_requests else 0.0),
+        "n_browned": r.n_browned,
+        "browned_token_frac": (r.browned_tokens
+                               / (r.browned_tokens + total_tokens)
+                               if r.browned_tokens + total_tokens > 0
+                               else 0.0),
+        "n_slo_viol": r.n_slo_viol, "slo_met_frac": slo_met_frac,
+        "slo_violation_minutes": (r.window_s / 60.0)
+        * (r.n_slo_viol / done),
+        "ttft_p90_ms": r.ttft_p90_ms,
+        "tps": r.tps, "interactive_tps": r.interactive_tps,
+        "c_eff": r.c_eff,
+        "c_eff_interactive": _ceff(r.price_per_hr, r.interactive_tps),
+        # the headline denominator: interactive tokens delivered AND
+        # within the TTFT SLO (per-class SLO counts are not recorded, so
+        # the completed-request SLO-met fraction prorates the stream)
+        "c_eff_slo_interactive": _ceff(
+            r.price_per_hr, r.interactive_tps * slo_met_frac),
+    }
+
+
+def overload_tables(records: Sequence[RunRecord]) -> List[dict]:
+    """ISSUE 9: priced graceful degradation under flash crowds. One row
+    per (burst scenario, deployment) pair of a flash-crowd store (config
+    `flash:<scenario>:<arm>`): the degradation-ON arm (armed
+    OverloadPolicy: priority shedding + brownout) against the OFF arm
+    (monitor-only policy — same queue cap, blind shedding, violations
+    counted but nothing degraded) on the SAME arrival + class stream.
+
+    The verdict metric is `c_eff_slo_interactive`: $/M interactive
+    tokens delivered within the TTFT SLO. Degradation sheds background
+    work and clamps token budgets, spending less of the window out of
+    SLO — so it should beat blind shedding on cost per SLO-met
+    interactive token even though it refuses more requests outright."""
+    by_pair: Dict[Tuple, Dict[str, RunRecord]] = {}
+    for r in records:
+        if not r.config.startswith("flash:"):
+            continue
+        parts = r.config.split(":")
+        scenario = parts[1] if len(parts) > 1 else ""
+        arm = parts[2] if len(parts) > 2 else "on"
+        key = (scenario, r.model, r.hw, r.quant, r.n_chips,
+               r.io_shape, r.lam)
+        by_pair.setdefault(key, {})[arm] = r
+    out = []
+    for key in sorted(by_pair, key=lambda k: (k[0], k[6])):
+        arms = by_pair[key]
+        row = {
+            "scenario": key[0], "model": key[1], "hw": key[2],
+            "quant": key[3], "n_chips": key[4], "io_shape": key[5],
+            "lam": key[6],
+            "arms": {arm: _overload_arm(r)
+                     for arm, r in sorted(arms.items())},
+        }
+        on, off = row["arms"].get("on"), row["arms"].get("off")
+        if on is not None and off is not None:
+            row["degradation_wins"] = (on["c_eff_slo_interactive"]
+                                       < off["c_eff_slo_interactive"])
+            row["slo_minutes_saved"] = (off["slo_violation_minutes"]
+                                        - on["slo_violation_minutes"])
+            row["cost_ratio_off_over_on"] = (
+                off["c_eff_slo_interactive"]
+                / on["c_eff_slo_interactive"]
+                if on["c_eff_slo_interactive"] > 0 else float("inf"))
+        out.append(row)
+    return out
+
+
+def overload_verdict(rows: Sequence[dict]) -> dict:
+    """Store-level headline over `overload_tables` rows: does graceful
+    degradation beat blind shedding on cost per SLO-met interactive
+    token on every burst cell? (The committed `paper_flashcrowd` grid is
+    tuned so it does; the acceptance test asserts this.)"""
+    pairs = [r for r in rows if "degradation_wins" in r]
+    wins = sum(1 for r in pairs if r["degradation_wins"])
+    return {
+        "n_pairs": len(pairs),
+        "wins": wins,
+        "degradation_wins": bool(pairs) and wins == len(pairs),
+        "total_slo_minutes_saved": sum(r["slo_minutes_saved"]
+                                       for r in pairs),
+    }
+
+
+def render_overload(rows: Sequence[dict]) -> str:
+    """Text rendering of `overload_tables` rows (report + planner)."""
+    if not rows:
+        return ""
+    lines = ["-- surviving a flash crowd (degradation ON vs OFF, "
+             "$/M SLO-met interactive tokens) --",
+             f"{'scenario':<10} {'lam':>6} {'arm':<4} {'deliv':>6} "
+             f"{'shed':>5} {'brown':>5} {'sloOK':>6} {'sloMin':>7} "
+             f"{'$/M int-SLO':>11}"]
+    for row in rows:
+        for arm in ("on", "off"):
+            a = row["arms"].get(arm)
+            if a is None:
+                continue
+            ce = a["c_eff_slo_interactive"]
+            lines.append(
+                f"{row['scenario']:<10} {row['lam']:>6g} {arm:<4} "
+                f"{a['delivered_frac']:>6.2f} {a['shed_frac']:>5.2f} "
+                f"{a['browned_token_frac']:>5.2f} "
+                f"{a['slo_met_frac']:>6.2f} "
+                f"{a['slo_violation_minutes']:>7.2f} "
+                + (f"{ce:>11.3f}" if ce != float("inf") else
+                   f"{'inf':>11}"))
+        if "degradation_wins" in row:
+            tag = ("degradation pays" if row["degradation_wins"]
+                   else "blind shedding cheaper")
+            lines.append(f"  -> {tag} "
+                         f"({row['cost_ratio_off_over_on']:.2f}x off/on, "
+                         f"{row['slo_minutes_saved']:+.2f} SLO-min saved)")
+    verdict = overload_verdict(rows)
+    if verdict["n_pairs"]:
+        lines.append(
+            f"  => graceful degradation beats blind shedding on "
+            f"{verdict['wins']}/{verdict['n_pairs']} burst cells")
+    return "\n".join(lines)
+
+
 def render_diurnal(rows: Sequence[dict]) -> str:
     """Text rendering of `diurnal_tables` rows (report + example)."""
     if not rows:
@@ -484,6 +623,7 @@ def crosshw_tables(records: Sequence[RunRecord]) -> Dict[str, object]:
     knots a penalty-curve figure needs — plus the recommended deployment
     at the paper's reference loads."""
     from repro.planner.tables import planner_tables
+    pairs = overload_tables(records)
     return {
         "spread_compression": spread_compression(records),
         "fp8_inversion": fp8_inversion(records),
@@ -493,6 +633,10 @@ def crosshw_tables(records: Sequence[RunRecord]) -> Dict[str, object]:
         "planner_tables": planner_tables(records),
         "reliability": reliability_tables(records),
         "diurnal": diurnal_tables(records),
+        "overload": {
+            "pairs": pairs,
+            "verdict": overload_verdict(pairs),
+        },
     }
 
 
@@ -640,6 +784,11 @@ def report(records: Sequence[RunRecord], title: str = "") -> str:
     if diurnal:
         lines.append("")
         lines.extend(render_diurnal(diurnal).splitlines())
+
+    overload = overload_tables(records)
+    if overload:
+        lines.append("")
+        lines.extend(render_overload(overload).splitlines())
 
     lines.append("")
     lines.append("-- API crossover (list prices, no SLA: §6.4 gate "

@@ -109,6 +109,20 @@ class Cell:
     profile_knots: Tuple[Tuple[float, float], ...] = ()
     profile_period_s: float = 0.0
     profile_args: Tuple[float, ...] = ()
+    # overload survival (ISSUE 9): priority-class mix over arrivals and
+    # the flattened OverloadPolicy. All-default means off and, like
+    # seed_offset/profile_*, stays OUT of cell_id / seed_key /
+    # fingerprint so historical plans and committed stores keep their
+    # exact ids, seeds and cell files. The ovl_* fields mirror
+    # `serving.overload.OverloadPolicy` one-for-one.
+    class_mix: Tuple[float, ...] = ()
+    ovl_brownout_depth: int = 0
+    ovl_shed_depth: int = 0
+    ovl_recover_depth: int = 0
+    ovl_ttft_slo_s: float = 0.0
+    ovl_brownout_max_new: int = 0
+    ovl_brownout_shed_floor: int = 2    # overload.BACKGROUND
+    ovl_shed_floor: int = 1             # overload.BATCH
     # runner execution policy (not part of the measurement itself)
     cell_retries: int = 2       # re-dispatch budget after worker loss
 
@@ -122,6 +136,21 @@ class Cell:
         return (self.mttf, self.mttr, self.fail_frac, self.retry_max,
                 self.retry_base_s, self.retry_jitter_s,
                 self.max_queue_depth, self.deadline_s)
+
+    @property
+    def overload_key(self) -> Tuple:
+        return (self.class_mix, self.ovl_brownout_depth, self.ovl_shed_depth,
+                self.ovl_recover_depth, self.ovl_ttft_slo_s,
+                self.ovl_brownout_max_new, self.ovl_brownout_shed_floor,
+                self.ovl_shed_floor)
+
+    @property
+    def overloaded(self) -> bool:
+        """True when the cell carries a priority-class mix or an
+        OverloadPolicy — armed or monitor-only (ttft_slo_s only)."""
+        return (bool(self.class_mix) or self.ovl_brownout_depth > 0
+                or self.ovl_shed_depth > 0 or self.ovl_brownout_max_new > 0
+                or self.ovl_ttft_slo_s > 0.0)
 
     @property
     def resilient(self) -> bool:
@@ -144,6 +173,9 @@ class Cell:
         if self.profile_kind:
             pk = zlib.crc32(repr(self.profile_key).encode()) % 100000
             raw += f"_prof-{self.profile_kind}{pk}"
+        if self.overloaded:
+            ok = zlib.crc32(repr(self.overload_key).encode()) % 100000
+            raw += f"_ovl{ok}"
         return raw.replace("/", "-")
 
     @property
@@ -173,6 +205,12 @@ class Cell:
         base = self.seed_key
         if self.resilient:
             base = base + self.resilience_key
+        if self.overloaded:
+            # overload axes group like the resilience axes: they stay out
+            # of seed_key (degradation-on/off arms share one arrival +
+            # class stream — *paired* comparison) but split ladder groups,
+            # so theta_max is back-filled per policy arm.
+            base = base + (("ovl",) + self.overload_key,)
         return base
 
     def fingerprint(self) -> str:
@@ -189,6 +227,13 @@ class Cell:
             for k in ("profile_kind", "profile_knots", "profile_period_s",
                       "profile_args"):
                 spec.pop(k)
+        if not self.overloaded:
+            # and for the overload-survival fields (ISSUE 9)
+            for k in ("class_mix", "ovl_brownout_depth", "ovl_shed_depth",
+                      "ovl_recover_depth", "ovl_ttft_slo_s",
+                      "ovl_brownout_max_new", "ovl_brownout_shed_floor",
+                      "ovl_shed_floor"):
+                spec.pop(k)
         blob = json.dumps(spec, sort_keys=True)
         return hashlib.sha256(blob.encode()).hexdigest()[:16]
 
@@ -202,7 +247,8 @@ class Cell:
             max_prefill_reqs=self.max_prefill_reqs,
             fast_forward=self.fast_forward,
             max_queue_depth=self.max_queue_depth,
-            deadline_s=self.deadline_s)
+            deadline_s=self.deadline_s,
+            overload=self.overload_policy())
 
     def failure_spec(self):
         """FailureSpec for this cell, or None. The stream seed is derived
@@ -213,6 +259,25 @@ class Cell:
         from repro.serving.resilience import FailureSpec
         return FailureSpec(mttf=self.mttf, mttr=self.mttr,
                            loss_frac=self.fail_frac, seed=self.seed + 911)
+
+    def overload_policy(self):
+        """OverloadPolicy for this cell, or None. A cell with only
+        `ovl_ttft_slo_s` set carries a monitor-only policy (violations
+        counted, nothing shed or clamped) — the degradation-OFF arm of
+        the flash-crowd experiment."""
+        if not (self.ovl_brownout_depth > 0 or self.ovl_shed_depth > 0
+                or self.ovl_brownout_max_new > 0
+                or self.ovl_ttft_slo_s > 0.0):
+            return None
+        from repro.serving.overload import OverloadPolicy
+        return OverloadPolicy(
+            brownout_depth=self.ovl_brownout_depth,
+            shed_depth=self.ovl_shed_depth,
+            recover_depth=self.ovl_recover_depth,
+            ttft_slo_s=self.ovl_ttft_slo_s,
+            brownout_max_new=self.ovl_brownout_max_new,
+            brownout_shed_floor=self.ovl_brownout_shed_floor,
+            shed_floor=self.ovl_shed_floor).validate()
 
     def retry_policy(self):
         if self.retry_max <= 0:
@@ -235,7 +300,7 @@ class Cell:
         return ArrivalSpec(lam=self.lam, n_requests=self.n_requests,
                            io_shape=self.io_shape, process=self.process,
                            cv=self.cv, seed=self.seed, scale=self.scale,
-                           profile=profile)
+                           profile=profile, class_mix=self.class_mix)
 
     def record_kw(self) -> Dict:
         return dict(config=self.config, model=self.model, hw=self.hw,

@@ -23,6 +23,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable, Dict, Tuple
 
+from repro.core.pricing import chip_hour_price
 from repro.core.sweep import LAMBDA_LADDER
 from repro.experiments.plan import Cell, ExperimentPlan, GridSpec, cell_seed
 from repro.serving.autoscale import DAY_SCENARIOS, DayScenario
@@ -452,6 +453,116 @@ def mini_diurnal() -> ExperimentPlan:
                     "window) + trace/diurnal lambda(t) stream cells")
 
 
+# --------------------------------------------------------------------------
+# flash crowds (ISSUE 9)
+# --------------------------------------------------------------------------
+
+# arrival class mix: interactive / batch / background. Half the crowd
+# is latency-sensitive; the other half is deferrable work the
+# controller can shed — the headroom graceful degradation spends.
+FLASH_MIX = (0.5, 0.3, 0.2)
+
+# MMPP burst cells sweeping burst intensity: (name, base rate, burst
+# rate, base dwell s, burst dwell s). The deployment (llama31-8b @
+# tpu-v5e x2, theta_max ~2.9k tok/s ~= 11.5 req/s at chat shapes)
+# saturates under every burst state — "calm" barely, "crowd" at ~5x
+# capacity — so the queue actually floods and the controller has
+# something to survive.
+FLASH_BURSTS = (
+    ("calm", 6.0, 18.0, 40.0, 10.0),
+    ("gusty", 6.0, 30.0, 40.0, 10.0),
+    ("crowd", 6.0, 60.0, 40.0, 10.0),
+)
+
+# degradation-ON arm: enter brownout at depth 16 (refuse background,
+# clamp outputs to 64 tokens — the clamp multiplies request-rate
+# capacity, which is what keeps interactive TTFT under the SLO at 3-5x
+# overload), hard-shed batch+background at depth 32, recover below 4;
+# degradation-OFF arm: monitor-only policy (same TTFT SLO, so
+# violations are counted identically) with only the class-blind queue
+# cap shedding — "blind shedding".
+FLASH_POLICY = dict(ovl_brownout_depth=16, ovl_shed_depth=32,
+                    ovl_recover_depth=4, ovl_ttft_slo_s=2.0,
+                    ovl_brownout_max_new=64)
+FLASH_MONITOR = dict(ovl_ttft_slo_s=2.0)
+
+
+def _flashcrowd_cells(*, plan_name: str, bursts, policy: dict,
+                      monitor: dict, mqd: int, duration_s: float,
+                      max_batch: int = 256, num_pages: int = 65536,
+                      seed: int = 0) -> Tuple[Cell, ...]:
+    """Expand MMPP burst scenarios into paired degradation-on/off cells.
+
+    Both arms of a burst share one seed (derived from the arm-agnostic
+    template cell), hence one arrival + class stream — the comparison is
+    *paired*, isolating the controller's effect. `lam` is the
+    time-weighted mean of the two MMPP states (the record's nominal
+    rate); `n_requests` covers ~`duration_s` of that mean rate."""
+    cells = []
+    for bname, ra, rb, da, db in bursts:
+        lam = (ra * da + rb * db) / (da + db)
+        base = Cell(
+            plan=plan_name, config=f"flash:{bname}", model="llama31-8b",
+            arch="llama31-8b", hw="tpu-v5e", quant="bf16", n_chips=2,
+            lam=lam, io_shape="chat", seed=0,
+            n_requests=int(lam * duration_s), warmup=0,
+            price_per_hr=chip_hour_price("tpu-v5e", 2),
+            max_batch=max_batch, num_pages=num_pages,
+            profile_kind="mmpp", profile_args=(ra, rb, da, db),
+            class_mix=FLASH_MIX, max_queue_depth=mqd)
+        shared = cell_seed(seed, base.seed_key, lam)
+        for arm, ovl in (("on", policy), ("off", monitor)):
+            cells.append(dataclasses.replace(
+                base, config=f"flash:{bname}:{arm}", seed=shared, **ovl))
+    return tuple(cells)
+
+
+def paper_flashcrowd() -> ExperimentPlan:
+    """Overload survival (ISSUE 9): 3 MMPP burst intensities x
+    {degradation on, off} on the core cheap-part deployment (6 cells,
+    ~150 s of traffic each).
+
+    Each burst pair shares its arrival + priority-class stream; the ON
+    arm runs the armed OverloadPolicy (priority shedding + token-budget
+    brownout + hysteresis), the OFF arm a monitor-only policy behind the
+    same queue cap (blind shedding, violations still counted).
+    `analyze.overload_tables` prices both arms per SLO-met interactive
+    token; the committed store is tuned so degradation wins every cell.
+
+        python -m repro.experiments.run --plan paper_flashcrowd \\
+            --backend vector --resume --analyze-json
+    """
+    return ExperimentPlan(
+        name="paper_flashcrowd",
+        cells=_flashcrowd_cells(
+            plan_name="paper_flashcrowd", bursts=FLASH_BURSTS,
+            policy=FLASH_POLICY, monitor=FLASH_MONITOR, mqd=256,
+            duration_s=150.0),
+        seed=0,
+        description="flash-crowd survival: 3 MMPP burst intensities x "
+                    "{degradation on, off}, llama31-8b @ tpu-v5e x2, "
+                    "paired arrival streams")
+
+
+def mini_flashcrowd() -> ExperimentPlan:
+    """CI smoke for the overload layer: one MMPP burst x {on, off} at
+    smoke tier (2 cells). Exercises class mixes, the armed controller
+    and the monitor-only arm end to end through the fleet backend."""
+    return ExperimentPlan(
+        name="mini_flashcrowd",
+        cells=_flashcrowd_cells(
+            plan_name="mini_flashcrowd",
+            bursts=(("squall", 3.0, 24.0, 30.0, 12.0),),
+            policy=dict(ovl_brownout_depth=8, ovl_shed_depth=16,
+                        ovl_recover_depth=2, ovl_ttft_slo_s=1.5,
+                        ovl_brownout_max_new=64),
+            monitor=dict(ovl_ttft_slo_s=1.5),
+            mqd=96, duration_s=45.0, max_batch=64, num_pages=8192),
+        seed=0,
+        description="flash-crowd CI smoke: one MMPP burst x "
+                    "{degradation on, off} (sim tier)")
+
+
 def crossover_trio() -> ExperimentPlan:
     """The crossover example's three configs on tpu-v5p, quick protocol."""
     plans = []
@@ -481,6 +592,8 @@ PLANS: Dict[str, Callable[[], ExperimentPlan]] = {
     "mini_resilience": mini_resilience,
     "paper_diurnal": paper_diurnal,
     "mini_diurnal": mini_diurnal,
+    "paper_flashcrowd": paper_flashcrowd,
+    "mini_flashcrowd": mini_flashcrowd,
     "mini_crosshw": mini_crosshw,
     "mini_2x2": mini_2x2,
     "quickstart": quickstart,

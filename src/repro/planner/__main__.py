@@ -34,7 +34,13 @@ def main(argv=None):
                     help="price a 24h lambda(t) scenario (e.g. paper_day) "
                          "against every fitted curve: static-vs-autoscaled "
                          "day cost per footprint (time-aware planning, "
-                         "ISSUE 8)")
+                         "ISSUE 8); combine with --slo-ttft-p90 to add an "
+                         "SLO-aware autoscaler head-to-head (ISSUE 9)")
+    ap.add_argument("--flash-crowd", action="store_true",
+                    help="render the store's overload verdict: graceful "
+                         "degradation vs blind shedding on paired MMPP "
+                         "burst cells (requires a flash-crowd store, e.g. "
+                         "--plan paper_flashcrowd; ISSUE 9)")
     ap.add_argument("--model", default=None,
                     help="restrict to one model (default: every model "
                          "in the store)")
@@ -62,15 +68,39 @@ def main(argv=None):
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write the per-model plans as JSON")
     args = ap.parse_args(argv)
-    if (args.lam is None) == (args.day is None):
-        ap.error("exactly one of --lam (stationary) or --day (lambda(t)) "
-                 "is required")
+    modes = sum((args.lam is not None, args.day is not None,
+                 args.flash_crowd))
+    if modes != 1:
+        ap.error("exactly one of --lam (stationary), --day (lambda(t)) "
+                 "or --flash-crowd (overload verdict) is required")
 
     records = load_store_records(args.plan, args.root)
     if not records:
         raise SystemExit(
             f"no completed cells in store for {args.plan!r}; run: "
             f"python -m repro.experiments.run --plan {args.plan}")
+
+    if args.flash_crowd:
+        from repro.experiments.analyze import (overload_tables,
+                                               overload_verdict,
+                                               render_overload)
+        pairs = overload_tables(records)
+        if not pairs:
+            raise SystemExit(
+                f"store for {args.plan!r} has no flash-crowd pairs "
+                f"(no 'flash:<scenario>:<arm>' cells); run: python -m "
+                f"repro.experiments.run --plan paper_flashcrowd")
+        print(render_overload(pairs))
+        verdict = overload_verdict(pairs)
+        if args.json:
+            with open(args.json, "w") as f:
+                json.dump({"pairs": pairs, "verdict": verdict}, f,
+                          indent=1, sort_keys=True)
+            print(f"\noverload tables written to {args.json}")
+        if not verdict["degradation_wins"]:
+            raise SystemExit(3)
+        return
+
     curves = fit_curves(records, io_shape=args.io_shape, model=args.model)
     if not curves:
         raise SystemExit(
@@ -79,11 +109,23 @@ def main(argv=None):
 
     if args.day is not None:
         from repro.planner.day import day_tables, render_day
-        from repro.serving.autoscale import DAY_SCENARIOS
+        from repro.serving.autoscale import (DAY_SCENARIOS,
+                                             SLOAutoscalePolicy)
         if args.day not in DAY_SCENARIOS:
             raise SystemExit(f"unknown day scenario {args.day!r}; known: "
                              f"{sorted(DAY_SCENARIOS)}")
-        rows = day_tables(curves, DAY_SCENARIOS[args.day])
+        scenario = DAY_SCENARIOS[args.day]
+        slo_pol = None
+        if args.slo_ttft_p90 is not None:
+            # mechanics matched to the scenario's reactive policy so the
+            # head-to-head isolates the SIGNAL (p90 vs util), not the lag
+            slo_pol = SLOAutoscalePolicy(
+                name="slo-p90", ttft_p90_slo_ms=args.slo_ttft_p90,
+                scale_up_lag_s=scenario.window_s,
+                warmup_s=scenario.window_s,
+                scale_down_hold_s=2 * scenario.window_s,
+                max_replicas=args.max_replicas)
+        rows = day_tables(curves, scenario, slo_pol)
         print(render_day(rows, title=f"{args.plan} x {args.day}"))
         if args.json:
             with open(args.json, "w") as f:

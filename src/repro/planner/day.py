@@ -26,7 +26,8 @@ from typing import Dict, List, Sequence
 from repro.planner.curves import DeploymentCurve
 from repro.planner.tables import _clean
 from repro.serving.arrivals import IO_SHAPES
-from repro.serving.autoscale import DayScenario, price_day
+from repro.serving.autoscale import (DayScenario, SLOAutoscalePolicy,
+                                     price_day)
 
 # tokens a completed request delivers, per io_shape — converts a curve's
 # saturation throughput (tok/s) into a per-replica request capacity
@@ -43,24 +44,43 @@ def curve_lam_cap(curve: DeploymentCurve) -> float:
     return curve.lam_max
 
 
-def day_price_for_curve(curve: DeploymentCurve, scenario: DayScenario
-                        ) -> Dict:
+def day_price_for_curve(curve: DeploymentCurve, scenario: DayScenario,
+                        slo_policy: SLOAutoscalePolicy = None) -> Dict:
     """Price the scenario's day on one footprint: static fleet sized for
     the peak vs every scenario policy, per-replica throughput
-    interpolated from the curve (clamped to its demonstrated span)."""
+    interpolated from the curve (clamped to its demonstrated span).
+
+    With `slo_policy` (ISSUE 9 tentpole b) an SLO-aware trajectory is
+    added head-to-head: it scales on the curve's fitted TTFT p90 at the
+    previous window's realized per-replica rate, and every policy row
+    gains `slo_violation_minutes` scored against the same fitted p90 —
+    so the table shows both what each controller costs AND how long it
+    leaves the day out of SLO."""
     lam_cap = curve_lam_cap(curve)
 
-    def tps_at(lam_per: float) -> float:
-        return curve.tps(min(max(lam_per, curve.lam_min), curve.lam_max))
+    def clamp(lam_per: float) -> float:
+        return min(max(lam_per, curve.lam_min), curve.lam_max)
 
-    from repro.serving.autoscale import (simulate_policy, static_size,
-                                         static_windows)
+    def tps_at(lam_per: float) -> float:
+        return curve.tps(clamp(lam_per))
+
+    def ttft_p90_at(lam_per: float) -> float:
+        return curve.interp("ttft_p90_ms", clamp(lam_per))
+
+    from repro.serving.autoscale import (simulate_policy,
+                                         simulate_slo_policy,
+                                         slo_violation_minutes,
+                                         static_size, static_windows)
     replicas = static_size(scenario.peak_lam, lam_cap, scenario.util_sla)
     trajs = {"static": static_windows(replicas, scenario.window_rates,
                                       scenario.window_s)}
     for pol in scenario.policies:
         trajs[pol.name] = simulate_policy(pol, scenario.window_rates,
                                           scenario.window_s, lam_cap)
+    if slo_policy is not None:
+        trajs[slo_policy.name] = simulate_slo_policy(
+            slo_policy, scenario.window_rates, scenario.window_s,
+            ttft_p90_at)
 
     beyond = set()
     policies = []
@@ -71,6 +91,9 @@ def day_price_for_curve(curve: DeploymentCurve, scenario: DayScenario
                 beyond.add(pname)
         priced = price_day(traj, price_per_hr=curve.price_per_hr,
                            tps_at=tps_at, lam_cap=lam_cap)
+        if slo_policy is not None:
+            priced["slo_violation_minutes"] = slo_violation_minutes(
+                traj, ttft_p90_at, slo_policy.ttft_p90_slo_ms)
         policies.append({"policy": pname, **priced})
     finite = [p for p in policies if math.isfinite(p["day_c_eff"])]
     winner = min(finite, key=lambda p: p["day_c_eff"]) if finite else None
@@ -79,6 +102,12 @@ def day_price_for_curve(curve: DeploymentCurve, scenario: DayScenario
     if winner is not None and math.isfinite(static["day_c_eff"]) \
             and static["day_c_eff"] > 0:
         saving = 1.0 - winner["day_c_eff"] / static["day_c_eff"]
+    slo_extra = {}
+    if slo_policy is not None:
+        tightest = min(policies, key=lambda p: (
+            p["slo_violation_minutes"], p["day_c_eff"] or math.inf))
+        slo_extra = {"ttft_p90_slo_ms": slo_policy.ttft_p90_slo_ms,
+                     "tightest_slo_policy": tightest["policy"]}
     return _clean({
         "scenario": scenario.name,
         "deployment": curve.label,
@@ -95,14 +124,15 @@ def day_price_for_curve(curve: DeploymentCurve, scenario: DayScenario
         "winner_saving_vs_static": saving,
         "interpolated_beyond_span": sorted(beyond),
         "dense_curve": curve.dense,
+        **slo_extra,
     })
 
 
-def day_tables(curves: Sequence[DeploymentCurve], scenario: DayScenario
-               ) -> List[Dict]:
+def day_tables(curves: Sequence[DeploymentCurve], scenario: DayScenario,
+               slo_policy: SLOAutoscalePolicy = None) -> List[Dict]:
     """One `day_price_for_curve` row per fitted curve, cheapest day
     first — the store-wide answer to "who should serve this day"."""
-    rows = [day_price_for_curve(c, scenario) for c in curves]
+    rows = [day_price_for_curve(c, scenario, slo_policy) for c in curves]
     rows.sort(key=lambda r: (
         r["policies"] and min(p["day_c_eff"] or math.inf
                               for p in r["policies"]) or math.inf))
@@ -122,18 +152,26 @@ def render_day(rows: Sequence[Dict], title: str = "") -> str:
         lines.append(f"-- {row['deployment']} "
                      f"(static R={row['static_replicas']}, lam_cap "
                      f"{row['lam_cap']:.3g} req/s/replica) --")
-        lines.append(f"  {'policy':<10} {'repl-hrs':>8} {'daily $':>8} "
-                     f"{'Mtok':>7} {'day C_eff':>9} {'peak pen':>8} "
-                     f"{'idle':>4}")
+        slo_col = any("slo_violation_minutes" in p
+                      for p in row["policies"])
+        hdr = (f"  {'policy':<10} {'repl-hrs':>8} {'daily $':>8} "
+               f"{'Mtok':>7} {'day C_eff':>9} {'peak pen':>8} "
+               f"{'idle':>4}")
+        if slo_col:
+            hdr += f" {'SLO-viol min':>12}"
+        lines.append(hdr)
         for p in row["policies"]:
             pen = f"{p['peak_penalty']:.2f}x" \
                 if p["peak_penalty"] is not None else "n/a"
             dce = f"{p['day_c_eff']:.4f}" \
                 if p["day_c_eff"] is not None else "inf"
-            lines.append(f"  {p['policy']:<10} {p['replica_hours']:>8.2f} "
-                         f"{p['daily_cost_usd']:>8.3f} "
-                         f"{p['daily_tokens'] / 1e6:>7.2f} {dce:>9} "
-                         f"{pen:>8} {p['idle_windows']:>4d}")
+            line = (f"  {p['policy']:<10} {p['replica_hours']:>8.2f} "
+                    f"{p['daily_cost_usd']:>8.3f} "
+                    f"{p['daily_tokens'] / 1e6:>7.2f} {dce:>9} "
+                    f"{pen:>8} {p['idle_windows']:>4d}")
+            if slo_col:
+                line += f" {p.get('slo_violation_minutes', 0.0):>12.1f}"
+            lines.append(line)
         if row["winner"]:
             tag = f"cheapest: {row['winner']}"
             if row["winner_saving_vs_static"]:
@@ -142,6 +180,10 @@ def render_day(rows: Sequence[Dict], title: str = "") -> str:
             if not row["autoscaling_pays"]:
                 tag += "  [autoscaling does NOT pay]"
             lines.append(f"  -> {tag}")
+        if row.get("tightest_slo_policy"):
+            lines.append(f"  -> tightest SLO (p90 TTFT <= "
+                         f"{row['ttft_p90_slo_ms']:g} ms): "
+                         f"{row['tightest_slo_policy']}")
         if row["interpolated_beyond_span"]:
             lines.append("  (caveat: per-replica rates clamped to the "
                          "measured span for: "

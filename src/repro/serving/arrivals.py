@@ -89,6 +89,10 @@ THINNING_MAX_BLOCKS = 4096
 # MMPP switching timelines draw from spec.seed + this offset (dedicated
 # stream, like the warmup stream's +7777 and FailureSpec's +911)
 MMPP_SEED_OFFSET = 9973
+# priority-class draws (ISSUE 9) come from their own generator at
+# spec.seed + this offset: a spec without a class mix performs ZERO
+# extra draws, so every historical stream stays byte-identical
+CLASS_SEED_OFFSET = 5851
 
 
 @dataclasses.dataclass(frozen=True)
@@ -189,6 +193,24 @@ class RateProfile:
     @property
     def is_constant(self) -> bool:
         return self.kind == "constant"
+
+    def as_constant(self) -> Optional[float]:
+        """The constant rate this profile degenerates to, else None.
+
+        An MMPP whose two states share one rate (`rate_a == rate_b`), or
+        whose first dwell is infinite (it never leaves state A), IS a
+        constant-rate process — thinning it would only burn rng draws and
+        float error for the identical distribution. `synth_arrays` routes
+        such profiles through the exact legacy generators, so the stream
+        is byte-identical to `RateProfile.constant(rate)` (ISSUE 9
+        satellite; regression-tested)."""
+        if self.kind == "constant":
+            return self.args[0]
+        if self.kind == "mmpp":
+            ra, rb, da, _ = self.args
+            if ra == rb or math.isinf(da):
+                return ra
+        return None
 
     def max_rate(self) -> float:
         if self.kind == "constant":
@@ -330,6 +352,12 @@ class ArrivalSpec:
     # a constant profile routes through the legacy generators and is
     # byte-identical to profile=None at the same rate (tested).
     profile: Optional[RateProfile] = None
+    # priority-class mix (ISSUE 9): per-class probabilities in class
+    # order (interactive, batch, background, ...). Empty = every request
+    # is interactive and NO class draws happen (historical streams and
+    # their rng consumption stay byte-identical). Classes draw from a
+    # dedicated generator at seed + CLASS_SEED_OFFSET.
+    class_mix: Tuple[float, ...] = ()
 
 
 def synth_arrays(spec: ArrivalSpec, start: float = 0.0
@@ -354,7 +382,8 @@ def synth_arrays(spec: ArrivalSpec, start: float = 0.0
             "a prefix-sharing workload must not silently run plain chat")
     rng = np.random.default_rng(spec.seed)
     prof = spec.profile
-    if prof is not None and not prof.is_constant:
+    const_rate = prof.as_constant() if prof is not None else None
+    if prof is not None and const_rate is None:
         if spec.process != "poisson":
             raise ValueError(
                 "non-constant rate profiles require process='poisson' "
@@ -363,7 +392,7 @@ def synth_arrays(spec: ArrivalSpec, start: float = 0.0
         times = profile_arrivals(rng, prof, spec.n_requests, start,
                                  seed=spec.seed)
     else:
-        lam = prof.args[0] if prof is not None else spec.lam
+        lam = const_rate if prof is not None else spec.lam
         if spec.process == "gamma":
             times = gamma_arrivals(rng, lam, spec.cv, spec.n_requests, start)
         else:
@@ -389,8 +418,28 @@ def synth_arrays(spec: ArrivalSpec, start: float = 0.0
     return times, p_ins, p_outs
 
 
+def synth_classes(spec: ArrivalSpec, n: int) -> np.ndarray:
+    """Per-request priority classes in rid order (ISSUE 9).
+
+    Drawn from a DEDICATED generator (`spec.seed + CLASS_SEED_OFFSET`),
+    never from the stream's generator — adding a class mix to a spec
+    leaves its (times, lengths) stream byte-identical, and a spec
+    without a mix draws nothing at all (all-interactive zeros)."""
+    mix = spec.class_mix
+    if not mix:
+        return np.zeros(n, np.int64)
+    if any(p < 0 for p in mix) or sum(mix) <= 0:
+        raise ValueError(f"class_mix must be nonnegative with mass: {mix}")
+    p = np.asarray(mix, np.float64)
+    p = p / p.sum()
+    rng = np.random.default_rng(spec.seed + CLASS_SEED_OFFSET)
+    return rng.choice(len(p), size=n, p=p).astype(np.int64)
+
+
 def synth_requests(spec: ArrivalSpec, start: float = 0.0) -> List[Request]:
     times, p_ins, p_outs = synth_arrays(spec, start)
+    classes = synth_classes(spec, len(times))
     return [Request(rid=i, arrival_time=float(times[i]),
-                    prompt_len=int(p_ins[i]), max_new_tokens=int(p_outs[i]))
+                    prompt_len=int(p_ins[i]), max_new_tokens=int(p_outs[i]),
+                    priority=int(classes[i]))
             for i in range(len(times))]

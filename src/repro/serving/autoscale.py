@@ -160,6 +160,142 @@ def simulate_policy(policy: AutoscalePolicy, rates: Sequence[float],
     return tuple(out)
 
 
+@dataclasses.dataclass(frozen=True)
+class SLOAutoscalePolicy:
+    """SLO-aware controller (ISSUE 9 tentpole b): scale on the observed
+    TTFT p90 instead of utilization.
+
+    The target-util controller needs a capacity model (`lam_cap`) and a
+    utilization target; this one needs neither — it watches the latency
+    percentile the SLO is written against. Each window boundary it looks
+    up the PREVIOUS window's realized per-replica rate in the measured
+    TTFT-p90 curve (`ttft_p90_at`, a day-store record or a fitted
+    DeploymentCurve): one breach orders `step_up` replicas (lag/warmup
+    semantics identical to `AutoscalePolicy`); p90 below
+    `headroom_frac * slo` for `scale_down_hold_s` releases one replica.
+    Window 0 opens at `min_replicas` — an SLO controller has no rate
+    model to pre-size from, which is exactly its difference from the
+    util controller, so the cold start is part of the comparison."""
+    name: str
+    ttft_p90_slo_ms: float
+    headroom_frac: float = 0.5      # scale-down band: p90 < frac * slo
+    step_up: int = 1                # replicas ordered per breach window
+    scale_up_lag_s: float = 0.0
+    warmup_s: float = 0.0
+    scale_down_hold_s: float = 0.0
+    min_replicas: int = 1
+    max_replicas: int = 64
+
+
+def simulate_slo_policy(policy: SLOAutoscalePolicy,
+                        rates: Sequence[float], window_s: float,
+                        ttft_p90_at) -> Tuple[FleetWindow, ...]:
+    """Run the SLO-aware controller over a piecewise-constant day.
+    `ttft_p90_at(lam_per_replica)` returns the measured (or fitted)
+    single-replica TTFT p90 in ms at that stationary offered rate.
+    Same window-granular mechanics as `simulate_policy`: decisions at
+    window boundaries on the previous window's observation, scale-ups
+    billed after `scale_up_lag_s` and serving after a further
+    `warmup_s`, hysteretic scale-down cancelling newest orders first."""
+    if window_s <= 0:
+        raise ValueError(f"window_s must be > 0, got {window_s}")
+    lag_w = math.ceil(policy.scale_up_lag_s / window_s)
+    warm_w = math.ceil(policy.warmup_s / window_s)
+    hold_w = max(1, math.ceil(policy.scale_down_hold_s / window_s))
+    live = policy.min_replicas
+    orders: List[Dict[str, int]] = []
+    below = 0
+    out: List[FleetWindow] = []
+    for w, lam in enumerate(rates):
+        if w > 0:
+            prev = out[-1]
+            p90 = (float(ttft_p90_at(quantize_rate(prev.lam
+                                                   / prev.serving)))
+                   if prev.lam > 0 and prev.serving > 0 else 0.0)
+            committed = live + sum(o["n"] for o in orders)
+            if p90 > policy.ttft_p90_slo_ms:
+                room = policy.max_replicas - committed
+                if room > 0:
+                    orders.append({"bill_at": w + lag_w,
+                                   "serve_at": w + lag_w + warm_w,
+                                   "n": min(policy.step_up, room)})
+                below = 0
+            elif (p90 < policy.headroom_frac * policy.ttft_p90_slo_ms
+                  and committed > policy.min_replicas):
+                below += 1
+                if below >= hold_w:
+                    if orders:
+                        orders[-1]["n"] -= 1
+                        if orders[-1]["n"] == 0:
+                            orders.pop()
+                    else:
+                        live -= 1
+                    below = 0
+            else:
+                below = 0
+        for o in list(orders):
+            if o["serve_at"] <= w:
+                live += o["n"]
+                orders.remove(o)
+        warming = sum(o["n"] for o in orders if o["bill_at"] <= w)
+        out.append(FleetWindow(index=w, t0=w * window_s,
+                               t1=(w + 1) * window_s, lam=float(lam),
+                               serving=live, billed=live + warming))
+    return tuple(out)
+
+
+def slo_violation_minutes(windows: Sequence[FleetWindow], ttft_p90_at,
+                          slo_ms: float) -> float:
+    """Minutes of the day a trajectory spends with the realized
+    per-replica rate's TTFT p90 over the SLO (idle windows comply)."""
+    total = 0.0
+    for fw in windows:
+        if fw.lam <= 0 or fw.serving <= 0:
+            continue
+        p90 = float(ttft_p90_at(quantize_rate(fw.lam / fw.serving)))
+        if p90 > slo_ms:
+            total += (fw.t1 - fw.t0) / 60.0
+    return total
+
+
+def compare_day_policies(*, util_policy: AutoscalePolicy,
+                         slo_policy: SLOAutoscalePolicy,
+                         rates: Sequence[float], window_s: float,
+                         lam_cap: float, price_per_hr: float,
+                         tps_at, ttft_p90_at) -> Dict:
+    """Head-to-head (ISSUE 9 tentpole b): the PR-8 target-util
+    controller vs the SLO-aware controller on the same day, priced from
+    the same measured curves. Reports each policy's day cost AND its
+    SLO-violation minutes — the comparison is two-dimensional: the util
+    controller can be cheaper while blowing the latency budget, which
+    is precisely what scaling on the wrong signal looks like."""
+    slo_ms = slo_policy.ttft_p90_slo_ms
+    traj_u = simulate_policy(util_policy, rates, window_s, lam_cap)
+    traj_s = simulate_slo_policy(slo_policy, rates, window_s, ttft_p90_at)
+    rows = {}
+    for name, traj in ((util_policy.name, traj_u),
+                       (slo_policy.name, traj_s)):
+        priced = price_day(traj, price_per_hr=price_per_hr,
+                           tps_at=tps_at, lam_cap=lam_cap)
+        rows[name] = {
+            "policy": name,
+            "slo_violation_minutes": slo_violation_minutes(
+                traj, ttft_p90_at, slo_ms), **priced}
+    u, s = rows[util_policy.name], rows[slo_policy.name]
+    return {
+        "util": u, "slo": s, "ttft_p90_slo_ms": slo_ms,
+        "cheaper": (util_policy.name
+                    if u["day_c_eff"] <= s["day_c_eff"]
+                    else slo_policy.name),
+        "tighter_slo": (slo_policy.name
+                        if s["slo_violation_minutes"]
+                        <= u["slo_violation_minutes"]
+                        else util_policy.name),
+        "slo_minutes_saved": (u["slo_violation_minutes"]
+                              - s["slo_violation_minutes"]),
+    }
+
+
 # ---------------------------------------------------------------------------
 # pricing a trajectory against measured per-replica throughput
 # ---------------------------------------------------------------------------

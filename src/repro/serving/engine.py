@@ -46,6 +46,7 @@ import numpy as np
 
 from repro.serving.kv_cache import PageManager
 from repro.serving.metrics import MetricsRegistry
+from repro.serving.overload import OverloadPolicy
 from repro.serving.request import Request, RequestState
 from repro.serving.resilience import (FailureSpec, FailureTimeline,
                                       RetryPolicy, as_failure_events)
@@ -65,6 +66,9 @@ class EngineConfig:
     # resilience knobs (ISSUE 6): zero = off, bit-identical to pre-6 engine
     max_queue_depth: int = 0            # >0: shed arrivals over this depth
     deadline_s: float = 0.0             # >0: queue-time deadline at admission
+    # overload controller (ISSUE 9): None = no controller; a policy with
+    # only ttft_slo_s set is a pure SLO monitor (violation counting)
+    overload: Optional[OverloadPolicy] = None
 
 
 class Engine:
@@ -101,6 +105,13 @@ class Engine:
         self._retry_rng = None
         self._retry_heap: List[Tuple[float, int, Request]] = []
         self._in_retry: set = set()         # rids parked awaiting re-submit
+        # overload controller state (ISSUE 9): hysteretic state machine +
+        # last observed TTFT. Both persist across run() re-entry AND the
+        # warmup/measurement reset (a controller does not forget it is in
+        # brownout because the meter rolled a window) — _last_ttft is a
+        # duration, so clock resets cannot skew it.
+        self._ovl_state = 0                 # overload.NORMAL
+        self._last_ttft = 0.0
         # scheduler instrumentation (bench_engine_throughput)
         self.n_iterations = 0
         self.n_decode_steps = 0
@@ -223,13 +234,51 @@ class Engine:
             self.metrics.inc("repro:request_abandoned_total")
 
     def _accept(self, queue, req: Request):
-        """Arrival-time admission control: shed over max_queue_depth."""
+        """Arrival-time admission control, one evaluation per drained
+        submission (the deterministic point every scheduler path shares):
+        the overload controller's state transition + class shedding
+        first (ISSUE 9), then the class-blind max_queue_depth cap
+        (ISSUE 6), then the brownout token-budget clamp on the admitted
+        request. The depth reading is the queue length BEFORE this
+        submission joins, same as the legacy cap's."""
+        pol = self.cfg.overload
+        if pol is not None and pol.enabled:
+            self._ovl_state = pol.next_state(self._ovl_state, len(queue),
+                                             self._last_ttft)
+            if not pol.admits(self._ovl_state, req.priority):
+                self.metrics.inc("repro:request_shed_total")
+                self.metrics.inc("repro:request_class_shed_total")
+                self._client_reject(req, req.submitted_at)
+                return
         mqd = self.cfg.max_queue_depth
         if mqd > 0 and len(queue) >= mqd:
             self.metrics.inc("repro:request_shed_total")
             self._client_reject(req, req.submitted_at)
-        else:
-            queue.append(req)
+            return
+        if pol is not None and pol.enabled:
+            clamped = pol.clamp(self._ovl_state, req.max_new_tokens)
+            if clamped < req.max_new_tokens:
+                self.metrics.inc("repro:request_browned_total")
+                self.metrics.inc("repro:browned_tokens_total",
+                                 req.max_new_tokens - clamped)
+                req.max_new_tokens = clamped
+        queue.append(req)
+
+    def _observe_ttfts(self, batch: List[Request]):
+        """Post-prefill TTFT observation (both scheduler paths call this
+        at the same clock instants, so controller inputs stay
+        path-identical): count SLO violations whenever a policy declares
+        an SLO — armed or monitor-only — and remember the last observed
+        TTFT (batch admission order) for the brownout trigger."""
+        pol = self.cfg.overload
+        if pol is None:
+            return
+        slo = pol.ttft_slo_s
+        for r in batch:
+            ttft = self.t - r.arrival_time
+            if slo > 0.0 and ttft > slo:
+                self.metrics.inc("repro:request_slo_violation_total")
+            self._last_ttft = ttft
 
     def _next_submit(self, pending, pi: int) -> Optional[float]:
         """Earliest future submission: next arrival or retry re-submit."""
@@ -295,7 +344,14 @@ class Engine:
         while queue:
             if ddl > 0.0 and self.t - queue[0].submitted_at > ddl:
                 # queue-time deadline: expired heads are popped (they no
-                # longer block FCFS) and handed back to the client
+                # longer block FCFS) and handed back to the client.
+                # Tie semantics (ISSUE 9): strictly greater-than, so a
+                # request whose wait EQUALS deadline_s is still served —
+                # matching the arrival-draw protocol's closed-boundary
+                # convention. All three scheduler paths (this helper is
+                # shared by reference + fast-forward; the fleet mirrors
+                # it in _admit_lane) pin the same choice; a regression
+                # test exercises the exact-tie cell on each.
                 req = (queue.popleft() if isinstance(queue, deque)
                        else queue.pop(0))
                 self.metrics.inc("repro:request_timeout_total")
@@ -429,6 +485,7 @@ class Engine:
                     n_prompt += r.prompt_len
                 self.metrics.inc("repro:prompt_tokens_total", n_prompt)
                 self.metrics.inc("repro:generation_tokens_total", len(batch))
+                self._observe_ttfts(batch)
                 for r in batch:
                     if self.slot_tokens[r.slot] >= 0 and \
                             r.tokens_out >= r.max_new_tokens:
@@ -573,6 +630,7 @@ class Engine:
                     if self.slot_tokens[r.slot] >= 0 and \
                             r.tokens_out >= r.max_new_tokens:
                         self._complete(r.slot)
+                self._observe_ttfts(batch)
                 did_work = True
 
             # ---- decode step for all running slots

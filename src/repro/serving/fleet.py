@@ -49,7 +49,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.serving.arrivals import ArrivalSpec, synth_arrays
+from repro.serving.arrivals import ArrivalSpec, synth_arrays, synth_classes
 
 _HUGE = np.iinfo(np.int64).max // 4
 
@@ -71,11 +71,14 @@ class FleetPoint:
     quant: str = "bf16"
     engine_kind: str = "sim"
     price_per_hr: float = 1.0
-    # resilience (ISSUE 6): lanes with a stochastic failure process,
-    # client retries, shedding or deadlines run through the scalar engine
-    # per lane (fleet_run_points routes them) — the SoA loop's contiguous
+    # resilience (ISSUE 6) / overload (ISSUE 9): lanes with a stochastic
+    # failure process or client retries run through the scalar engine per
+    # lane (fleet_run_points routes them) — the SoA loop's contiguous
     # queue cursors cannot express retry feedback, and per-lane fallback
-    # keeps the RNG streams trivially identical to run_point's
+    # keeps the RNG streams trivially identical to run_point's. Pure
+    # admission lanes (max_queue_depth / deadline_s / OverloadPolicy,
+    # no failures, no retries) run IN the fleet via an explicit per-lane
+    # admission queue (`_accept_lane` / `_admit_lane_adm`).
     failure_spec: Optional["FailureSpec"] = None
     retry: Optional["RetryPolicy"] = None
 
@@ -230,6 +233,39 @@ class FleetEngine:
         self.num_pages = ivec(lambda s: s.num_pages)
         self.free_pages = self.num_pages - 1
         self.max_retries = np.full(B, 2, np.int64)   # EngineConfig default
+        # admission control / overload (ISSUE 9): lanes with any of these
+        # run their FCFS queue as an explicit per-lane rid list (the
+        # contiguous [q_next, arrived) window cannot express sheds or
+        # deadline pops); everything else keeps the windowed fast path
+        self.mqd = ivec(lambda s: getattr(s, "max_queue_depth", 0))
+        self.ddl = np.asarray(
+            [float(getattr(s, "deadline_s", 0.0)) for s in specs])
+        self.ovl = [getattr(s, "overload", None) for s in specs]
+        self.ovl_enabled = np.asarray(
+            [p is not None and p.enabled for p in self.ovl])
+        self.has_pol = np.asarray([p is not None for p in self.ovl])
+        self.any_pol = bool(self.has_pol.any())
+        self.slo_s = np.asarray(
+            [p.ttft_slo_s if p is not None else 0.0 for p in self.ovl])
+        self.adm = self.ovl_enabled | (self.mqd > 0) | (self.ddl > 0.0)
+        self.any_adm = bool(self.adm.any())
+        self.adm_ddl = self.adm & (self.ddl > 0.0)
+        self.any_adm_ddl = bool(self.adm_ddl.any())
+        self.adm_queue: List[List[int]] = [[] for _ in range(B)]
+        self.adm_qlen = np.zeros(B, np.int64)
+        # controller state persists across phases AND the measurement
+        # reset, exactly like the scalar engine's _ovl_state/_last_ttft
+        self.ovl_state = np.zeros(B, np.int64)
+        self.last_ttft = np.zeros(B)
+        # outcome counters — the scalar engine's MetricsRegistry counters,
+        # zeroed at the warmup/measurement boundary like metrics.reset()
+        self.cnt_shed = np.zeros(B, np.int64)
+        self.cnt_timeout = np.zeros(B, np.int64)
+        self.cnt_abandoned = np.zeros(B, np.int64)
+        self.cnt_class_shed = np.zeros(B, np.int64)
+        self.cnt_browned = np.zeros(B, np.int64)
+        self.cnt_browned_tokens = np.zeros(B, np.int64)
+        self.cnt_slo_viol = np.zeros(B, np.int64)
 
         # lane clock + Little's-law integral
         self.t = np.zeros(B)
@@ -262,12 +298,12 @@ class FleetEngine:
         self.n_rounds = 0
 
     # -- phase loading ---------------------------------------------------
-    def load_phase(self, streams: Sequence[Tuple[np.ndarray, np.ndarray,
-                                                 np.ndarray]],
+    def load_phase(self, streams: Sequence[Sequence[np.ndarray]],
                    horizons: Sequence[Optional[float]],
                    failure_times: Sequence[Sequence[float]]):
-        """Install one request stream per lane ((times, p_ins, p_outs) from
-        `synth_arrays`); empty lanes (n=0) are born finished."""
+        """Install one request stream per lane ((times, p_ins, p_outs)
+        from `synth_arrays`, optionally + classes from `synth_classes`);
+        empty lanes (n=0) are born finished."""
         B = self.B
         self.n_req = np.asarray([len(s[0]) for s in streams], np.int64)
         N = int(self.n_req.max()) if B else 0
@@ -281,11 +317,15 @@ class FleetEngine:
         self.times: List[np.ndarray] = []
         self.plen_l: List[List[int]] = []
         self.mnew_l: List[List[int]] = []
+        self.cls_l: List[np.ndarray] = []
         self.uniform = np.zeros(B, bool)
         self.uplen = np.ones(B, np.int64)
         self.umn = np.ones(B, np.int64)
-        for i, (times, p_ins, p_outs) in enumerate(streams):
+        for i, stream in enumerate(streams):
+            times, p_ins, p_outs = stream[0], stream[1], stream[2]
             n = len(times)
+            self.cls_l.append(np.asarray(stream[3], np.int64)
+                              if len(stream) > 3 else np.zeros(n, np.int64))
             self.r_arr[i, :n] = times
             self.r_plen[i, :n] = p_ins
             self.r_mnew[i, :n] = p_outs
@@ -311,17 +351,28 @@ class FleetEngine:
         self.tracked = np.asarray([bool(ft) for ft in self.fails])
         for i in range(B):
             self.requeue[i] = []
+            self.adm_queue[i] = []
             self.occ_order[i] = {} if self.tracked[i] else None
             if self.tracked[i] and self.n_occ[i]:
                 raise RuntimeError("failure-tracked lane loaded with "
                                    "slots still occupied")
         self.n_requeue[:] = 0
+        self.adm_qlen[:] = 0
 
     def reset_measurement(self):
-        """Scalar `Engine.reset_measurement`: zero clocks at the
-        warmup/measurement boundary (engine state stays warm)."""
+        """Scalar `Engine.reset_measurement`: zero clocks + counters at
+        the warmup/measurement boundary (engine state stays warm; the
+        overload controller's ovl_state/last_ttft persist, exactly like
+        the scalar engine's fields vs its metrics)."""
         self.t[:] = 0.0
         self.area[:] = 0.0
+        self.cnt_shed[:] = 0
+        self.cnt_timeout[:] = 0
+        self.cnt_abandoned[:] = 0
+        self.cnt_class_shed[:] = 0
+        self.cnt_browned[:] = 0
+        self.cnt_browned_tokens[:] = 0
+        self.cnt_slo_viol[:] = 0
 
     # -- per-lane sequential helpers ------------------------------------
     def _pop_fail(self, i: int):
@@ -360,13 +411,119 @@ class FleetEngine:
                 self.r_out[i, rid] = 0
                 self.r_first[i, rid] = np.nan
                 requeued.append(rid)
-            # else: FAILED — finish stays NaN, request drops out
+            else:
+                # FAILED — finish stays NaN; with no client retry the
+                # scalar _client_reject counts it abandoned
+                self.cnt_abandoned[i] += 1
         # PREPEND this event's victims: the scalar loop front-merges
         # `_requeue` into the FCFS queue every iteration
         # (`queue.extendleft(reversed(...))`), so a later failure's
         # requeues go AHEAD of an earlier failure's still-queued leftovers
         self.requeue[i][:0] = requeued
         self.n_requeue[i] += len(requeued)
+
+    def _accept_lane(self, i: int, rid: int):
+        """Mirror of `Engine._accept` for one drained arrival on an
+        admission lane: overload state transition + class shed first,
+        then the class-blind max_queue_depth cap, then the brownout
+        clamp on the admitted request. The depth reading is the queue
+        length BEFORE this arrival joins (scalar semantics). Fleet lanes
+        never carry a RetryPolicy (`_needs_scalar`), so every rejection
+        is a client abandonment."""
+        pol = self.ovl[i]
+        q = self.adm_queue[i]
+        if pol is not None and pol.enabled:
+            st = pol.next_state(int(self.ovl_state[i]), len(q),
+                                float(self.last_ttft[i]))
+            self.ovl_state[i] = st
+            if not pol.admits(st, int(self.cls_l[i][rid])):
+                self.cnt_shed[i] += 1
+                self.cnt_class_shed[i] += 1
+                self.cnt_abandoned[i] += 1
+                return
+        mqd = int(self.mqd[i])
+        if mqd > 0 and len(q) >= mqd:
+            self.cnt_shed[i] += 1
+            self.cnt_abandoned[i] += 1
+            return
+        if pol is not None and pol.enabled:
+            mnew = self.mnew_l[i][rid]
+            clamped = pol.clamp(int(self.ovl_state[i]), mnew)
+            if clamped < mnew:
+                self.cnt_browned[i] += 1
+                self.cnt_browned_tokens[i] += mnew - clamped
+                self.mnew_l[i][rid] = clamped
+                self.r_mnew[i, rid] = clamped
+        q.append(rid)
+        self.adm_qlen[i] += 1
+
+    def _observe_lane(self, i: int, rids: Sequence[int]):
+        """Mirror of `Engine._observe_ttfts` for one lane's prefilled
+        batch (admission order, last writer wins)."""
+        ttft = self.t[i] - self.times[i][np.asarray(rids, np.int64)]
+        slo = float(self.slo_s[i])
+        if slo > 0.0:
+            self.cnt_slo_viol[i] += int((ttft > slo).sum())
+        self.last_ttft[i] = float(ttft[-1])
+
+    def _admit_lane_adm(self, i: int):
+        """Mirror of `Engine._admit_from` over the explicit admission
+        queue: deadline-expired heads pop unbounded (timeout + abandon —
+        strictly greater-than, a wait equal to deadline_s is served; the
+        pinned tie choice), interleaved with FCFS admission under the
+        chunked-prefill budget. Called whenever the queue is non-empty —
+        even when nothing can admit — because the scalar path pops
+        expired heads on every iteration regardless of capacity."""
+        budget = int(self.pf_budget[i])
+        nmax = int(self.max_pf_reqs[i])
+        ps = int(self.page_size[i])
+        mpps = int(self.mpps[i])
+        plen_l, mnew_l = self.plen_l[i], self.mnew_l[i]
+        q = self.adm_queue[i]
+        times = self.times[i]
+        ddl = float(self.ddl[i])
+        t = float(self.t[i])
+        free_pages = int(self.free_pages[i])
+        n_free = int(self.n_free[i])
+        slots: List[int] = []
+        rids: List[int] = []
+        plens: List[int] = []
+        mnews: List[int] = []
+        n_tok = 0
+        while q:
+            rid = q[0]
+            if ddl > 0.0 and t - times[rid] > ddl:
+                q.pop(0)
+                self.adm_qlen[i] -= 1
+                self.cnt_timeout[i] += 1
+                self.cnt_abandoned[i] += 1
+                continue
+            plen, mnew = plen_l[rid], mnew_l[rid]
+            if not (len(slots) < nmax and (plen <= budget or not slots)):
+                break
+            need = -(-(plen + mnew) // ps)
+            if need > mpps or not n_free or free_pages < need:
+                break
+            q.pop(0)
+            self.adm_qlen[i] -= 1
+            n_free -= 1
+            slot = int(self.free_stack[i, n_free])
+            slots.append(slot)
+            rids.append(rid)
+            plens.append(plen)
+            mnews.append(mnew)
+            free_pages -= need
+            n_tok += plen
+            budget -= plen
+        if slots:
+            self.s_rid[i, slots] = rids
+            self.s_need[i, slots] = [
+                -(-(p + m) // ps) for p, m in zip(plens, mnews)]
+            self.s_max[i, slots] = mnews
+            self.free_pages[i] = free_pages
+            self.n_free[i] = n_free
+            self.n_occ[i] += len(slots)
+        return slots, rids, plens, mnews, n_tok
 
     def _admit_lane(self, i: int):
         """Mirror of `Engine._admit_from` for one lane: FCFS admission
@@ -451,7 +608,8 @@ class FleetEngine:
             # loop condition (top of the scalar while): anything left?
             live &= ((self.arrived < self.n_req)
                      | (self.q_next < self.arrived)
-                     | (self.n_requeue > 0) | (self.n_occ > 0))
+                     | (self.n_requeue > 0) | (self.n_occ > 0)
+                     | (self.adm_qlen > 0))
             if on_lane_dead is not None:
                 fresh = ~live & ~reported
                 if fresh.any():
@@ -480,7 +638,8 @@ class FleetEngine:
             maybe_idle = alive & (self.n_occ == 0)
             if maybe_idle.any():
                 idle = (maybe_idle & (self.q_next == self.arrived)
-                        & (self.n_requeue == 0) & (self.arrived < self.n_req)
+                        & (self.n_requeue == 0) & (self.adm_qlen == 0)
+                        & (self.arrived < self.n_req)
                         & (next_arr > self.t))
                 if idle.any():
                     gap = np.maximum(next_arr - self.t, 1e-6)
@@ -495,13 +654,21 @@ class FleetEngine:
                         for i in np.flatnonzero(due):
                             self._fail_lane(int(i), 0.5)
                             self._pop_fail(int(i))
-            # 4. arrivals: advance the arrived cursor past times <= t
+            # 4. arrivals: advance the arrived cursor past times <= t;
+            #    admission lanes drain each arrival through _accept_lane
+            #    (shed / clamp / enqueue) and keep q_next == arrived so
+            #    the contiguous-window paths see an empty window
             move = alive & (next_arr <= self.t)
             if move.any():
                 for i in np.flatnonzero(move):
                     i = int(i)
-                    self.arrived[i] = np.searchsorted(
-                        self.times[i], self.t[i], side="right")
+                    na = int(np.searchsorted(
+                        self.times[i], self.t[i], side="right"))
+                    if self.adm[i]:
+                        for rid in range(int(self.arrived[i]), na):
+                            self._accept_lane(i, rid)
+                        self.q_next[i] = na
+                    self.arrived[i] = na
             # 5+6. admission + prefill
             had_batch, pf_li, pf_ri = self._admit_and_prefill(B, lanes,
                                                               alive,
@@ -511,16 +678,27 @@ class FleetEngine:
             if dec.any():
                 self._decode(B, lanes, dec, had_batch, model, any_tracked,
                              has_horizon)
-            # 8. no work: advance to the next arrival / stall / finished
+            # 8. no work: advance to the next arrival (or queued-head
+            #    deadline expiry on admission lanes) / stall / finished
             nw = alive & ~had_batch & ~dec
             if nw.any():
-                pend = nw & (self.arrived < self.n_req)
+                tgt = self.r_arr[lanes, self.arrived]
+                if self.any_adm_ddl:
+                    tgt = tgt.copy()
+                    for i in np.flatnonzero(nw & self.adm_ddl
+                                            & (self.adm_qlen > 0)):
+                        i = int(i)
+                        exp = (self.times[i][self.adm_queue[i][0]]
+                               + self.ddl[i])
+                        if exp < tgt[i]:
+                            tgt[i] = exp
+                pend = nw & np.isfinite(tgt)
                 if pend.any():
-                    next_arr = self.r_arr[lanes, self.arrived]
-                    gap = np.maximum(next_arr - self.t, 1e-6)
+                    gap = np.maximum(tgt - self.t, 1e-6)
                     self.t[pend] += gap[pend]
                 stall = nw & ~pend & ((self.q_next < self.arrived)
-                                      | (self.n_requeue > 0))
+                                      | (self.n_requeue > 0)
+                                      | (self.adm_qlen > 0))
                 if stall.any():
                     raise RuntimeError(
                         "scheduler stall: queued request cannot ever fit; "
@@ -539,8 +717,14 @@ class FleetEngine:
         # contiguous-queue head admissibility, vectorized; lanes with a
         # re-queue front fall back to the per-lane loop's own checks
         can &= (has_rq | ((need <= self.mpps) & (self.free_pages >= need)))
+        # admission lanes (explicit queue) always take their own per-lane
+        # path while the queue is non-empty — even when nothing can admit,
+        # because the scalar _admit_from pops deadline-expired heads on
+        # every iteration regardless of capacity
+        slow_adm = (alive & self.adm & (self.adm_qlen > 0)) \
+            if self.any_adm else np.zeros(B, bool)
         had_batch = np.zeros(B, bool)
-        if not can.any():
+        if not can.any() and not slow_adm.any():
             return had_batch, None, None
         # fast path: uniform request shape, no re-queue front, untracked —
         # the FCFS admission count is closed-form per lane
@@ -587,6 +771,16 @@ class FleetEngine:
                     n_tok[i] = toks
                     self.s_out[i, slots] = 1
                     self.s_active[i, slots] = True
+        if slow_adm.any():
+            for i in np.flatnonzero(slow_adm):
+                i = int(i)
+                slots, rids, plens, mnews, toks = self._admit_lane_adm(i)
+                if slots:
+                    slow_items.append((i, slots, rids, mnews))
+                    had_batch[i] = True
+                    n_tok[i] = toks
+                    self.s_out[i, slots] = 1
+                    self.s_active[i, slots] = True
         if not had_batch.any():
             return had_batch, None, None
         # number of admitted requests per lane this round
@@ -607,6 +801,16 @@ class FleetEngine:
         for i, slots, rids, mnews in slow_items:
             self.r_first[i, rids] = self.t[i]
             self.r_out[i, rids] = 1
+        # post-prefill TTFT observation (scalar _observe_ttfts): SLO
+        # violation counting + last-TTFT brownout input, batch order
+        if self.any_pol:
+            if li is not None and self.has_pol[li].any():
+                for i in np.flatnonzero(fast & had_batch & self.has_pol):
+                    i = int(i)
+                    self._observe_lane(i, ri[li == i])
+            for i, slots, rids, mnews in slow_items:
+                if self.has_pol[i]:
+                    self._observe_lane(int(i), rids)
         # prefill-time completion (max_new <= 1): scalar post-prefill
         # check, processed in admission order (free-stack push order
         # must match the scalar batch walk)
@@ -655,7 +859,8 @@ class FleetEngine:
         k = np.maximum(np.where(had_batch, 1, np.minimum(rem, _HUGE)), 1)
         # time budget = nearest future event (inf when none): arrivals
         # only count while the FCFS queue is empty
-        q_empty = (self.q_next == self.arrived) & (self.n_requeue == 0)
+        q_empty = ((self.q_next == self.arrived) & (self.n_requeue == 0)
+                   & (self.adm_qlen == 0))
         next_arr = self.r_arr[lanes, self.arrived]
         cand = np.where(q_empty & (self.arrived < self.n_req),
                         next_arr - self.t, np.inf)
@@ -663,6 +868,15 @@ class FleetEngine:
             cand = np.minimum(cand, self.next_fail - self.t, out=cand)
         if has_horizon:
             cand = np.minimum(cand, self.horizon - self.t, out=cand)
+        if self.any_adm_ddl:
+            # queued-head deadline expiry unblocks FCFS: it is an event
+            for i in np.flatnonzero(dec & self.adm_ddl
+                                    & (self.adm_qlen > 0)):
+                i = int(i)
+                exp = (self.times[i][self.adm_queue[i][0]] + self.ddl[i]
+                       - self.t[i])
+                if exp < cand[i]:
+                    cand[i] = exp
         # b floored to 1 on frozen/empty lanes: their values are masked
         # out below, and a nonzero b keeps slope > 0 (no flat branch).
         # errstate is scoped to the model math only — user callbacks
@@ -837,18 +1051,46 @@ def _lane_record(eng: FleetEngine, i: int, p: FleetPoint) -> "RunRecord":
         seed=spec.seed,
         mttf=p.failure_spec.mttf if p.failure_spec is not None else 0.0,
         retry_max=p.retry.max_attempts if p.retry is not None else 0,
-        n_shed=0, n_timeout=0, n_retried=0, n_abandoned=0)
+        n_shed=int(eng.cnt_shed[i]),
+        n_timeout=int(eng.cnt_timeout[i]),
+        n_retried=0,    # RetryPolicy lanes never reach the fleet
+        n_abandoned=int(eng.cnt_abandoned[i]),
+        n_class_shed=int(eng.cnt_class_shed[i]),
+        n_browned=int(eng.cnt_browned[i]),
+        browned_tokens=int(eng.cnt_browned_tokens[i]),
+        n_slo_viol=int(eng.cnt_slo_viol[i]),
+        interactive_tps=(
+            int(toks[eng.cls_l[i][:n][done] == 0].sum()) / window
+            if (spec.class_mix and window > 0) else 0.0))
+
+
+def _needs_admission(p: FleetPoint) -> bool:
+    """Points whose lanes run the explicit admission queue (shedding,
+    deadlines, an overload controller or SLO monitor)."""
+    eng = p.engine
+    return (getattr(eng, "max_queue_depth", 0) > 0
+            or getattr(eng, "deadline_s", 0.0) > 0.0
+            or getattr(eng, "overload", None) is not None)
 
 
 def _needs_scalar(p: FleetPoint) -> bool:
-    """Lanes the SoA loop cannot express (retry feedback, shedding,
-    deadlines, stochastic failure streams) run per-lane through the
-    scalar engine — the explicitly sanctioned fallback, RNG streams
-    identical to `run_point` by construction."""
+    """Lanes the SoA loop cannot express (retry feedback, stochastic
+    failure streams, deterministic failures combined with admission
+    control) run per-lane through the scalar engine — the explicitly
+    sanctioned fallback, RNG streams identical to `run_point` by
+    construction. Pure admission/brownout points (ISSUE 9) are NOT on
+    this list: they run vectorized through the fleet's explicit
+    admission queue."""
     return ((p.failure_spec is not None and p.failure_spec.enabled)
             or (p.retry is not None and p.retry.enabled)
-            or getattr(p.engine, "max_queue_depth", 0) > 0
-            or getattr(p.engine, "deadline_s", 0.0) > 0.0)
+            or (bool(p.failure_times) and _needs_admission(p)))
+
+
+def _stream(spec: ArrivalSpec):
+    """(times, p_ins, p_outs, classes) — the same draws, in the same
+    stream order, as the scalar `synth_requests`."""
+    times, p_ins, p_outs = synth_arrays(spec)
+    return times, p_ins, p_outs, synth_classes(spec, len(times))
 
 
 def _scalar_point(p: FleetPoint) -> "RunRecord":
@@ -905,16 +1147,17 @@ def fleet_run_points(points: Sequence[FleetPoint],
                 wspec = dataclasses.replace(p.arrivals,
                                             n_requests=p.warmup,
                                             seed=p.arrivals.seed + 7777)
-                streams.append(synth_arrays(wspec))
+                streams.append(_stream(wspec))
             else:
                 z = np.zeros(0)
-                streams.append((z, z.astype(np.int64), z.astype(np.int64)))
+                zi = z.astype(np.int64)
+                streams.append((z, zi, zi, zi))
         eng.load_phase(streams, [None] * len(points),
                        [()] * len(points))
         eng.run_phase()
         eng.reset_measurement()
     # measured phase
-    eng.load_phase([synth_arrays(p.arrivals) for p in points],
+    eng.load_phase([_stream(p.arrivals) for p in points],
                    [p.horizon for p in points],
                    [p.failure_times for p in points])
     out: List[Optional["RunRecord"]] = [None] * len(points)

@@ -78,7 +78,8 @@ import numpy as np
 from repro.serving import precision
 from repro.serving.arrivals import synth_arrays
 from repro.serving.fleet import (FleetPoint, FleetStepModel, _lane_record,
-                                 _needs_scalar, fleet_run_points)
+                                 _needs_admission, _needs_scalar,
+                                 fleet_run_points)
 
 # safety valve: the event loop is bounded by ~4 rounds per request
 # (admission, completion, one arrival interrupt, one idle jump); a lane
@@ -109,6 +110,11 @@ def jit_eligible(p: FleetPoint, stream) -> bool:
     prefill-time completions) and statically admissible (the numpy path
     raises the scheduler-stall error for the rest)."""
     if _needs_scalar(p) or p.failure_times:
+        return False
+    # admission control / overload / priority classes (ISSUE 9): the
+    # compiled loop has no admission queue, counters, or class streams —
+    # these points run on the numpy fleet's explicit admission path
+    if _needs_admission(p) or getattr(p.arrivals, "class_mix", ()):
         return False
     times, p_ins, p_outs = stream
     if len(times) == 0:
@@ -446,10 +452,15 @@ def _run_jit_fleet(points: Sequence[FleetPoint], streams) -> List:
         if crd_i:
             r_finish[i, :nc_i] = np.repeat(TfinE[i, :crd_i], cnt[:crd_i])
             r_out[i, :nc_i] = umn[i]
+    zc = np.zeros(B, np.int64)
     view = types.SimpleNamespace(
         n_req=n_req.astype(np.int64), r_arr=r_arr[:B].astype(np.float64),
         r_plen=r_plen, r_first=r_first, r_finish=r_finish, r_out=r_out,
-        t=t[:B].astype(np.float64), area=area[:B].astype(np.float64))
+        t=t[:B].astype(np.float64), area=area[:B].astype(np.float64),
+        # jit-eligible lanes have no admission control or classes; the
+        # counters _lane_record reads are identically zero
+        cnt_shed=zc, cnt_timeout=zc, cnt_abandoned=zc, cnt_class_shed=zc,
+        cnt_browned=zc, cnt_browned_tokens=zc, cnt_slo_viol=zc)
     return [_lane_record(view, i, p) for i, p in enumerate(points)]
 
 

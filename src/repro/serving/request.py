@@ -21,6 +21,9 @@ class Request:
     prompt_len: int
     max_new_tokens: int
     prompt: Optional[List[int]] = None       # None -> synthetic random ids
+    priority: int = 0                        # overload class (ISSUE 9):
+    #                                          0=interactive, 1=batch,
+    #                                          2=background (lower = keep)
 
     # runtime
     state: RequestState = RequestState.QUEUED

