@@ -1,0 +1,86 @@
+"""Portfolio-planner throughput (ISSUE 10): time the route + allocate +
+certify path over the committed `paper_atlas` store — the full
+multi-model verdict an operator gets from `--portfolio`, including the
+exact branch-and-bound runs that certify every greedy allocation.
+
+Measures, best-of-N (no engines are re-run):
+
+* `route`     — the token-budget router across the 3-class blend at
+                every reference total rate
+* `portfolio` — the full silo / flagship_pool / routed_pool verdict
+                (greedy + exact certification per pool)
+* `certify`   — the greedy-vs-exact certification table alone, per
+                (model, io_shape) group x reference load
+* `n_nodes`   — total branch-and-bound nodes explored (trajectory of
+                the search cost, not just wall time)
+
+Informational only (no CI gate), same contract as bench_planner: the
+trajectory makes a pathological slowdown or a node-count explosion
+visible in the logs. Falls back to `paper_crosshw` when the atlas is
+absent."""
+import time
+
+from benchmarks.common import emit
+from repro.experiments.analyze import load_store_records
+from repro.planner import (BLENDED_3CLASS, PORTFOLIO_LAMS,
+                           certification_rows, fit_curves, plan_portfolio,
+                           route_workload)
+
+
+def _records():
+    for plan in ("paper_atlas", "paper_crosshw"):
+        try:
+            records = load_store_records(plan)
+        except OSError:
+            records = []
+        if records:
+            return plan, records
+    raise SystemExit(
+        "no committed store found (paper_atlas / paper_crosshw); run: "
+        "python -m repro.experiments.run --plan paper_atlas "
+        "--backend vector")
+
+
+def _best_of(fn, n):
+    best, out = float("inf"), None
+    for _ in range(n):
+        t0 = time.perf_counter()
+        out = fn()
+        best = min(best, time.perf_counter() - t0)
+    return best, out
+
+
+def run(quick: bool = False):
+    n = 3 if quick else 5
+    plan, records = _records()
+    curves = fit_curves(records)
+    workloads = [BLENDED_3CLASS.scaled(lam) for lam in PORTFOLIO_LAMS]
+    print(f"# store: {plan} ({len(records)} records, "
+          f"{len(curves)} curves)")
+
+    t_route, _ = _best_of(
+        lambda: [route_workload(w, curves) for w in workloads], n)
+    t_port, plans = _best_of(
+        lambda: [plan_portfolio(curves, w) for w in workloads], n)
+    t_cert, rows = _best_of(lambda: certification_rows(curves), n)
+
+    n_nodes = sum(r.get("n_nodes") or 0 for r in rows)
+    n_beaten = sum(1 for r in rows if r.get("greedy_beaten"))
+    n_pools = sum(len(a.pools) for p in plans for a in p.arms.values())
+    emit("portfolio", [{
+        "store": plan, "n_records": len(records), "n_curves": len(curves),
+        "n_loads": len(PORTFOLIO_LAMS), "n_pools": n_pools,
+        "n_cert_instances": len(rows), "n_nodes": n_nodes,
+        "n_greedy_beaten": n_beaten,
+        "route_ms": t_route * 1e3,
+        "portfolio_ms": t_port * 1e3,
+        "certify_ms": t_cert * 1e3,
+    }])
+    print(f"# route {t_route * 1e3:.1f}ms + portfolio "
+          f"{t_port * 1e3:.1f}ms ({n_pools} pools certified); "
+          f"certification table {t_cert * 1e3:.1f}ms "
+          f"({n_nodes} B&B nodes, {n_beaten} greedy losses)")
+
+
+if __name__ == "__main__":
+    run()

@@ -14,7 +14,7 @@ from benchmarks import (bench_diurnal, bench_engine_throughput,
                         bench_fig2_quant, bench_fig3_penalty_heatmap,
                         bench_fig5_crossover, bench_kernels,
                         bench_overload, bench_plan_matrix, bench_planner,
-                        bench_resilience,
+                        bench_portfolio, bench_resilience,
                         bench_sensitivity, bench_table3_penalty,
                         bench_table4_sla,
                         bench_table5_stability, bench_table6_crosshw,
@@ -24,6 +24,7 @@ SUITES = (
     ("engine_throughput", bench_engine_throughput),
     ("plan_matrix", bench_plan_matrix),
     ("planner", bench_planner),
+    ("portfolio", bench_portfolio),
     ("resilience", bench_resilience),
     ("diurnal", bench_diurnal),
     ("overload", bench_overload),

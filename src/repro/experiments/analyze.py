@@ -790,6 +790,21 @@ def report(records: Sequence[RunRecord], title: str = "") -> str:
         lines.append("")
         lines.extend(render_overload(overload).splitlines())
 
+    from repro.planner.curves import fit_curves
+    from repro.planner.portfolio import BLENDED_3CLASS, plan_portfolio
+    from repro.planner.tables import (PORTFOLIO_LAMS, certification_rows,
+                                      render_certification,
+                                      render_portfolio)
+    curves = fit_curves(records)
+    if curves:
+        lines.append("")
+        lines.extend(
+            render_certification(certification_rows(curves)).splitlines())
+        for lam in PORTFOLIO_LAMS:
+            lines.append("")
+            lines.extend(render_portfolio(plan_portfolio(
+                curves, BLENDED_3CLASS.scaled(lam))).splitlines())
+
     lines.append("")
     lines.append("-- API crossover (list prices, no SLA: §6.4 gate "
                  "acknowledged) --")

@@ -17,12 +17,23 @@ what should I deploy, and at what $/M-tokens?
                 Mélange-style greedy heterogeneous mix across hardware
                 generations, SLO feasibility, and the per-API-tier
                 crossover verdict via the §6.4-gated `crossover_table`.
+  allocate.py — the exact branch-and-bound replica allocator that
+                *certifies* `greedy_mix`: same decision space, same
+                evaluation, provable optimality gap per instance
+                (ISSUE 10).
+  portfolio.py— the `Workload` spec (per-class lambda, token budget,
+                model-eligibility tiers) and `plan_portfolio`, pricing
+                a blended portfolio as per-model silos vs a
+                consolidated flagship pool vs a routed pool (ISSUE 10).
+  routing.py  — the token-budget-aware router choosing each class's
+                cheapest capable model tier off the fitted curves.
   tables.py   — the `planner_tables` JSON payload (embedded in
                 `analysis.json` by `experiments.analyze`) + the text
                 rendering shared by the CLI and the example.
   __main__.py — the CLI:
 
     python -m repro.planner --plan paper_atlas --lam 5 --slo-ttft-p90 2000
+    python -m repro.planner --plan paper_atlas --portfolio blended_3class
 
 runs from the committed store alone (no engines re-run).
 """
@@ -32,9 +43,18 @@ from repro.planner.curves import (  # noqa: F401
 from repro.planner.optimize import (  # noqa: F401
     DEFAULT_MAX_REPLICAS, AvailabilityTarget, CapacityPlan,
     DeploymentOption, HeterogeneousMix, MixAllocation, enumerate_options,
-    greedy_mix, plan_capacity, rank_options, slo_feasible_cap,
-    spares_needed)
+    greedy_mix, plan_capacity, rank_options, require_one_model,
+    slo_feasible_cap, spares_needed)
+from repro.planner.allocate import (  # noqa: F401
+    GAP_RTOL, Certificate, ExactMix, certify, exact_mix)
 from repro.planner.day import (  # noqa: F401
     curve_lam_cap, day_price_for_curve, day_tables, render_day)
+from repro.planner.portfolio import (  # noqa: F401
+    ARMS, BLENDED_3CLASS, WORKLOADS, ArmPlan, PoolAllocation,
+    PortfolioPlan, Workload, WorkloadClass, plan_portfolio)
+from repro.planner.routing import (  # noqa: F401
+    RouteDecision, RoutingResult, TierQuote, route_class, route_workload)
 from repro.planner.tables import (  # noqa: F401
-    REFERENCE_LAMS, planner_tables, render_plan, render_plans)
+    PORTFOLIO_LAMS, REFERENCE_LAMS, certification_rows, planner_tables,
+    portfolio_row, portfolio_rows, render_certification, render_plan,
+    render_plans, render_portfolio)

@@ -5,9 +5,14 @@
         --slo-ttft-p90 2000 --slo-tpot-p99 100
     PYTHONPATH=src python -m repro.planner --plan paper_crosshw --lam 40 \
         --model mixtral-8x7b --json plan.json
+    PYTHONPATH=src python -m repro.planner --plan paper_atlas \
+        --portfolio blended_3class --lam 10
+    PYTHONPATH=src python -m repro.planner --plan paper_atlas \
+        --portfolio workload.json --chip-budget 8
 
 Runs from the store alone — no engines are re-run. Exit status 3 when no
-model has any feasible deployment at the requested load (the planner
+model has any feasible deployment at the requested load, or — in
+portfolio mode — when any workload class is infeasible (the planner
 refuses to silently price an SLO-infeasible load, paper §6.4).
 """
 from __future__ import annotations
@@ -41,6 +46,18 @@ def main(argv=None):
                          "degradation vs blind shedding on paired MMPP "
                          "burst cells (requires a flash-crowd store, e.g. "
                          "--plan paper_flashcrowd; ISSUE 9)")
+    ap.add_argument("--portfolio", default=None, metavar="SPEC",
+                    help="price a multi-class workload portfolio: SPEC "
+                         "is a registered workload name (e.g. "
+                         "blended_3class) or a path to a workload JSON "
+                         "({'classes': [{name, lam, tiers, io_shape, "
+                         "budget_tokens}, ...]}). Prints the silo vs "
+                         "consolidated vs routed verdict with greedy-vs-"
+                         "exact certification; with --lam, the class mix "
+                         "is rescaled to that total rate (ISSUE 10)")
+    ap.add_argument("--chip-budget", type=int, default=None, metavar="N",
+                    help="portfolio mode: flag whether the routed arm "
+                         "fits within N total chips")
     ap.add_argument("--model", default=None,
                     help="restrict to one model (default: every model "
                          "in the store)")
@@ -68,17 +85,63 @@ def main(argv=None):
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write the per-model plans as JSON")
     args = ap.parse_args(argv)
-    modes = sum((args.lam is not None, args.day is not None,
-                 args.flash_crowd))
-    if modes != 1:
-        ap.error("exactly one of --lam (stationary), --day (lambda(t)) "
-                 "or --flash-crowd (overload verdict) is required")
+    if args.portfolio is not None:
+        # portfolio is its own mode; --lam becomes the optional total
+        # rate the class mix is rescaled to
+        if args.day is not None or args.flash_crowd:
+            ap.error("--portfolio cannot be combined with --day or "
+                     "--flash-crowd")
+    else:
+        modes = sum((args.lam is not None, args.day is not None,
+                     args.flash_crowd))
+        if modes != 1:
+            ap.error("exactly one of --lam (stationary), --day "
+                     "(lambda(t)), --flash-crowd (overload verdict) or "
+                     "--portfolio (workload portfolio) is required")
 
     records = load_store_records(args.plan, args.root)
     if not records:
         raise SystemExit(
             f"no completed cells in store for {args.plan!r}; run: "
             f"python -m repro.experiments.run --plan {args.plan}")
+
+    slo = None
+    if (args.slo_ttft_p90 is not None or args.slo_ttft_p99 is not None
+            or args.slo_tpot_p99 is not None):
+        slo = SLOTarget(ttft_p90_ms=args.slo_ttft_p90,
+                        ttft_p99_ms=args.slo_ttft_p99,
+                        tpot_p99_ms=args.slo_tpot_p99)
+
+    if args.portfolio is not None:
+        import os
+        from repro.planner.portfolio import (WORKLOADS, Workload,
+                                             plan_portfolio)
+        from repro.planner.tables import portfolio_row, render_portfolio
+        if args.portfolio in WORKLOADS:
+            workload = WORKLOADS[args.portfolio]
+        elif os.path.exists(args.portfolio):
+            workload = Workload.from_json(args.portfolio)
+        else:
+            raise SystemExit(
+                f"unknown workload {args.portfolio!r}: not a registered "
+                f"name {sorted(WORKLOADS)} and not a JSON file")
+        if args.lam is not None:
+            workload = workload.scaled(args.lam)
+        curves = fit_curves(records, model=args.model)
+        if not curves:
+            raise SystemExit(
+                f"store for {args.plan!r} has no fitted curves")
+        plan = plan_portfolio(curves, workload, slo=slo,
+                              chip_budget=args.chip_budget)
+        print(render_portfolio(plan))
+        if args.json:
+            with open(args.json, "w") as f:
+                json.dump(portfolio_row(plan), f, indent=1,
+                          sort_keys=True)
+            print(f"\nportfolio verdict written to {args.json}")
+        if not plan.feasible:
+            raise SystemExit(3)
+        return
 
     if args.flash_crowd:
         from repro.experiments.analyze import (overload_tables,
@@ -132,13 +195,6 @@ def main(argv=None):
                 json.dump(rows, f, indent=1, sort_keys=True)
             print(f"\nday tables written to {args.json}")
         return
-
-    slo = None
-    if (args.slo_ttft_p90 is not None or args.slo_ttft_p99 is not None
-            or args.slo_tpot_p99 is not None):
-        slo = SLOTarget(ttft_p90_ms=args.slo_ttft_p90,
-                        ttft_p99_ms=args.slo_ttft_p99,
-                        tpot_p99_ms=args.slo_tpot_p99)
 
     avail = None
     if args.availability is not None:

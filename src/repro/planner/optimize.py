@@ -57,6 +57,24 @@ class AvailabilityTarget:
     availability: float = 0.999
     replica_availability: float = 0.99
 
+    def __post_init__(self):
+        # ISSUE 10 satellite: a target of 1.0+ can never be met by
+        # finitely many spares (the binomial tail is < 1 for any p < 1),
+        # and a replica availability outside (0, 1] turns the exact
+        # binomial into nonsense (negative "probabilities") — both used
+        # to loop through all _MAX_SPARES and return garbage quietly.
+        if not 0.0 < self.availability < 1.0:
+            raise ValueError(
+                f"availability must be in (0, 1), got "
+                f"{self.availability!r}: a fleet of finitely many "
+                f"imperfect replicas can never certify availability "
+                f">= 1.0, and <= 0 is not a target")
+        if not 0.0 < self.replica_availability <= 1.0:
+            raise ValueError(
+                f"replica_availability must be in (0, 1], got "
+                f"{self.replica_availability!r} (the steady-state "
+                f"MTTF/(MTTF+MTTR) of one replica)")
+
     def describe(self) -> str:
         return (f"availability >= {self.availability:g} "
                 f"(replica availability {self.replica_availability:g})")
@@ -257,6 +275,26 @@ def rank_options(options: Sequence[DeploymentOption]
     return feasible, rejected
 
 
+def require_one_model(curves: Sequence[DeploymentCurve]
+                      ) -> Tuple[str, str]:
+    """Validate that `curves` all describe one (model, io_shape) — the
+    homogeneity every single-workload allocator here assumes (a replica
+    serves one model; operating points measured under different workload
+    shapes never blend). Returns the (model, io_shape) pair. A mixed
+    list used to be silently labeled with ``curves[0].model`` (ISSUE 10
+    satellite); now it raises, and the portfolio entry points
+    (`planner.allocate`, `planner.portfolio`) reuse the same gate."""
+    if not curves:
+        raise ValueError("empty curve group: nothing to allocate")
+    pairs = {(c.model, c.io_shape) for c in curves}
+    if len(pairs) > 1:
+        raise ValueError(
+            "heterogeneous curve group: one allocation serves one "
+            f"(model, io_shape), got {sorted(pairs)} — split per model "
+            "with repro.planner.portfolio instead")
+    return next(iter(pairs))
+
+
 def _slo_ok_at(curve: DeploymentCurve, slo: SLOTarget, lam: float) -> bool:
     """SLO check interpolating only the constrained metrics (the bisection
     hot path probes this ~60x per curve)."""
@@ -298,6 +336,7 @@ def greedy_mix(curves: Sequence[DeploymentCurve], lam: float,
     None when no footprint can take any load within the SLO, or when the
     load cannot be exhausted within `max_allocations` replicas.
     """
+    model, _ = require_one_model(curves)
     caps = {c.key: slo_feasible_cap(c, slo) for c in curves}
     usable = [c for c in curves if caps[c.key] > 0]
     if not usable:
@@ -329,7 +368,7 @@ def greedy_mix(curves: Sequence[DeploymentCurve], lam: float,
     blended = math.inf if total_tps <= 0 else \
         total_price * 1e6 / (3600.0 * total_tps)
     return HeterogeneousMix(
-        model=curves[0].model, lam=lam, allocations=allocations,
+        model=model, lam=lam, allocations=allocations,
         c_eff=blended, fleet_price_per_hr=total_price, slo_ok=True)
 
 

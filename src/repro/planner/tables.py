@@ -15,12 +15,17 @@ from typing import List, Optional, Sequence
 
 from repro.core.records import RunRecord
 from repro.core.slo import SLOTarget
+from repro.planner.allocate import certify
 from repro.planner.curves import DeploymentCurve, fit_curves
 from repro.planner.optimize import (DEFAULT_MAX_REPLICAS, CapacityPlan,
                                     plan_capacity)
+from repro.planner.portfolio import (ARMS, BLENDED_3CLASS, PortfolioPlan,
+                                     Workload, plan_portfolio)
 
 # the paper's idle / knee-region / saturation reference loads (§5)
 REFERENCE_LAMS = (1.0, 10.0, 200.0)
+# total portfolio rates the blended-workload verdict is evaluated at
+PORTFOLIO_LAMS = REFERENCE_LAMS
 
 
 def _clean(obj):
@@ -76,12 +81,113 @@ def plan_row(plan: CapacityPlan) -> dict:
     })
 
 
+def certification_rows(curves: Sequence[DeploymentCurve],
+                       lams: Sequence[float] = REFERENCE_LAMS,
+                       slo: Optional[SLOTarget] = None) -> List[dict]:
+    """greedy_mix judged against the exact branch-and-bound optimum for
+    every (model, io_shape) group at every reference load. A row with
+    ``greedy_beaten`` true is the loud signal the heuristic left money
+    on the table — it is always emitted, never filtered."""
+    groups: dict = {}
+    for c in curves:
+        groups.setdefault((c.model, c.io_shape), []).append(c)
+    rows = []
+    for (model, io_shape), group in sorted(groups.items()):
+        for lam in lams:
+            cert = certify(group, lam, slo)
+            if cert is None:
+                rows.append(_clean({
+                    "model": model, "io_shape": io_shape, "lam": lam,
+                    "feasible": False, "gap": None,
+                    "greedy_beaten": False}))
+                continue
+            rows.append(_clean({
+                "model": model, "io_shape": io_shape, "lam": lam,
+                "feasible": True,
+                "greedy_c_eff": cert.greedy_c_eff,
+                "exact_c_eff": cert.exact_c_eff,
+                "greedy_label": cert.greedy_label,
+                "exact_label": cert.exact_label,
+                "gap": cert.gap, "greedy_beaten": cert.greedy_beaten,
+                "n_nodes": cert.n_nodes,
+                "verdict": cert.describe()}))
+    return rows
+
+
+def _pool_row(pool) -> dict:
+    return _clean({
+        "model": pool.model, "io_shape": pool.io_shape, "lam": pool.lam,
+        "classes": list(pool.class_names), "feasible": pool.feasible,
+        "why_infeasible": pool.why_infeasible or None,
+        "c_eff": pool.c_eff,
+        "fleet_price_per_hr": pool.fleet_price_per_hr,
+        "n_replicas": pool.n_replicas, "n_chips": pool.n_chips,
+        "label": pool.mix.label if pool.mix else None,
+        "gap": pool.certificate.gap if pool.certificate else None,
+        "greedy_beaten": bool(pool.certificate.greedy_beaten)
+        if pool.certificate else False,
+    })
+
+
+def portfolio_row(plan: PortfolioPlan) -> dict:
+    """One portfolio verdict (one workload scale) as strict JSON."""
+    arms = {}
+    for name in ARMS:
+        arm = plan.arms[name]
+        arms[name] = {
+            "feasible": arm.feasible,
+            "fleet_price_per_hr": arm.fleet_price_per_hr,
+            "c_eff": arm.c_eff,
+            "n_replicas": arm.n_replicas, "n_chips": arm.n_chips,
+            "max_gap": arm.max_gap,
+            "greedy_beaten_pools": [p.model
+                                    for p in arm.greedy_beaten_pools],
+            "pools": [_pool_row(p) for p in arm.pools],
+            "infeasible_classes": list(arm.infeasible_classes),
+        }
+    routing = [{
+        "class": d.name, "lam": d.lam, "io_shape": d.io_shape,
+        "budget_tokens": d.budget_tokens, "flagship": d.flagship,
+        "routed": d.routed, "feasible": d.feasible,
+        "why_infeasible": d.why_infeasible or None,
+        "quotes": [{"model": q.model, "feasible": q.feasible,
+                    "c_eff": q.c_eff,
+                    "why_infeasible": q.why_infeasible or None}
+                   for q in d.quotes],
+    } for d in plan.routing.decisions]
+    return _clean({
+        "workload": plan.workload.name,
+        "lam_total": plan.workload.lam_total,
+        "classes": [c.to_dict() for c in plan.workload.classes],
+        "feasible": plan.feasible,
+        "chip_budget": plan.chip_budget,
+        "within_chip_budget": plan.within_chip_budget,
+        "routing": routing,
+        "arms": arms,
+        "savings": plan.savings(),
+    })
+
+
+def portfolio_rows(curves: Sequence[DeploymentCurve],
+                   workload: Workload = BLENDED_3CLASS,
+                   lams: Sequence[float] = PORTFOLIO_LAMS,
+                   slo: Optional[SLOTarget] = None,
+                   chip_budget: Optional[int] = None) -> List[dict]:
+    """The blended-workload verdict at each total rate in `lams`."""
+    return [portfolio_row(plan_portfolio(
+        curves, workload.scaled(lam), slo=slo, chip_budget=chip_budget))
+        for lam in lams]
+
+
 def planner_tables(records: Sequence[RunRecord],
                    lams: Sequence[float] = REFERENCE_LAMS,
                    slo: Optional[SLOTarget] = None,
-                   max_replicas: int = DEFAULT_MAX_REPLICAS) -> dict:
+                   max_replicas: int = DEFAULT_MAX_REPLICAS,
+                   workload: Workload = BLENDED_3CLASS) -> dict:
     """The planner payload `analyze.crosshw_tables` embeds in
-    analysis.json: fitted curves + recommendations at reference loads."""
+    analysis.json: fitted curves + recommendations at reference loads,
+    plus the greedy-vs-exact certification table and the portfolio
+    verdict for the blended workload."""
     curves = fit_curves(records)
     recommendations = []
     for lam in lams:
@@ -92,6 +198,8 @@ def planner_tables(records: Sequence[RunRecord],
         "reference_lams": list(lams),
         "curves": curve_rows(curves),
         "recommendations": recommendations,
+        "certification": certification_rows(curves, lams, slo),
+        "portfolio": portfolio_rows(curves, workload, lams, slo),
     }
 
 
@@ -186,4 +294,84 @@ def render_plans(plans: Sequence[CapacityPlan], title: str = "") -> str:
     for plan in plans:
         lines.append("")
         lines.append(render_plan(plan))
+    return "\n".join(lines)
+
+
+def _money(v: Optional[float]) -> str:
+    return "-" if v is None or not math.isfinite(v) else f"{v:.2f}"
+
+
+def render_portfolio(plan: PortfolioPlan) -> str:
+    """The portfolio verdict as the CLI prints it: routing decisions,
+    the three arms side by side, certification flags, and the savings
+    decomposition."""
+    w = plan.workload
+    lines = [f"== portfolio: {w.name} @ {w.lam_total:g} rps total =="]
+    for d in plan.routing.decisions:
+        if not d.feasible:
+            lines.append(f"  {d.name:<14} lam={d.lam:<7.3g} "
+                         f"INFEASIBLE: {d.why_infeasible}")
+            continue
+        arrow = (f"{d.flagship} -> {d.routed}" if d.routed_off_flagship
+                 else f"stays on {d.flagship}")
+        q = d.routed_quote
+        lines.append(f"  {d.name:<14} lam={d.lam:<7.3g} "
+                     f"budget={d.budget_tokens:<5d} {arrow} "
+                     f"(${q.c_eff:.3f}/M-tok standalone)")
+    lines.append("")
+    lines.append(f"  {'arm':<14} {'$/hr':>8} {'$/M-tok':>8} "
+                 f"{'chips':>5} {'repl':>4}  allocation")
+    for name in ARMS:
+        arm = plan.arms[name]
+        if not arm.feasible:
+            why = "; ".join(
+                [f"{p.model}: {p.why_infeasible}" for p in arm.pools
+                 if not p.feasible]
+                + [f"{c}: unroutable" for c in arm.infeasible_classes])
+            lines.append(f"  {name:<14} INFEASIBLE: {why[:120]}")
+            continue
+        label = " | ".join(f"{p.model}: {p.mix.label}"
+                           for p in arm.pools)
+        lines.append(f"  {name:<14} {_money(arm.fleet_price_per_hr):>8} "
+                     f"{_money(arm.c_eff):>8} {arm.n_chips:>5} "
+                     f"{arm.n_replicas:>4}  {label}")
+        for p in arm.greedy_beaten_pools:
+            lines.append(f"      !! greedy BEATEN on {p.model}: "
+                         f"{p.certificate.describe()}")
+    sav = plan.savings()
+
+    def pct(v: Optional[float]) -> str:
+        return "n/a" if v is None else f"{100 * v:+.1f}%"
+    lines.append(f"  savings on the bill vs silo: "
+                 f"consolidation {pct(sav['consolidation'])}, "
+                 f"routing {pct(sav['routing'])}, "
+                 f"total {pct(sav['total'])}")
+    if plan.chip_budget is not None:
+        fit = plan.within_chip_budget
+        lines.append(f"  chip budget {plan.chip_budget}: "
+                     + ("n/a" if fit is None else
+                        "routed arm FITS" if fit else
+                        "routed arm EXCEEDS budget"))
+    return "\n".join(lines)
+
+
+def render_certification(rows: Sequence[dict]) -> str:
+    """The greedy-vs-exact table. Beaten rows shout; optimal rows are
+    one quiet line each."""
+    lines = ["== greedy_mix vs exact allocator =="]
+    beaten = [r for r in rows if r.get("greedy_beaten")]
+    for r in rows:
+        if not r.get("feasible"):
+            lines.append(f"  {r['model']:<16} lam={r['lam']:<7g} "
+                         "infeasible for both arms")
+            continue
+        mark = "!! BEATEN" if r["greedy_beaten"] else "ok"
+        gap = r.get("gap")
+        lines.append(f"  {r['model']:<16} lam={r['lam']:<7g} "
+                     f"gap={gap if gap is not None else float('nan'):.2e} "
+                     f"{mark}  greedy={r['greedy_label']}")
+    lines.append(f"  {len(beaten)}/{len(rows)} instances beat greedy"
+                 if beaten else
+                 f"  greedy certified optimal on all {len(rows)} "
+                 "instances")
     return "\n".join(lines)

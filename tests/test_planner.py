@@ -351,3 +351,72 @@ def test_cli_infeasible_exits_3(capsys):
         main(["--plan", "paper_atlas", "--lam", "99999"])
     assert exc.value.code == 3
     assert "INFEASIBLE" in capsys.readouterr().out
+
+
+# ---- ISSUE 10 satellites ----------------------------------------------
+
+
+def test_greedy_mix_rejects_mixed_model_curves():
+    # one allocation serves one (model, io_shape): a mixed list used to
+    # be silently labeled with curves[0].model
+    recs = _ladder() + _ladder(model="m2", hw="hw-b")
+    curves = fit_curves(recs)
+    with pytest.raises(ValueError, match="heterogeneous"):
+        greedy_mix(curves, 5.0)
+    recs = _ladder() + _ladder(io_shape="rag", hw="hw-b")
+    with pytest.raises(ValueError, match="heterogeneous"):
+        greedy_mix(fit_curves(recs), 5.0)
+    with pytest.raises(ValueError, match="empty"):
+        greedy_mix([], 5.0)
+
+
+def test_availability_target_validates_inputs():
+    from repro.planner import AvailabilityTarget, spares_needed
+    # nines >= 1.0 can never be certified by finitely many spares (the
+    # binomial tail is < 1 for any p < 1) — used to loop and return
+    # nonsense instead of raising
+    for bad in (1.0, 1.5, 0.0, -0.1):
+        with pytest.raises(ValueError, match="availability"):
+            AvailabilityTarget(availability=bad)
+    for bad in (0.0, -0.5, 1.01):
+        with pytest.raises(ValueError, match="replica_availability"):
+            AvailabilityTarget(replica_availability=bad)
+    # valid targets still work end to end
+    t = AvailabilityTarget(availability=0.999,
+                           replica_availability=0.99)
+    s = spares_needed(2, t)
+    assert s is not None and s >= 1
+    # perfect replicas need no spares
+    assert spares_needed(3, AvailabilityTarget(
+        availability=0.999, replica_availability=1.0)) == 0
+
+
+def test_slo_feasible_cap_unconstrained_and_knot_edge():
+    curve = fit_curves(_ladder())[0]
+    # no SLO -> the full measured range
+    assert slo_feasible_cap(curve, None) == curve.lam_max
+    # SLO bound equal to the TTFT at an interior knot: the bisection
+    # must land on that knot (ttft = 20*(1+lam) -> 1020ms at lam=50)
+    slo = SLOTarget(ttft_p90_ms=1020.0)
+    cap = slo_feasible_cap(curve, slo)
+    assert cap == pytest.approx(50.0, rel=1e-6)
+    # SLO at the lam_max knot exactly -> cap is lam_max, no bisection
+    assert slo_feasible_cap(
+        curve, SLOTarget(ttft_p90_ms=20.0 * 101)) == curve.lam_max
+
+
+def test_slo_feasible_cap_infeasible_at_minimum():
+    curve = fit_curves(_ladder())[0]     # ttft(lam_min=1) = 40ms
+    assert slo_feasible_cap(curve, SLOTarget(ttft_p90_ms=10.0)) == 0.0
+    # and greedy_mix then refuses the whole group
+    assert greedy_mix([curve], 5.0, SLOTarget(ttft_p90_ms=10.0)) is None
+
+
+def test_slo_feasible_cap_flat_segment_curve():
+    # constant TTFT across the ladder: the cap is all-or-nothing
+    recs = [_rec(lam, 1000.0 * lam / (lam + 10.0), ttft_p90=100.0)
+            for lam in (1, 5, 10, 50, 100)]
+    curve = fit_curves(recs)[0]
+    assert slo_feasible_cap(curve, SLOTarget(ttft_p90_ms=100.0)) \
+        == curve.lam_max
+    assert slo_feasible_cap(curve, SLOTarget(ttft_p90_ms=99.9)) == 0.0

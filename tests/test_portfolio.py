@@ -1,0 +1,380 @@
+"""Portfolio planner (ISSUE 10 tentpole): workload spec, token-budget
+routing, the exact branch-and-bound allocator certifying greedy_mix,
+and the silo-vs-consolidated-vs-routed verdict — unit tests on
+synthetic curves plus golden tests pinned to the committed
+`paper_atlas` store (no engines run)."""
+import json
+import math
+
+import pytest
+
+from repro.core import c_eff as _c_eff
+from repro.core.records import RunRecord
+from repro.core.slo import SLOTarget
+from repro.experiments.analyze import load_store_records
+from repro.planner import (BLENDED_3CLASS, GAP_RTOL, WORKLOADS, Workload,
+                           WorkloadClass, certification_rows, certify,
+                           exact_mix, fit_curves, greedy_mix,
+                           plan_portfolio, portfolio_row, render_portfolio,
+                           route_workload)
+
+
+def _rec(lam, tps, price=1.2, theta_max=1000.0, ttft_p90=100.0, **kw):
+    base = dict(config="t", model="m", hw="hw-a", n_chips=1, quant="bf16",
+                engine="sim", io_shape="chat", n_requests=10, n_completed=10,
+                window_s=10.0, prompt_tps=0.0, ttft_p50_ms=ttft_p90 / 2,
+                ttft_p90_ms=ttft_p90, ttft_p99_ms=ttft_p90 * 2,
+                tpot_p50_ms=10.0, tpot_p99_ms=20.0, e2e_p50_ms=1000.0,
+                e2e_p99_ms=2000.0, mean_inflight=lam, price_per_hr=price,
+                c_eff=_c_eff(price, tps), theta_max=theta_max)
+    base.update(kw)
+    return RunRecord(lam=lam, tps=tps, **base)
+
+
+def _ladder(hw="hw-a", price=1.2, theta=1000.0, lams=(1, 5, 10, 50, 100),
+            halfsat=10.0, ttft_slope=20.0, **kw):
+    out = []
+    for lam in lams:
+        tps = theta * lam / (lam + halfsat)
+        out.append(_rec(lam, tps, price=price, theta_max=theta, hw=hw,
+                        ttft_p90=ttft_slope * (1 + lam), **kw))
+    return out
+
+
+def _atlas_records():
+    recs = load_store_records("paper_atlas")
+    if len(recs) < 450:
+        pytest.skip("paper_atlas store not populated")
+    return recs
+
+
+# ---- workload spec ----------------------------------------------------
+
+
+def test_workload_class_validation():
+    with pytest.raises(ValueError, match="lam"):
+        WorkloadClass(name="c", lam=0.0, tiers=("m",))
+    with pytest.raises(ValueError, match="lam"):
+        WorkloadClass(name="c", lam=float("inf"), tiers=("m",))
+    with pytest.raises(ValueError, match="tier"):
+        WorkloadClass(name="c", lam=1.0, tiers=())
+    with pytest.raises(ValueError, match="duplicate"):
+        WorkloadClass(name="c", lam=1.0, tiers=("m", "m"))
+    with pytest.raises(ValueError, match="io_shape"):
+        WorkloadClass(name="c", lam=1.0, tiers=("m",), io_shape="weird")
+    with pytest.raises(ValueError, match="budget_tokens"):
+        WorkloadClass(name="c", lam=1.0, tiers=("m",), budget_tokens=-1)
+
+
+def test_workload_class_budget_defaults_to_measured_decode():
+    # chat decodes 256 tokens in serving.arrivals.IO_SHAPES
+    c = WorkloadClass(name="c", lam=1.0, tiers=("m",))
+    assert c.budget_tokens == 256
+    assert c.flagship == "m"
+    # explicit io_shape with explicit budget is accepted as-is
+    c2 = WorkloadClass(name="c", lam=1.0, tiers=("m",), io_shape="weird",
+                       budget_tokens=64)
+    assert c2.budget_tokens == 64
+
+
+def test_workload_validation_and_scaling():
+    with pytest.raises(ValueError, match="no classes"):
+        Workload(name="w", classes=())
+    with pytest.raises(ValueError, match="duplicate"):
+        Workload(name="w", classes=(
+            WorkloadClass(name="a", lam=1.0, tiers=("m",)),
+            WorkloadClass(name="a", lam=2.0, tiers=("m",))))
+    w = BLENDED_3CLASS
+    assert w.lam_total == pytest.approx(1.0)
+    s = w.scaled(10.0)
+    assert s.lam_total == pytest.approx(10.0)
+    # the class mix is preserved under scaling
+    assert [c.lam / 10.0 for c in s.classes] == \
+        pytest.approx([c.lam for c in w.classes])
+    with pytest.raises(ValueError):
+        w.scaled(0.0)
+    # flagship-first union across classes
+    assert s.models == ("mixtral-8x7b", "qwen3-30b-a3b", "llama31-8b")
+
+
+def test_workload_json_round_trip(tmp_path):
+    w = BLENDED_3CLASS.scaled(10.0)
+    d = w.to_dict()
+    assert Workload.from_dict(d) == w
+    path = tmp_path / "workload.json"
+    path.write_text(json.dumps(d))
+    assert Workload.from_json(str(path)) == w
+    with pytest.raises(ValueError, match="classes"):
+        Workload.from_dict({"name": "w"})
+    assert "blended_3class" in WORKLOADS
+
+
+# ---- router -----------------------------------------------------------
+
+
+def _two_model_curves():
+    # model "big" is pricier per token than "small" at every load
+    recs = (_ladder(model="big", price=4.0, theta=1000.0)
+            + _ladder(model="small", price=1.0, theta=1000.0))
+    return fit_curves(recs)
+
+
+def test_router_budget_gate_refuses_undemonstrated_budget():
+    curves = _two_model_curves()
+    w = Workload(name="w", classes=(
+        WorkloadClass(name="long", lam=5.0, tiers=("big",),
+                      budget_tokens=512),))       # chat decodes only 256
+    res = route_workload(w, curves)
+    d = res.decisions[0]
+    assert not d.feasible and not res.feasible
+    assert "512" in d.why_infeasible and "256" in d.why_infeasible
+    assert d.quotes == ()                        # never even priced
+
+
+def test_router_picks_cheapest_eligible_tier():
+    curves = _two_model_curves()
+    w = Workload(name="w", classes=(
+        WorkloadClass(name="pinned", lam=5.0, tiers=("big",)),
+        WorkloadClass(name="free", lam=5.0, tiers=("big", "small")),))
+    res = route_workload(w, curves)
+    by_name = {d.name: d for d in res.decisions}
+    assert by_name["pinned"].routed == "big"
+    assert not by_name["pinned"].routed_off_flagship
+    assert by_name["free"].routed == "small"
+    assert by_name["free"].routed_off_flagship
+    assert res.n_routed_off_flagship == 1
+    # both arms' pools: flagship pools everything on big, routed splits
+    assert set(res.pools("flagship")) == {("big", "chat")}
+    assert set(res.pools("routed")) == {("big", "chat"),
+                                        ("small", "chat")}
+    assert sum(d.lam for ds in res.pools("flagship").values()
+               for d in ds) == pytest.approx(10.0)
+    with pytest.raises(ValueError, match="arm"):
+        res.pools("nope")
+
+
+def test_router_missing_tier_curves_fall_through_with_reason():
+    curves = _two_model_curves()
+    w = Workload(name="w", classes=(
+        WorkloadClass(name="c", lam=5.0, tiers=("ghost", "small")),))
+    d = route_workload(w, curves).decisions[0]
+    assert d.feasible and d.routed == "small"
+    ghost = next(q for q in d.quotes if q.model == "ghost")
+    assert not ghost.feasible and "no fitted curves" in ghost.why_infeasible
+
+
+def test_router_ties_break_toward_flagship():
+    # identical curves under two model names -> identical quotes
+    recs = (_ladder(model="big", price=1.0)
+            + _ladder(model="small", price=1.0))
+    w = Workload(name="w", classes=(
+        WorkloadClass(name="c", lam=5.0, tiers=("big", "small")),))
+    d = route_workload(w, fit_curves(recs)).decisions[0]
+    assert d.routed == "big"
+
+
+# ---- exact allocator + certification ----------------------------------
+
+
+def test_exact_matches_greedy_on_single_footprint():
+    curves = fit_curves(_ladder())
+    for lam in (1.0, 10.0, 250.0):
+        greedy = greedy_mix(curves, lam)
+        exact = exact_mix(curves, lam)
+        assert exact is not None
+        assert exact.c_eff == pytest.approx(greedy.c_eff, rel=1e-12)
+        cert = certify(curves, lam)
+        assert cert.gap == 0.0 and not cert.greedy_beaten
+    # lam=250 needs 3 replicas of the 100-cap footprint
+    assert exact_mix(curves, 250.0).n_replicas == 3
+
+
+def test_exact_infeasible_matches_greedy_refusal():
+    curves = fit_curves(_ladder())          # lam_max=100 -> cap 100
+    # 250 rps cannot be exhausted by 2 replicas: both arms refuse
+    assert greedy_mix(curves, 250.0, max_allocations=2) is None
+    assert exact_mix(curves, 250.0, max_allocations=2) is None
+    assert certify(curves, 250.0, max_allocations=2) is None
+
+
+def test_exact_beats_greedy_on_constructed_instance():
+    """The classic greedy trap: footprint A is cheapest per token for
+    the first slice but its SLO cap strands a tail remainder, while
+    footprint B covers the whole load alone for less total money."""
+    slo = SLOTarget(ttft_p90_ms=200.0)
+    # A: cheap, but TTFT crosses 200ms near lam=9 -> cap ~9 < lam
+    recs_a = _ladder(hw="hw-a", price=0.5, theta=1000.0, ttft_slope=20.0)
+    # B: pricier per hour, flat TTFT (always in SLO), serves 10 alone
+    recs_b = _ladder(hw="hw-b", price=1.3, theta=2000.0, ttft_slope=1.0)
+    curves = fit_curves(recs_a + recs_b)
+    lam = 10.0
+    greedy = greedy_mix(curves, lam, slo)
+    exact = exact_mix(curves, lam, slo)
+    # greedy grabs A for the bulk (cheapest at its ~9rps cap) and mops
+    # the stranded tail with a second replica; exact proves one B
+    # replica is cheaper overall
+    assert len(greedy.allocations) == 2
+    assert greedy.allocations[0].hw == "hw-a"
+    assert exact.n_replicas == 1 and exact.allocations[0].hw == "hw-b"
+    assert exact.c_eff < greedy.c_eff
+    cert = certify(curves, lam, slo)
+    assert cert.greedy_beaten and cert.gap > GAP_RTOL
+    assert "BEATEN" in cert.describe()
+    assert "hw-b" in cert.exact_label
+
+
+def test_certify_reuses_precomputed_greedy():
+    curves = fit_curves(_ladder())
+    greedy = greedy_mix(curves, 10.0)
+    cert = certify(curves, 10.0, greedy=greedy)
+    assert cert.greedy_c_eff == greedy.c_eff and cert.gap == 0.0
+
+
+def test_exact_rejects_mixed_model_groups():
+    curves = fit_curves(_ladder() + _ladder(model="m2", hw="hw-b"))
+    with pytest.raises(ValueError, match="heterogeneous"):
+        exact_mix(curves, 5.0)
+
+
+def test_certification_rows_on_committed_atlas():
+    """Acceptance: on the committed store the exact allocator certifies
+    greedy_mix at every reference load — gap exactly 0, loudly."""
+    curves = fit_curves(_atlas_records())
+    rows = certification_rows(curves)
+    assert len(rows) == 9                   # 3 models x 3 lams
+    for row in rows:
+        assert row["feasible"], row
+        assert row["gap"] == 0.0, row
+        assert not row["greedy_beaten"], row
+        assert row["greedy_c_eff"] == pytest.approx(row["exact_c_eff"])
+        assert row["n_nodes"] >= 1
+
+
+# ---- portfolio verdict (golden, committed paper_atlas) ----------------
+
+# the committed 3-class blended-workload verdict: fleet $/hr per arm at
+# lam_total in {1, 10, 200} (reference loads, §5). Routing carries a
+# NEGATIVE bill saving on this store — splitting the pooled flagship
+# load re-fragments utilization — which the table surfaces rather than
+# hides; consolidation is the win.
+GOLDEN_PORTFOLIO = {
+    1.0: {"silo": 25.2, "flagship_pool": 8.4, "routed_pool": 15.0},
+    10.0: {"silo": 25.2, "flagship_pool": 8.4, "routed_pool": 15.0},
+    200.0: {"silo": 32.4, "flagship_pool": 10.8, "routed_pool": 18.9},
+}
+
+
+def test_portfolio_golden_on_committed_atlas():
+    curves = fit_curves(_atlas_records())
+    for lam_total, golden in GOLDEN_PORTFOLIO.items():
+        plan = plan_portfolio(curves, BLENDED_3CLASS.scaled(lam_total))
+        assert plan.feasible
+        for arm, price in golden.items():
+            assert plan.arms[arm].fleet_price_per_hr == \
+                pytest.approx(price), (lam_total, arm)
+            assert plan.arms[arm].max_gap == 0.0
+        routed = {d.name: d.routed for d in plan.routing.decisions}
+        assert routed == {"reasoning": "mixtral-8x7b",
+                          "chat": "qwen3-30b-a3b",
+                          "autocomplete": "llama31-8b"}
+        sav = plan.savings()
+        assert sav["consolidation"] == pytest.approx(
+            1.0 - golden["flagship_pool"] / golden["silo"])
+        assert sav["routing"] < 0.0          # fragmentation costs money
+        assert sav["total"] == pytest.approx(
+            1.0 - golden["routed_pool"] / golden["silo"])
+
+
+def test_portfolio_c_eff_verdict_flips_at_saturation():
+    """Per delivered token the story inverts at high rate: the routed
+    fleet's cheaper tiers win once utilization is high (lam=200), while
+    at low rates pooling on the flagship is cheapest."""
+    curves = fit_curves(_atlas_records())
+    low = plan_portfolio(curves, BLENDED_3CLASS.scaled(10.0))
+    high = plan_portfolio(curves, BLENDED_3CLASS.scaled(200.0))
+    assert low.arms["flagship_pool"].c_eff < low.arms["routed_pool"].c_eff
+    assert high.arms["routed_pool"].c_eff < \
+        high.arms["flagship_pool"].c_eff
+    assert high.arms["routed_pool"].c_eff == pytest.approx(
+        0.22371305458476984)
+    assert high.arms["flagship_pool"].c_eff == pytest.approx(
+        0.29488917459520764)
+
+
+def test_portfolio_row_and_render_round_trip():
+    curves = fit_curves(_atlas_records())
+    plan = plan_portfolio(curves, BLENDED_3CLASS.scaled(10.0),
+                          chip_budget=8)
+    row = json.loads(json.dumps(portfolio_row(plan), allow_nan=False))
+    assert row["feasible"] and row["within_chip_budget"]
+    assert set(row["arms"]) == {"silo", "flagship_pool", "routed_pool"}
+    for arm in row["arms"].values():
+        assert arm["max_gap"] == 0.0
+        assert arm["greedy_beaten_pools"] == []
+    text = render_portfolio(plan)
+    assert "consolidation +66.7%" in text
+    assert "routing -78.6%" in text
+    assert "chip budget 8: routed arm FITS" in text
+
+
+def test_portfolio_infeasible_class_poisons_totals():
+    curves = _two_model_curves()
+    w = Workload(name="w", classes=(
+        WorkloadClass(name="ok", lam=5.0, tiers=("big", "small")),
+        WorkloadClass(name="too_long", lam=1.0, tiers=("big",),
+                      budget_tokens=9999),))
+    plan = plan_portfolio(curves, w)
+    assert not plan.feasible
+    for arm in plan.arms.values():
+        assert not arm.feasible
+        assert arm.fleet_price_per_hr is None
+        assert "too_long" in arm.infeasible_classes
+    assert all(v is None for v in plan.savings().values())
+    assert "INFEASIBLE" in render_portfolio(plan)
+
+
+# ---- CLI --------------------------------------------------------------
+
+
+def test_cli_portfolio_mode(tmp_path, capsys):
+    from repro.planner.__main__ import main
+    out = tmp_path / "portfolio.json"
+    main(["--plan", "paper_atlas", "--portfolio", "blended_3class",
+          "--lam", "10", "--chip-budget", "8", "--json", str(out)])
+    text = capsys.readouterr().out
+    assert "blended_3class @ 10 rps" in text
+    row = json.loads(out.read_text())
+    assert row["feasible"] and row["lam_total"] == pytest.approx(10.0)
+    assert row["arms"]["flagship_pool"]["fleet_price_per_hr"] == \
+        pytest.approx(8.4)
+
+
+def test_cli_portfolio_exit_3_on_infeasible_class(tmp_path):
+    from repro.planner.__main__ import main
+    spec = tmp_path / "w.json"
+    spec.write_text(json.dumps({"name": "bad", "classes": [
+        {"name": "huge", "lam": 5.0, "tiers": ["mixtral-8x7b"],
+         "budget_tokens": 4096}]}))
+    with pytest.raises(SystemExit) as e:
+        main(["--plan", "paper_atlas", "--portfolio", str(spec)])
+    assert e.value.code == 3
+
+
+def test_cli_portfolio_unknown_spec():
+    from repro.planner.__main__ import main
+    with pytest.raises(SystemExit, match="unknown workload"):
+        main(["--plan", "paper_atlas", "--portfolio", "nope_nope"])
+    with pytest.raises(SystemExit) as e:
+        main(["--plan", "paper_atlas", "--portfolio", "blended_3class",
+              "--flash-crowd"])
+    assert e.value.code == 2                # argparse usage error
+
+
+def test_planner_tables_embed_portfolio_and_certification():
+    recs = _atlas_records()
+    from repro.planner import planner_tables
+    t = planner_tables(recs)
+    assert {r["lam_total"] for r in t["portfolio"]} == {1.0, 10.0, 200.0}
+    assert all(r["feasible"] for r in t["portfolio"])
+    assert all(row["gap"] == 0.0 for row in t["certification"])
+    json.dumps(t, allow_nan=False)          # strict JSON
